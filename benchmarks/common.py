@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: timing + CSV rows (name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_fn(fn, *args, repeats: int = 3, **kwargs) -> tuple[float, object]:
+    """Median wall seconds + last result."""
+    ts, out = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def flush_csv(path: str | None = None) -> None:
+    if path:
+        with open(path, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for n, u, d in ROWS:
+                f.write(f"{n},{u:.2f},{d}\n")

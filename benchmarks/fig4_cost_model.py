@@ -1,0 +1,71 @@
+"""Fig 4 — cost function f(): linear in Row(), slope vs item size / #keys.
+
+Paper claims (C6): (a) cost is ~linear in the candidate-row count Row();
+(b) insensitive to the value-column byte width (50→200 B); (c) the slope
+grows with the number of clustering keys. We measure actual scan wall
+time on this hardware and fit LinearCostFunction per configuration.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LinearCostFunction, Query, Range, SortedTable
+from repro.core.tpch import generate_simulation
+from .common import record, time_fn
+
+
+def _scan_times(table, schema, widths, rng):
+    rows, times = [], []
+    dom = schema.max_value("k0") + 1
+    for w in widths:
+        width = max(1, int(dom * w))
+        start = int(rng.integers(0, max(1, dom - width)))
+        q = Query(filters={"k0": Range(start, start + width)}, agg="sum", value_col="metric")
+        t, res = time_fn(table.execute, q, repeats=3)
+        rows.append(res.rows_scanned)
+        times.append(t)
+    return np.asarray(rows, np.float64), np.asarray(times, np.float64)
+
+
+def run(n_rows: int = 400_000, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    out = {}
+
+    # (a) item size: 1, 2, 4 extra f64 value columns ≈ 50–200 B rows
+    slopes_size = {}
+    for n_vals in (1, 2, 4):
+        kc, vc, schema = generate_simulation(n_rows, 3, seed=seed)
+        for j in range(1, n_vals):
+            vc[f"pad{j}"] = rng.uniform(0, 1, n_rows)
+        t = SortedTable.from_columns(kc, vc, ("k0", "k1", "k2"), schema)
+        rows, times = _scan_times(t, schema, (0.01, 0.05, 0.1, 0.2, 0.4, 0.8), rng)
+        f = LinearCostFunction.fit(rows, times)
+        slopes_size[n_vals] = (f.slope, f.r2(rows, times))
+        record(
+            f"fig4a/item_size_{n_vals}x",
+            f.slope * 1e6 * 1000,  # us per 1k rows
+            f"r2={f.r2(rows, times):.3f}",
+        )
+    out["item_size"] = slopes_size
+
+    # (b) number of clustering keys 2..6 (slope should grow)
+    slopes_keys = {}
+    for n_keys in (2, 3, 4, 5, 6):
+        kc, vc, schema = generate_simulation(n_rows, n_keys, seed=seed + n_keys)
+        layout = tuple(kc)
+        t = SortedTable.from_columns(kc, vc, layout, schema)
+        rows, times = _scan_times(t, schema, (0.01, 0.05, 0.1, 0.2, 0.4, 0.8), rng)
+        f = LinearCostFunction.fit(rows, times)
+        slopes_keys[n_keys] = (f.slope, f.r2(rows, times))
+        record(
+            f"fig4b/n_keys_{n_keys}",
+            f.slope * 1e6 * 1000,
+            f"r2={f.r2(rows, times):.3f}",
+        )
+    out["n_keys"] = slopes_keys
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig 5b/5e — latency vs replication factor (simulation dataset).
+
+Paper claim (C2): TR latency is flat in RF; HR latency equals TR at RF=1
+and drops sharply for RF ≥ 2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HREngine, random_workload
+from repro.core.tpch import generate_simulation
+from .common import record
+
+
+def run(n_rows: int = 300_000, n_keys: int = 3, rfs=(1, 2, 3, 4, 5),
+        n_queries: int = 60, seed: int = 0) -> dict:
+    kc, vc, schema = generate_simulation(n_rows, n_keys, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    wl = random_workload(rng, schema, list(kc), n_queries, value_col="metric")
+    out = {}
+    for rf in rfs:
+        eng = HREngine(n_nodes=max(6, rf))
+        eng.create_column_family("tr", kc, vc, replication_factor=rf,
+                                 mechanism="TR", workload=wl, schema=schema)
+        eng.create_column_family("hr", kc, vc, replication_factor=rf,
+                                 mechanism="HR", workload=wl, schema=schema,
+                                 hrca_kwargs={"k_max": 2000, "seed": 0})
+        res = {}
+        for mech in ("tr", "hr"):
+            wall = rows = 0.0
+            for q in wl.queries:
+                _, rep = eng.read(mech, q)
+                wall += rep.wall_seconds
+                rows += rep.rows_scanned
+            res[mech] = (wall / len(wl) * 1e6, rows / len(wl))
+        gain = res["tr"][1] / max(res["hr"][1], 1e-9)
+        record(f"fig5b/rf{rf}_tr", res["tr"][0], f"rows={res['tr'][1]:.0f}")
+        record(f"fig5b/rf{rf}_hr", res["hr"][0], f"rows={res['hr'][1]:.0f};gain={gain:.2f}x")
+        out[rf] = {"tr": res["tr"], "hr": res["hr"], "gain_rows": gain}
+    return out
+
+
+if __name__ == "__main__":
+    for rf, r in run().items():
+        print(rf, r)

@@ -1,0 +1,46 @@
+"""§3.2 — HRCA convergence: 'generally converges in ten seconds'.
+
+Paper-scale instance: 6 clustering keys, RF=3, 500 queries. We report
+wall time and the accepted-cost trace decile positions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CostModel, hrca, initial_state, random_workload
+from repro.core.ecdf import TableStats
+from repro.core.tpch import generate_simulation
+from .common import record
+
+
+def run(n_rows: int = 500_000, n_keys: int = 6, rf: int = 3,
+        n_queries: int = 500, k_max: int = 3000, seed: int = 0) -> dict:
+    kc, vc, schema = generate_simulation(n_rows, n_keys, seed=seed)
+    stats = TableStats.from_columns(kc, schema)
+    model = CostModel(stats=stats)
+    rng = np.random.default_rng(seed + 1)
+    wl = random_workload(rng, schema, list(kc), n_queries)
+    res = hrca(model, wl, initial_state(tuple(kc), rf), k_max=k_max, seed=0)
+    improve = res.initial_cost / max(res.cost, 1e-12)
+    record("hrca/wall_seconds", res.wall_seconds * 1e6,
+           f"improve={improve:.1f}x;steps={res.n_steps};accepted={res.n_accepted}")
+    # time-to-90%-of-final-improvement
+    trace = np.asarray(res.trace)
+    target = res.initial_cost - 0.9 * (res.initial_cost - res.cost)
+    hit = int(np.argmax(trace <= target)) if (trace <= target).any() else len(trace)
+    record("hrca/steps_to_90pct", float(hit), "")
+    # prorated wall-clock to 90% improvement (the paper's "converges in
+    # ten seconds" is about convergence, not the full annealing budget)
+    wall_90 = res.wall_seconds * hit / max(len(trace), 1)
+    record("hrca/wall_to_90pct", wall_90 * 1e6, f"<10s claim: {'OK' if wall_90 < 10 else 'MISS'}")
+    return {
+        "wall_seconds": res.wall_seconds,
+        "improvement": improve,
+        "steps_to_90pct": hit,
+        "final_layouts": [list(a) for a in res.layouts],
+    }
+
+
+if __name__ == "__main__":
+    print(run())

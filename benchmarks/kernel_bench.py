@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks: Pallas scan_agg / ecdf_hist vs jnp oracle.
+
+On CPU the Pallas kernels run in interpret mode (pure-Python executor),
+so wall-clock here only validates plumbing; the TPU-relevant numbers are
+the per-call bytes (Row()·row_bytes — the quantity Eq (1) prices).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels import ecdf_hist, ecdf_hist_ref, scan_agg, scan_agg_ref
+from .common import record, time_fn
+
+
+def run(n_rows: int = 200_000, n_keys: int = 4, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 1024, (n_keys, n_rows)).astype(np.int32)
+    vals = rng.uniform(0, 1, n_rows).astype(np.float32)
+    lo = np.zeros(n_keys, np.int32)
+    hi = np.full(n_keys, 512, np.int32)
+    slab = np.array([0, n_rows], np.int32)
+
+    import jax.numpy as jnp
+
+    args = (jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi),
+            jnp.asarray(slab))
+    ref = jax.jit(scan_agg_ref)
+    t_ref, _ = time_fn(lambda: jax.block_until_ready(ref(*args)), repeats=5)
+    record("kernel/scan_agg_ref_jit", t_ref * 1e6,
+           f"bytes={(keys.nbytes + vals.nbytes)};rows={n_rows}")
+
+    t_pl, _ = time_fn(lambda: jax.block_until_ready(scan_agg(*args)), repeats=1)
+    record("kernel/scan_agg_pallas_interp", t_pl * 1e6, "interpret-mode (CPU)")
+
+    col = rng.integers(0, 4096, n_rows).astype(np.int32)
+    refh = jax.jit(lambda c: ecdf_hist_ref(c, n_bins=1024, bin_width=4))
+    t_rh, _ = time_fn(lambda: jax.block_until_ready(refh(jnp.asarray(col))), repeats=5)
+    record("kernel/ecdf_hist_ref_jit", t_rh * 1e6, f"rows={n_rows}")
+    return {"scan_ref_us": t_ref * 1e6, "scan_pallas_us": t_pl * 1e6}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,102 @@
+"""Render EXPERIMENTS.md tables from dry-run / roofline artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline_report \
+        --dryrun artifacts/dryrun/single_pod.json artifacts/dryrun/multi_pod.json \
+        --roofline artifacts/roofline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev | HLO flops/dev | coll bytes/dev |",
+        "|---|---|---|---:|---:|---:|---:|---:|",
+    ]
+    for r in records:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - | - | - |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | - | - | - | - |"
+            )
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.1f}s "
+            f"| {_fmt_bytes(m['argument_bytes'])} | {_fmt_bytes(m['temp_bytes'])} "
+            f"| {r['flops']:.2e} | {_fmt_bytes(r['collective_bytes_total'])} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(records) -> str:
+    lines = [
+        "| arch | shape | Tc (ms) | Tm (ms) | Tx (ms) | dominant | useful% | roofline frac |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in records:
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | skip | - | - |")
+            continue
+        t = r["roofline"]
+        tc, tm, tx = t["t_compute"], t["t_memory"], t["t_collective"]
+        # roofline fraction: useful compute time over the bounding term
+        # (how close the step is to the ideal MODEL_FLOPS-only machine)
+        t_ideal = (r["model_flops_per_chip"]) / 197e12
+        frac = t_ideal / max(tc, tm, tx, 1e-30)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {tc*1e3:.3f} | {tm*1e3:.3f} | {tx*1e3:.3f} "
+            f"| {r['dominant'][2:]} | {r['useful_flops_ratio']*100:.1f} | {frac*100:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", nargs="*", default=["artifacts/dryrun/single_pod.json",
+                                                    "artifacts/dryrun/multi_pod.json"])
+    ap.add_argument("--roofline", default="artifacts/roofline.json")
+    args = ap.parse_args()
+
+    for path in args.dryrun:
+        try:
+            with open(path) as f:
+                recs = json.load(f)
+        except FileNotFoundError:
+            continue
+        print(f"\n### Dry-run: {path}\n")
+        print(dryrun_table(recs))
+        n_ok = sum(r["status"] == "ok" for r in recs)
+        n_skip = sum(r["status"] == "skipped" for r in recs)
+        print(f"\n{n_ok} ok / {n_skip} documented skips / "
+              f"{len(recs) - n_ok - n_skip} failed")
+
+    try:
+        with open(args.roofline) as f:
+            recs = json.load(f)
+    except FileNotFoundError:
+        return
+    print("\n### Roofline (single-pod 16×16, loop-corrected)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (and optionally writes them
+to --csv). Default sizes finish on CPU in a few minutes; --full uses
+paper-scale row counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None)
+    ap.add_argument(
+        "--only", default=None,
+        help="comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,kernels",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (
+        fig4_cost_model,
+        fig5a_datasize,
+        fig5b_repfactor,
+        fig5c_clustering,
+        hrca_convergence,
+        kernel_bench,
+        recovery_bench,
+        table1_write,
+    )
+    from .common import ROWS, flush_csv
+
+    full = args.full
+    results = {}
+    print("name,us_per_call,derived")
+
+    def want(k):
+        return only is None or k in only
+
+    if want("fig4"):
+        results["fig4"] = fig4_cost_model.run(n_rows=1_000_000 if full else 200_000)
+    if want("fig5a"):
+        results["fig5a"] = fig5a_datasize.run(
+            rows_per_sf=1_500_000 if full else 40_000,
+            n_queries=500 if full else 60,
+        )
+    if want("fig5b"):
+        results["fig5b"] = fig5b_repfactor.run(n_rows=10_000_000 if full else 200_000)
+    if want("fig5c"):
+        results["fig5c"] = fig5c_clustering.run(n_rows=10_000_000 if full else 200_000)
+    if want("table1"):
+        results["table1"] = table1_write.run(
+            total_rows=(40_000_000, 80_000_000, 120_000_000) if full else (40_000, 80_000, 120_000)
+        )
+    if want("recovery"):
+        results["recovery"] = recovery_bench.run(n_rows=18_000_000 if full else 300_000)
+    if want("hrca"):
+        results["hrca"] = hrca_convergence.run(n_rows=1_000_000 if full else 200_000)
+    if want("kernels"):
+        results["kernels"] = kernel_bench.run()
+
+    import os
+
+    if args.csv:
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        flush_csv(args.csv)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    print(f"\n[benchmarks] {len(ROWS)} rows emitted", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

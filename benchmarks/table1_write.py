@@ -1,0 +1,51 @@
+"""Table 1 — write/load throughput, TR vs HR (claim C4: identical ±1%).
+
+Both mechanisms fan every batch to RF replicas and each replica performs
+exactly one merge-sort insert in its own order, so HR costs the same
+writes as TR. We bulk-load in batches and time the full load.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HREngine, random_workload
+from repro.core.tpch import generate_orders, orders_schema, q1_q2_workload
+from .common import record, time_fn
+
+
+def run(total_rows=(40_000, 80_000, 120_000), batch_rows: int = 10_000,
+        rf: int = 3, seed: int = 0) -> dict:
+    out = {}
+    for n in total_rows:
+        wl = q1_q2_workload(50, seed=seed, n_rows=n)
+        kc, vc = generate_orders(n / 1.5e6, seed=seed)
+        # split into load batches
+        times = {}
+        for mech in ("tr", "hr"):
+            eng = HREngine(n_nodes=6)
+            seed_rows = max(1, batch_rows // 10)
+            eng.create_column_family(
+                mech, {k: v[:seed_rows] for k, v in kc.items()},
+                {k: v[:seed_rows] for k, v in vc.items()},
+                replication_factor=rf, mechanism=mech.upper(), workload=wl,
+                schema=orders_schema(),
+            )
+            import time as _t
+
+            t0 = _t.perf_counter()
+            for lo in range(seed_rows, n, batch_rows):
+                hi = min(lo + batch_rows, n)
+                eng.write(mech, {k: v[lo:hi] for k, v in kc.items()},
+                          {k: v[lo:hi] for k, v in vc.items()})
+            times[mech] = _t.perf_counter() - t0
+        ratio = times["hr"] / max(times["tr"], 1e-12)
+        record(f"table1/load_{n}_tr", times["tr"] * 1e6, "")
+        record(f"table1/load_{n}_hr", times["hr"] * 1e6, f"hr/tr={ratio:.3f}")
+        out[n] = {"tr_s": times["tr"], "hr_s": times["hr"], "ratio": ratio}
+    return out
+
+
+if __name__ == "__main__":
+    for n, r in run().items():
+        print(n, r)

@@ -1,0 +1,10 @@
+"""repro: Heterogeneous Replica (HR) for Query — multi-pod JAX framework.
+
+Paper: "Heterogeneous Replica for Query on Cassandra", Qiao, Huang, Rui,
+Wang (Tsinghua, 2018). The `core` package is the paper-faithful HR
+mechanism; the rest is the production training/serving framework that
+consumes it (data pipeline routing, checkpoint replica layouts, hedged
+scheduling).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,42 @@
+"""Paper-faithful heterogeneous-replica core (Qiao et al., 2018).
+
+Layers: composite keys → SortedTable (SSTable analogue) → ECDF stats →
+cost model (Eq 1–4) → HRCA (Alg 1) → HREngine (paper §4).
+"""
+
+from .cost_model import CostModel, LinearCostFunction, estimate_rows
+from .ecdf import ColumnStats, TableStats
+from .engine import ColumnFamily, HREngine, Node, ReadReport, ReplicaHandle
+from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
+from .keys import KeySchema, pack_columns, pack_tuple, unpack_key
+from .table import ScanResult, SortedTable, slab_bounds_for
+from .workload import Eq, Query, Range, Workload, random_workload
+
+__all__ = [
+    "CostModel",
+    "LinearCostFunction",
+    "estimate_rows",
+    "ColumnStats",
+    "TableStats",
+    "ColumnFamily",
+    "HREngine",
+    "Node",
+    "ReadReport",
+    "ReplicaHandle",
+    "HRCAResult",
+    "exhaustive_search",
+    "hrca",
+    "initial_state",
+    "KeySchema",
+    "pack_columns",
+    "pack_tuple",
+    "unpack_key",
+    "ScanResult",
+    "SortedTable",
+    "slab_bounds_for",
+    "Eq",
+    "Query",
+    "Range",
+    "Workload",
+    "random_workload",
+]

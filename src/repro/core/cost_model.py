@@ -1,0 +1,113 @@
+"""Query cost model (paper §3.1, Eq 1–4).
+
+Eq (1): with layout ``A = (ck_1 … ck_n)`` and ``i`` the first position
+whose filter is a *range* (keys before it all equality-filtered):
+
+    Row(r, q) = N · ∏_{p<i} f_{ck_p}(v_p) · (F_{ck_i}(e_i) − F_{ck_i}(s_i))
+
+(The paper prints ``|P|`` for the leading factor; §5's "data size |P|"
+confirms it is the dataset row count N.) Keys *after* position i do not
+shrink the slab — they are residual predicates evaluated during the scan.
+
+Eq (2): Cost = f(Row) with f fitted linear per environment; the slope
+depends on the number of clustering keys (Fig 4b) so fits are keyed by
+|A|. Eq (3)/(4): per-query cost is the min over replicas; workload cost
+is the (weighted) mean of per-query minima.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .ecdf import TableStats
+from .workload import Query, Workload
+
+__all__ = ["estimate_rows", "LinearCostFunction", "CostModel"]
+
+
+def estimate_rows(stats: TableStats, layout: Sequence[str], query: Query) -> float:
+    """Eq (1) — expected slab rows for ``query`` on a replica with ``layout``."""
+    sel = 1.0
+    for col in layout:
+        cs = stats.columns[col]
+        if query.is_equality_on(col):
+            sel *= cs.pmf(query.filters[col].value)  # type: ignore[union-attr]
+            if sel == 0.0:
+                break
+        else:
+            f = query.filters.get(col)
+            if f is None:
+                # global range filter: selectivity 1, and the prefix ends here.
+                break
+            lo, hi = f.bounds(None, col)  # Range.bounds ignores schema args
+            sel *= cs.range_selectivity(lo, hi)
+            break
+    return float(stats.n_rows) * sel
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearCostFunction:
+    """f(Row) = slope · Row + intercept (Fig 4: linear in Row; slope grows
+    with the clustering-key count, insensitive to value byte width)."""
+
+    slope: float
+    intercept: float
+
+    def __call__(self, rows: float) -> float:
+        return self.slope * float(rows) + self.intercept
+
+    @classmethod
+    def fit(cls, rows: np.ndarray, times: np.ndarray) -> "LinearCostFunction":
+        rows = np.asarray(rows, dtype=np.float64)
+        times = np.asarray(times, dtype=np.float64)
+        if rows.size < 2:
+            raise ValueError("need ≥2 samples to fit")
+        slope, intercept = np.polyfit(rows, times, 1)
+        return cls(slope=float(slope), intercept=float(intercept))
+
+    def r2(self, rows: np.ndarray, times: np.ndarray) -> float:
+        pred = self.slope * np.asarray(rows, np.float64) + self.intercept
+        t = np.asarray(times, np.float64)
+        ss_res = float(((t - pred) ** 2).sum())
+        ss_tot = float(((t - t.mean()) ** 2).sum())
+        return 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+
+
+#: Default per-|A| cost functions (re-fitted by benchmarks/fig4; unit
+#: slope makes Cost ≡ Row, which preserves all argmin decisions).
+_IDENTITY = LinearCostFunction(slope=1.0, intercept=0.0)
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Eq (2)–(4) over a set of replica layouts."""
+
+    stats: TableStats
+    cost_fns: dict[int, LinearCostFunction] = dataclasses.field(default_factory=dict)
+
+    def cost_fn(self, n_keys: int) -> LinearCostFunction:
+        return self.cost_fns.get(n_keys, _IDENTITY)
+
+    def query_cost(self, layout: Sequence[str], query: Query) -> float:
+        """Eq (2): Cost(r, q) = f(Row(r, q))."""
+        rows = estimate_rows(self.stats, layout, query)
+        return self.cost_fn(len(layout))(rows)
+
+    def min_cost(self, layouts: Sequence[Sequence[str]], query: Query) -> tuple[float, int]:
+        """Eq (3): (min cost, argmin replica index)."""
+        costs = [self.query_cost(a, query) for a in layouts]
+        j = int(np.argmin(costs))
+        return costs[j], j
+
+    def workload_cost(self, layouts: Sequence[Sequence[str]], workload: Workload) -> float:
+        """Eq (4): weighted mean of per-query minima."""
+        w = workload.normalized_weights()
+        return float(
+            sum(
+                wi * self.min_cost(layouts, q)[0]
+                for wi, q in zip(w, workload.queries)
+            )
+        )

@@ -1,0 +1,123 @@
+"""Per-column distribution statistics: F (ECDF) and f (pmf), paper §3.1.
+
+Eq (1) needs, per clustering key column, the distribution function
+``F_k(x)`` and the density ``f_k(v)`` ("probability a row has value v").
+Small integer domains get exact value counts; large domains fall back to
+equi-width histograms (B bins). Stats are maintained by the engine's Cost
+Evaluator and refreshed on writes.
+
+The histogram build is a measurable hot loop at corpus scale, so it has a
+Pallas kernel (`repro.kernels.ecdf_hist`); this module is the numpy
+reference and the serving API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from .keys import KeySchema
+
+__all__ = ["ColumnStats", "TableStats"]
+
+_EXACT_DOMAIN_LIMIT = 1 << 16
+
+
+@dataclasses.dataclass
+class ColumnStats:
+    """Counts per bin over [0, domain); exact when bin_width == 1."""
+
+    domain: int  # values are in [0, domain)
+    bin_width: int
+    counts: np.ndarray  # float64[n_bins]
+    total: float
+
+    @classmethod
+    def from_values(cls, values: np.ndarray, domain: int, max_bins: int = 4096) -> "ColumnStats":
+        if domain <= 0:
+            raise ValueError("domain must be positive")
+        if domain <= min(_EXACT_DOMAIN_LIMIT, max_bins):
+            bw = 1
+            nb = domain
+        else:
+            nb = max_bins
+            bw = -(-domain // nb)  # ceil
+            nb = -(-domain // bw)
+        idx = np.asarray(values, dtype=np.int64) // bw
+        counts = np.bincount(idx, minlength=nb).astype(np.float64)
+        return cls(domain=domain, bin_width=bw, counts=counts, total=float(counts.sum()))
+
+    @property
+    def n_bins(self) -> int:
+        return int(self.counts.shape[0])
+
+    def _cum(self) -> np.ndarray:
+        # cached cumulative counts (prefix-exclusive)
+        cum = getattr(self, "_cum_cache", None)
+        if cum is None or cum.shape[0] != self.n_bins + 1:
+            cum = np.concatenate([[0.0], np.cumsum(self.counts)])
+            object.__setattr__(self, "_cum_cache", cum)
+        return cum
+
+    def cdf(self, x: float) -> float:
+        """F(x) = P[value < x] (left-continuous: mass strictly below x)."""
+        if self.total == 0:
+            return 0.0
+        x = float(np.clip(x, 0, self.domain))
+        b = int(x // self.bin_width)
+        cum = self._cum()
+        below = cum[min(b, self.n_bins)]
+        frac = (x - b * self.bin_width) / self.bin_width if b < self.n_bins else 0.0
+        inbin = self.counts[b] * frac if b < self.n_bins else 0.0
+        return float((below + inbin) / self.total)
+
+    def range_selectivity(self, lo: float, hi: float) -> float:
+        """P[value ∈ [lo, hi)] = F(hi) − F(lo), Eq (1) range term."""
+        return max(0.0, self.cdf(hi) - self.cdf(lo))
+
+    def pmf(self, v: int) -> float:
+        """f(v) — equality selectivity. Exact bins: count/total; coarse
+        bins: bin mass spread uniformly across the bin's values."""
+        if self.total == 0:
+            return 0.0
+        b = int(v) // self.bin_width
+        if not 0 <= b < self.n_bins:
+            return 0.0
+        mass = self.counts[b] / self.total
+        return float(mass if self.bin_width == 1 else mass / self.bin_width)
+
+    def merge_values(self, values: np.ndarray) -> None:
+        """Streaming update on writes (engine Write Scheduler)."""
+        idx = np.asarray(values, dtype=np.int64) // self.bin_width
+        add = np.bincount(idx, minlength=self.n_bins).astype(np.float64)
+        self.counts = self.counts + add
+        self.total = float(self.total + add.sum())
+        if hasattr(self, "_cum_cache"):
+            delattr(self, "_cum_cache")
+
+
+@dataclasses.dataclass
+class TableStats:
+    """Cost-Evaluator statistics for one column family."""
+
+    n_rows: int
+    columns: dict[str, ColumnStats]
+
+    @classmethod
+    def from_columns(
+        cls, key_cols: Mapping[str, np.ndarray], schema: KeySchema, max_bins: int = 4096
+    ) -> "TableStats":
+        n = len(next(iter(key_cols.values()))) if key_cols else 0
+        cols = {
+            name: ColumnStats.from_values(v, schema.max_value(name) + 1, max_bins)
+            for name, v in key_cols.items()
+        }
+        return cls(n_rows=n, columns=cols)
+
+    def merge_rows(self, key_cols: Mapping[str, np.ndarray]) -> None:
+        n = len(next(iter(key_cols.values()))) if key_cols else 0
+        self.n_rows += n
+        for name, v in key_cols.items():
+            self.columns[name].merge_values(v)

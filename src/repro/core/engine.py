@@ -1,0 +1,322 @@
+"""HR Engine — the shim layer of paper §4, simulated-cluster edition.
+
+Five modules, mapped 1:1 onto the paper's Figure 3:
+
+  Request Agency    → ``HREngine.read`` / ``HREngine.write`` (client API)
+  Replica Generator → ``create_column_family`` (runs HRCA at CREATE, then
+                      places replicas on nodes via hash(replica_id, pk))
+  Cost Evaluator    → ``CostModel`` over live ``TableStats``
+  Request Scheduler → cheapest-replica routing w/ tie round-robin (load
+                      balance) and optional straggler hedging
+  Write Scheduler   → fan-out to ALL replicas; each replica sorts through
+                      its own LSM-style merge path (Table 1: HR write
+                      speed == TR write speed)
+  Recovery          → rebuild lost replicas by re-sorting a survivor
+                      (§4 "leverage the LSM-Tree write process"; §5.4)
+
+Nodes are simulated (this container is one host), but every byte of the
+data path is real: tables, scans, sorts and stats are actual arrays, so
+rows_scanned/latency numbers in benchmarks are measurements, not models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .cost_model import CostModel, LinearCostFunction, estimate_rows
+from .ecdf import TableStats
+from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
+from .keys import KeySchema
+from .table import ScanResult, SortedTable
+from .workload import Query, Workload
+
+__all__ = ["Node", "ReplicaHandle", "ColumnFamily", "ReadReport", "HREngine"]
+
+
+@dataclasses.dataclass
+class Node:
+    node_id: int
+    alive: bool = True
+    slowdown: float = 1.0  # >1 = straggler (ft.straggler injects this)
+    tables: dict[tuple[str, int], SortedTable] = dataclasses.field(default_factory=dict)
+
+    def bytes_stored(self) -> int:
+        total = 0
+        for t in self.tables.values():
+            total += t.packed.nbytes
+            total += sum(c.nbytes for c in t.key_cols.values())
+            total += sum(np.asarray(c).nbytes for c in t.value_cols.values())
+        return total
+
+
+@dataclasses.dataclass
+class ReplicaHandle:
+    replica_id: int
+    layout: tuple[str, ...]
+    node_id: int
+
+
+@dataclasses.dataclass
+class ColumnFamily:
+    name: str
+    schema: KeySchema
+    key_names: tuple[str, ...]
+    value_names: tuple[str, ...]
+    replicas: list[ReplicaHandle]
+    stats: TableStats
+    cost_model: CostModel
+    hrca_result: HRCAResult | None = None
+    rr_counter: "itertools.count" = dataclasses.field(default_factory=itertools.count)
+
+
+@dataclasses.dataclass
+class ReadReport:
+    replica_id: int
+    node_id: int
+    estimated_rows: float
+    estimated_cost: float
+    wall_seconds: float  # measured scan time × node slowdown
+    rows_scanned: int
+    hedged: bool = False
+
+
+_Ranked = tuple[float, float, ReplicaHandle]  # (est_cost, est_rows, handle)
+
+
+class HREngine:
+    """Simulated-cluster HR engine (Request Agency facade)."""
+
+    def __init__(self, n_nodes: int = 6) -> None:
+        if n_nodes < 1:
+            raise ValueError("need at least one node")
+        self.nodes = [Node(node_id=i) for i in range(n_nodes)]
+        self.column_families: dict[str, ColumnFamily] = {}
+
+    # -- Replica Generator ---------------------------------------------------
+
+    def _place(self, replica_id: int, cf_name: str) -> int:
+        """Replica placement hash(replica_id, cf) → node. Successive
+        replicas land on distinct nodes when possible (Cassandra ring)."""
+        h = abs(hash(cf_name)) % len(self.nodes)
+        return (h + replica_id) % len(self.nodes)
+
+    def create_column_family(
+        self,
+        name: str,
+        key_cols: Mapping[str, np.ndarray],
+        value_cols: Mapping[str, np.ndarray],
+        *,
+        replication_factor: int = 3,
+        mechanism: str = "HR",
+        workload: Workload | None = None,
+        schema: KeySchema | None = None,
+        cost_fns: dict[int, LinearCostFunction] | None = None,
+        hrca_kwargs: dict | None = None,
+        layouts: Sequence[Sequence[str]] | None = None,
+    ) -> ColumnFamily:
+        """CREATE COLUMN FAMILY: choose replica structures, build tables.
+
+        mechanism:
+          "HR" — layouts from HRCA over ``workload`` (paper).
+          "TR" — the single best expert layout, identical on all replicas
+                 (the paper's baseline: "approximate optimal structure
+                 that an expert can give"); exhaustive for ≤5 keys, else
+                 single-replica annealing + greedy polish.
+        Explicit ``layouts`` override both (tests / ablations).
+        """
+        if name in self.column_families:
+            raise ValueError(f"column family {name!r} exists")
+        if schema is None:
+            schema = KeySchema.for_columns(key_cols)
+        key_names = tuple(key_cols)
+        stats = TableStats.from_columns(key_cols, schema)
+        model = CostModel(stats=stats, cost_fns=dict(cost_fns or {}))
+        n = replication_factor
+        hrca_result: HRCAResult | None = None
+
+        if layouts is not None:
+            chosen = tuple(tuple(a) for a in layouts)
+            if len(chosen) != n:
+                raise ValueError("len(layouts) != replication_factor")
+        elif mechanism == "TR":
+            if workload is None:
+                chosen = tuple(tuple(key_names) for _ in range(n))
+            else:
+                best = self._expert_layout(model, workload, key_names)
+                chosen = tuple(best for _ in range(n))
+        elif mechanism == "HR":
+            if workload is None:
+                raise ValueError("HR mechanism needs a workload for HRCA")
+            kw = dict(hrca_kwargs or {})
+            hrca_result = hrca(model, workload, initial_state(key_names, n), **kw)
+            chosen = hrca_result.layouts
+        else:
+            raise ValueError(f"unknown mechanism {mechanism!r}")
+
+        replicas = []
+        for rid, layout in enumerate(chosen):
+            table = SortedTable.from_columns(key_cols, value_cols, layout, schema)
+            node_id = self._place(rid, name)
+            self.nodes[node_id].tables[(name, rid)] = table
+            replicas.append(ReplicaHandle(rid, tuple(layout), node_id))
+
+        cf = ColumnFamily(
+            name=name,
+            schema=schema,
+            key_names=key_names,
+            value_names=tuple(value_cols),
+            replicas=replicas,
+            stats=stats,
+            cost_model=model,
+            hrca_result=hrca_result,
+        )
+        self.column_families[name] = cf
+        return cf
+
+    @staticmethod
+    def _expert_layout(
+        model: CostModel, workload: Workload, key_names: tuple[str, ...]
+    ) -> tuple[str, ...]:
+        if len(key_names) <= 5:
+            state, _ = exhaustive_search(model, workload, key_names, 1)
+            return state[0]
+        res = hrca(
+            model, workload, initial_state(key_names, 1), greedy_descent=True, k_max=2000
+        )
+        return res.layouts[0]
+
+    # -- Cost Evaluator / Request Scheduler -----------------------------------
+
+    def _table(self, cf: ColumnFamily, r: ReplicaHandle) -> SortedTable:
+        return self.nodes[r.node_id].tables[(cf.name, r.replica_id)]
+
+    def _ranked_replicas(self, cf: ColumnFamily, query: Query) -> list[_Ranked]:
+        """Replicas on live nodes ranked by estimated cost (Eq 2–3)."""
+        ranked: list[_Ranked] = []
+        for r in cf.replicas:
+            if not self.nodes[r.node_id].alive:
+                continue
+            rows = estimate_rows(cf.stats, r.layout, query)
+            ranked.append((cf.cost_model.cost_fn(len(r.layout))(rows), rows, r))
+        if not ranked:
+            raise RuntimeError(f"no live replica for {cf.name!r}")
+        ranked.sort(key=lambda t: t[0])
+        return ranked
+
+    def _execute_on(
+        self, cf: ColumnFamily, entry: _Ranked, query: Query, hedged: bool
+    ) -> tuple[ScanResult, ReadReport]:
+        est_cost, est_rows, r = entry
+        table = self._table(cf, r)
+        t0 = time.perf_counter()
+        result = table.execute(query)
+        wall = (time.perf_counter() - t0) * self.nodes[r.node_id].slowdown
+        report = ReadReport(
+            replica_id=r.replica_id,
+            node_id=r.node_id,
+            estimated_rows=est_rows,
+            estimated_cost=est_cost,
+            wall_seconds=wall,
+            rows_scanned=result.rows_scanned,
+            hedged=hedged,
+        )
+        return result, report
+
+    def read(
+        self, cf_name: str, query: Query, *, hedge: bool = False, hedge_ratio: float = 2.0
+    ) -> tuple[ScanResult, ReadReport]:
+        """Route to the cheapest live replica; ties broken round-robin
+        (load balance). With ``hedge=True`` a read landing on a straggler
+        node (slowdown > hedge_ratio) is duplicated on the next-cheapest
+        replica on a *different* node; the faster copy wins.
+        """
+        cf = self.column_families[cf_name]
+        ranked = self._ranked_replicas(cf, query)
+        best_cost = ranked[0][0]
+        ties = [t for t in ranked if t[0] <= best_cost * (1 + 1e-9) + 1e-12]
+        pick = ties[next(cf.rr_counter) % len(ties)]
+
+        result, report = self._execute_on(cf, pick, query, hedged=False)
+        if hedge and len(ranked) > 1 and self.nodes[pick[2].node_id].slowdown > hedge_ratio:
+            alt = next(
+                (t for t in ranked if t[2].node_id != pick[2].node_id), None
+            )
+            if alt is not None:
+                r2, rep2 = self._execute_on(cf, alt, query, hedged=True)
+                if rep2.wall_seconds < report.wall_seconds:
+                    return r2, rep2
+        return result, report
+
+    # -- Write Scheduler -------------------------------------------------------
+
+    def write(
+        self,
+        cf_name: str,
+        key_cols: Mapping[str, np.ndarray],
+        value_cols: Mapping[str, np.ndarray],
+    ) -> float:
+        """Fan a batch write to all replicas (each sorts by its own layout
+        through the merge path) and refresh stats. Returns wall seconds.
+        Matches §5.3: per-replica cost is one sort regardless of layout.
+        """
+        cf = self.column_families[cf_name]
+        t0 = time.perf_counter()
+        for r in cf.replicas:
+            node = self.nodes[r.node_id]
+            if not node.alive:
+                continue  # missed writes are repaired by Recovery
+            node.tables[(cf.name, r.replica_id)] = node.tables[
+                (cf.name, r.replica_id)
+            ].merge_insert(key_cols, value_cols)
+        cf.stats.merge_rows(key_cols)
+        return time.perf_counter() - t0
+
+    # -- Recovery ----------------------------------------------------------------
+
+    def fail_node(self, node_id: int) -> None:
+        node = self.nodes[node_id]
+        node.alive = False
+        node.tables = {}  # disk lost
+
+    def recover_node(self, node_id: int) -> float:
+        """Rebuild every replica the node hosted from a surviving replica
+        of the same column family: stream the survivor's dataset and
+        re-sort it into the lost replica's layout (same dataset, different
+        serialization). Returns wall seconds (benchmarked vs. byte-copy
+        recovery in §5.4 bench)."""
+        node = self.nodes[node_id]
+        t0 = time.perf_counter()
+        node.alive = True
+        for cf in self.column_families.values():
+            for r in cf.replicas:
+                if r.node_id != node_id:
+                    continue
+                survivor = next(
+                    (
+                        s
+                        for s in cf.replicas
+                        if s.replica_id != r.replica_id and self.nodes[s.node_id].alive
+                        and (cf.name, s.replica_id) in self.nodes[s.node_id].tables
+                    ),
+                    None,
+                )
+                if survivor is None:
+                    raise RuntimeError(
+                        f"data loss: no survivor for {cf.name!r} replica {r.replica_id}"
+                    )
+                src = self.nodes[survivor.node_id].tables[(cf.name, survivor.replica_id)]
+                node.tables[(cf.name, r.replica_id)] = src.resorted(r.layout)
+        return time.perf_counter() - t0
+
+    # -- introspection -------------------------------------------------------------
+
+    def layouts(self, cf_name: str) -> tuple[tuple[str, ...], ...]:
+        return tuple(r.layout for r in self.column_families[cf_name].replicas)
+
+    def total_bytes(self) -> int:
+        return sum(n.bytes_stored() for n in self.nodes)

@@ -1,0 +1,196 @@
+"""SortedTable — the SSTable analogue (paper §3.1, Fig 2).
+
+A table holds columnar data sorted lexicographically by a *layout*
+(permutation of the clustering key columns). A query with an equality
+prefix and one range filter touches a *contiguous slab* of rows: Cassandra
+"traverses from the lower bound and terminates at the first key exceeding
+the end boundary" — here the slab is located with two binary searches on
+the packed composite key, then scanned with residual predicates.
+
+The slab size IS the paper's ``Row(r, q)`` ground truth; ``execute``
+returns it alongside the query result so the cost model can be validated
+against reality (tests + Fig 4 benches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .keys import KeySchema, pack_columns, pack_tuple
+from .workload import Query
+
+__all__ = ["SortedTable", "ScanResult", "slab_bounds_for"]
+
+
+@dataclasses.dataclass
+class ScanResult:
+    """Result of executing a query on one replica's table."""
+
+    value: float  # aggregate value ("select" reports match count here too)
+    rows_scanned: int  # slab size — rows streamed from storage (paper Row())
+    rows_matched: int  # rows passing all residual predicates
+    selected: np.ndarray | None = None  # row indices for agg == "select"
+
+
+def slab_bounds_for(
+    query: Query, layout: Sequence[str], schema: KeySchema
+) -> tuple[int, int]:
+    """Packed-key [lo, hi) bounds of the contiguous slab a query touches.
+
+    Walk the layout: keys with equality filters extend the fixed prefix;
+    the first non-equality key contributes its range and terminates the
+    prefix (everything after it is residual-filtered during the scan, so
+    its slab bounds are the full per-column domain).
+    """
+    los: list[int] = []
+    his: list[int] = []
+    open_range = False
+    for col in layout:
+        if open_range:
+            lo_c, hi_c = 0, schema.max_value(col) + 1
+        else:
+            lo_c, hi_c = query.filter_bounds(schema, col)
+            if not query.is_equality_on(col):
+                open_range = True
+        los.append(lo_c)
+        his.append(hi_c - 1)  # inclusive upper value per field
+    lo = pack_tuple(los, layout, schema)
+    hi = pack_tuple(his, layout, schema) + 1  # exclusive
+    return lo, hi
+
+
+@dataclasses.dataclass
+class SortedTable:
+    layout: tuple[str, ...]
+    schema: KeySchema
+    key_cols: dict[str, np.ndarray]  # sorted, int64
+    value_cols: dict[str, np.ndarray]  # sorted alongside
+    packed: np.ndarray  # int64, ascending
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_columns(
+        cls,
+        key_cols: Mapping[str, np.ndarray],
+        value_cols: Mapping[str, np.ndarray],
+        layout: Sequence[str],
+        schema: KeySchema | None = None,
+    ) -> "SortedTable":
+        if schema is None:
+            schema = KeySchema.for_columns(key_cols)
+        layout = tuple(layout)
+        packed = pack_columns(key_cols, layout, schema)
+        order = np.argsort(packed, kind="stable")
+        return cls(
+            layout=layout,
+            schema=schema,
+            key_cols={c: np.asarray(v)[order].astype(np.int64) for c, v in key_cols.items()},
+            value_cols={c: np.asarray(v)[order] for c, v in value_cols.items()},
+            packed=packed[order],
+        )
+
+    def __len__(self) -> int:
+        return int(self.packed.shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return len(self)
+
+    def resorted(self, layout: Sequence[str]) -> "SortedTable":
+        """Same dataset, different serialization — the HR recovery path
+        (rebuild a lost replica by re-sorting a survivor, paper §4)."""
+        return SortedTable.from_columns(self.key_cols, self.value_cols, layout, self.schema)
+
+    # -- writes (LSM-style bulk merge) --------------------------------------
+
+    def merge_insert(
+        self, key_cols: Mapping[str, np.ndarray], value_cols: Mapping[str, np.ndarray]
+    ) -> "SortedTable":
+        """Merge a sorted-on-arrival batch (memtable flush → SSTable merge).
+
+        The per-replica sort order is this table's own layout, mirroring
+        Cassandra's per-replica LSM write path: HR costs the same writes
+        as TR because every replica sorts exactly one copy (Table 1).
+        """
+        new_packed = pack_columns(key_cols, self.layout, self.schema)
+        order = np.argsort(new_packed, kind="stable")
+        new_packed = new_packed[order]
+        # merge positions of the new run into the existing run
+        pos = np.searchsorted(self.packed, new_packed, side="left")
+        merged_packed = np.insert(self.packed, pos, new_packed)
+        kc = {
+            c: np.insert(self.key_cols[c], pos, np.asarray(key_cols[c])[order].astype(np.int64))
+            for c in self.key_cols
+        }
+        vc = {
+            c: np.insert(self.value_cols[c], pos, np.asarray(value_cols[c])[order])
+            for c in self.value_cols
+        }
+        return SortedTable(self.layout, self.schema, kc, vc, merged_packed)
+
+    # -- reads ---------------------------------------------------------------
+
+    def slab(self, query: Query) -> tuple[int, int]:
+        """Row index range [lo_idx, hi_idx) the query must stream."""
+        lo_key, hi_key = slab_bounds_for(query, self.layout, self.schema)
+        lo = int(np.searchsorted(self.packed, lo_key, side="left"))
+        hi = int(np.searchsorted(self.packed, hi_key, side="left"))
+        return lo, hi
+
+    def execute(self, query: Query) -> ScanResult:
+        """Stream the slab, apply residual predicates, aggregate.
+
+        This is the numpy reference engine; the Pallas `scan_agg` kernel
+        (repro.kernels) implements the same slab scan for the TPU path and
+        is tested against this method.
+        """
+        lo, hi = self.slab(query)
+        n = hi - lo
+        if n <= 0:
+            return ScanResult(0.0, 0, 0, np.empty(0, np.int64) if query.agg == "select" else None)
+        mask = np.ones(n, dtype=bool)
+        for col in self.layout:
+            lo_c, hi_c = query.filter_bounds(self.schema, col)
+            v = self.key_cols[col][lo:hi]
+            mask &= (v >= lo_c) & (v < hi_c)
+        matched = int(mask.sum())
+        if query.agg == "count":
+            return ScanResult(float(matched), n, matched)
+        if query.agg == "sum":
+            if query.value_col is None:
+                raise ValueError("sum aggregation requires value_col")
+            vals = self.value_cols[query.value_col][lo:hi]
+            return ScanResult(float(np.sum(vals * mask)), n, matched)
+        if query.agg == "select":
+            idx = np.nonzero(mask)[0] + lo
+            return ScanResult(float(matched), n, matched, selected=idx)
+        raise ValueError(f"unknown agg {query.agg!r}")
+
+    # -- identity ------------------------------------------------------------
+
+    def dataset_fingerprint(self) -> str:
+        """Order-independent content hash: replicas of the same dataset have
+        equal fingerprints regardless of serialization (HR invariant).
+
+        Rows are brought to a canonical order (lexicographic over sorted
+        column names, value columns as tiebreakers) and hashed exactly.
+        """
+        import hashlib
+
+        canon = tuple(sorted(self.key_cols))
+        packed = pack_columns(self.key_cols, canon, self.schema)
+        vnames = tuple(sorted(self.value_cols))
+        tiebreak = [
+            np.asarray(self.value_cols[c], dtype=np.float64) for c in reversed(vnames)
+        ]
+        order = np.lexsort(tuple(tiebreak) + (packed,))
+        md = hashlib.md5()
+        md.update(packed[order].tobytes())
+        for c in vnames:
+            md.update(c.encode())
+            md.update(np.asarray(self.value_cols[c], dtype=np.float64)[order].tobytes())
+        return md.hexdigest()

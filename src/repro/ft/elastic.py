@@ -1,0 +1,52 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints are mesh-independent (full arrays reassembled from chunks),
+so scaling in/out is: build the new mesh/ctx → compute the new sharding
+specs from the SAME logical axes → device_put the restored tree. The
+only constraint is divisibility of sharded dims by the new axis sizes —
+``check_mesh_fits`` validates before committing.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import MeshCtx, param_specs_for_tree
+
+__all__ = ["check_mesh_fits", "reshard_tree"]
+
+
+def check_mesh_fits(cfg: ArchConfig, ctx: MeshCtx) -> list[str]:
+    """Returns a list of divisibility violations (empty = fits)."""
+    problems = []
+    tp = ctx.tp_size
+    shapes = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), cfg, tp))
+    specs = param_specs_for_tree(ctx, lm.lm_axes(cfg, tp))
+    flat_s, _ = jax.tree.flatten(shapes)
+    flat_p = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )
+    for sds, spec in zip(flat_s, flat_p):
+        for dim, entry in zip(sds.shape, tuple(spec) + (None,) * (len(sds.shape) - len(spec))):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= ctx.mesh.shape[a]
+            if dim % size:
+                problems.append(f"dim {dim} not divisible by {size} ({axes})")
+    return problems
+
+
+def reshard_tree(tree, ctx: MeshCtx, axes_tree):
+    """device_put a host tree onto ctx's mesh with the given logical axes."""
+    specs = param_specs_for_tree(ctx, axes_tree)
+    shard = jax.tree.map(
+        lambda s: ctx.sharding(*s),
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    return jax.device_put(tree, shard)

@@ -1,0 +1,49 @@
+"""Failure simulation + recovery orchestration.
+
+``FailurePlan`` injects node failures at chosen steps; the training
+driver (launch/train.py) responds by: (1) rebuilding lost data-index
+replicas through the HR engine's Recovery module (re-sort a survivor),
+(2) restarting the step loop from the last checkpoint. This is the
+single-host simulation of the pod-level contract: checkpoint/restart +
+replica rebuild, with straggler hedging handled in ft.straggler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import HREngine
+
+__all__ = ["FailurePlan", "FailureInjector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    fail_at_steps: tuple[int, ...] = ()
+    nodes: tuple[int, ...] = ()  # node failing at each step (cycled)
+
+
+class FailureInjector:
+    def __init__(self, plan: FailurePlan, engine: HREngine | None) -> None:
+        self.plan = plan
+        self.engine = engine
+        self.log: list[dict] = []
+        self._fired: set[int] = set()
+
+    def maybe_fail(self, step: int) -> bool:
+        # each planned failure fires once — after recovery the step loop
+        # rewinds past it (restart-from-checkpoint) and must not re-fail
+        if step not in self.plan.fail_at_steps or step in self._fired:
+            return False
+        self._fired.add(step)
+        idx = self.plan.fail_at_steps.index(step)
+        node = self.plan.nodes[idx % len(self.plan.nodes)] if self.plan.nodes else 0
+        if self.engine is not None:
+            self.engine.fail_node(node)
+            secs = self.engine.recover_node(node)
+        else:
+            secs = 0.0
+        self.log.append({"step": step, "node": node, "recovery_s": secs})
+        return True

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the HR hot paths.
+
+scan_agg  — predicated slab scan + aggregate (the paper's query loop)
+ecdf_hist — histogram/ECDF build for the Cost Evaluator
+
+Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
+jit'd public API with CPU interpret-mode fallback.
+"""
+
+from .ops import ecdf_hist, ecdf_hist_ref, scan_agg, scan_agg_ref, table_scan_device
+
+__all__ = ["ecdf_hist", "ecdf_hist_ref", "scan_agg", "scan_agg_ref", "table_scan_device"]

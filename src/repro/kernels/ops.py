@@ -1,0 +1,60 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``scan_agg`` executes a located slab scan (the engine's read path on
+device); ``ecdf_hist`` refreshes Cost-Evaluator statistics. Both take the
+same arguments as their ``ref.py`` oracles and dispatch to Pallas
+(interpret-mode on CPU, compiled on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .ecdf_hist import ecdf_hist_pallas
+from .scan_agg import scan_agg_pallas
+
+__all__ = ["scan_agg", "ecdf_hist", "scan_agg_ref", "ecdf_hist_ref", "table_scan_device"]
+
+scan_agg_ref = ref.scan_agg_ref
+ecdf_hist_ref = ref.ecdf_hist_ref
+
+
+def scan_agg(keys, values, col_lo, col_hi, slab, *, block_n: int = 2048, use_pallas: bool = True):
+    """(sum, count) over the slab with residual predicates. Arrays may be
+    numpy or jax; returns a float32[2] jax array."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.float32)
+    col_lo = jnp.asarray(col_lo, jnp.int32)
+    col_hi = jnp.asarray(col_hi, jnp.int32)
+    slab = jnp.asarray(slab, jnp.int32)
+    if not use_pallas:
+        return ref.scan_agg_ref(keys, values, col_lo, col_hi, slab)
+    return scan_agg_pallas(keys, values, col_lo, col_hi, slab, block_n=block_n)
+
+
+def ecdf_hist(col, *, n_bins: int, bin_width: int, block_n: int = 512, use_pallas: bool = True):
+    col = jnp.asarray(col, jnp.int32)
+    if not use_pallas or n_bins > 4096:
+        return ref.ecdf_hist_ref(col, n_bins=n_bins, bin_width=bin_width)
+    return ecdf_hist_pallas(col, n_bins=n_bins, bin_width=bin_width, block_n=block_n)
+
+
+def table_scan_device(table, query, *, use_pallas: bool = True) -> tuple[float, float]:
+    """Device-side execution of ``SortedTable.execute`` (sum/count aggs):
+    slab via packed-key searchsorted, then the scan_agg kernel. Used by
+    the serving/data layers when tables are resident as jax arrays."""
+    lo_idx, hi_idx = table.slab(query)
+    names = list(table.layout)
+    keys = np.stack([table.key_cols[c] for c in names]).astype(np.int32)
+    if query.agg == "sum":
+        vals = np.asarray(table.value_cols[query.value_col], np.float32)
+    else:
+        vals = np.ones(len(table), np.float32)
+    lo = np.array([query.filter_bounds(table.schema, c)[0] for c in names], np.int32)
+    hi = np.array([query.filter_bounds(table.schema, c)[1] for c in names], np.int32)
+    out = scan_agg(keys, vals, lo, hi, np.array([lo_idx, hi_idx]), use_pallas=use_pallas)
+    s, c = float(out[0]), float(out[1])
+    return (s if query.agg == "sum" else c), c

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every kernel (tested with assert_allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["scan_agg_ref", "ecdf_hist_ref"]
+
+
+def scan_agg_ref(
+    keys: jax.Array,  # int32[K, N]
+    values: jax.Array,  # float32[N]
+    col_lo: jax.Array,  # int32[K]
+    col_hi: jax.Array,  # int32[K]
+    slab: jax.Array,  # int32[2]
+) -> jax.Array:
+    """float32[2] = (masked sum, matched count) over the slab."""
+    K, N = keys.shape
+    ridx = jnp.arange(N, dtype=jnp.int32)
+    in_slab = (ridx >= slab[0]) & (ridx < slab[1])
+    ok = jnp.all((keys >= col_lo[:, None]) & (keys < col_hi[:, None]), axis=0)
+    mask = (ok & in_slab).astype(jnp.float32)
+    return jnp.stack(
+        [jnp.sum(values.astype(jnp.float32) * mask), jnp.sum(mask)]
+    )
+
+
+def ecdf_hist_ref(col: jax.Array, *, n_bins: int, bin_width: int) -> jax.Array:
+    """float32[n_bins] counts of col // bin_width."""
+    bins = col.astype(jnp.int32) // bin_width
+    oh = jax.nn.one_hot(bins, n_bins, dtype=jnp.float32)  # out-of-range → all-zero row
+    return jnp.sum(oh, axis=0)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: predicated slab scan + aggregate.
+
+This is the paper's hot loop — the SSTable scan of Fig 2 — adapted to the
+TPU memory hierarchy. The storage layout is *columnar* with rows along
+the 128-lane axis (keys: int32[K, N]), so one VMEM tile holds a block of
+rows for every clustering key and the residual predicate evaluates as a
+vectorized compare + AND-reduce over the (tiny) K sublane axis; the
+aggregation is a masked reduction feeding a scalar accumulator that lives
+in the output block across grid steps.
+
+HBM→VMEM traffic is exactly rows × row_bytes, which is what Eq (1) of the
+paper counts — the kernel makes Row() the literal unit of memory cost.
+
+Grid: 1-D over row blocks. Block shapes:
+  keys   (K_pad, block_n)  — K_pad a multiple of 8 sublanes
+  values (1, block_n)
+  bounds (K_pad, 1) ×2     — broadcast against the row axis
+  slab   (1, 2)            — [lo, hi) row-index slab from searchsorted
+  out    (1, 128)          — lane 0: Σ value·mask, lane 1: Σ mask
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["scan_agg_kernel", "scan_agg_pallas"]
+
+
+def scan_agg_kernel(slab_ref, keys_ref, vals_ref, lo_ref, hi_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # (K_pad, block_n) int32
+    vals = vals_ref[...]  # (1, block_n) float32
+    lo = lo_ref[...]  # (K_pad, 1) int32, inclusive
+    hi = hi_ref[...]  # (K_pad, 1) int32, exclusive
+
+    block_n = keys.shape[1]
+    row0 = i * block_n
+    ridx = row0 + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    slab_lo = slab_ref[0, 0]
+    slab_hi = slab_ref[0, 1]
+    in_slab = (ridx >= slab_lo) & (ridx < slab_hi)  # (1, block_n)
+
+    col_ok = (keys >= lo) & (keys < hi)  # (K_pad, block_n)
+    pred = jnp.all(col_ok, axis=0, keepdims=True) & in_slab  # (1, block_n)
+
+    fmask = pred.astype(vals.dtype)
+    part_sum = jnp.sum(vals * fmask)
+    part_cnt = jnp.sum(fmask)
+
+    acc = out_ref[...]
+    upd = jnp.zeros_like(acc)
+    upd = upd.at[0, 0].set(part_sum)
+    upd = upd.at[0, 1].set(part_cnt)
+    out_ref[...] = acc + upd
+
+
+def _pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def scan_agg_pallas(
+    keys: jax.Array,  # int32[K, N] — columnar clustering keys, replica order
+    values: jax.Array,  # float32[N]
+    col_lo: jax.Array,  # int32[K] inclusive per-column lower bounds
+    col_hi: jax.Array,  # int32[K] exclusive per-column upper bounds
+    slab: jax.Array,  # int32[2] = [lo, hi) row slab
+    *,
+    block_n: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns float32[2] = (masked sum of values, matched row count)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    K, N = keys.shape
+    K_pad = max(8, -(-K // 8) * 8)
+    N_pad = -(-max(N, 1) // block_n) * block_n
+
+    keys_p = _pad_to(_pad_to(keys.astype(jnp.int32), N_pad, 1, 0), K_pad, 0, 0)
+    vals_p = _pad_to(values.astype(jnp.float32)[None, :], N_pad, 1, 0.0)
+    # padded K rows get always-true bounds; padded N rows are killed by the
+    # slab mask (row index ≥ N ≥ slab hi).
+    lo_p = _pad_to(col_lo.astype(jnp.int32)[:, None], K_pad, 0, jnp.iinfo(jnp.int32).min)
+    hi_p = _pad_to(col_hi.astype(jnp.int32)[:, None], K_pad, 0, jnp.iinfo(jnp.int32).max)
+    slab_p = slab.astype(jnp.int32)[None, :]  # (1, 2)
+
+    grid = (N_pad // block_n,)
+    out = pl.pallas_call(
+        scan_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((K_pad, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((K_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K_pad, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 128), jnp.float32),
+        interpret=interpret,
+    )(slab_p, keys_p, vals_p, lo_p, hi_p)
+    return out[0, :2]

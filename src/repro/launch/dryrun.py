@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements — jax locks the device
+count on first init, and the production meshes need 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+
+Per cell it records: compile ok, memory_analysis (bytes/device),
+cost_analysis (FLOPs, bytes), and the collective-bytes breakdown parsed
+from the post-SPMD HLO — the inputs for EXPERIMENTS.md §Roofline.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.launch import hlo_stats
+from repro.launch.input_specs import (
+    decode_input_specs,
+    prefill_batch_specs,
+    train_batch_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import make_ctx
+from repro.serving.steps import make_decode_step, make_prefill_step
+from repro.training.optimizer import OptConfig
+from repro.training.steps import TrainSettings, make_train_step, train_state_shapes
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, opt_kind: str = "adafactor",
+             remat: str = "full", microbatches: int = 1,
+             serve_sharding: str = "fsdp", verbose: bool = True) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "mode": shape.mode, "status": "skipped", "reason": reason,
+        }
+    rec = run_cell_for_cfg(cfg, shape, multi_pod=multi_pod, opt_kind=opt_kind,
+                           remat=remat, microbatches=microbatches,
+                           serve_sharding=serve_sharding, verbose=verbose)
+    rec["arch"] = arch
+    rec["shape"] = shape_name
+    return rec
+
+
+def run_cell_for_cfg(cfg, shape, *, multi_pod: bool, opt_kind: str = "adafactor",
+                     remat: str = "full", microbatches: int = 1,
+                     q_chunk: int = 512, kv_chunk: int = 1024,
+                     serve_sharding: str = "fsdp", param_mode: str = "fsdp",
+                     pipeline_micro: int = 0,
+                     verbose: bool = True) -> dict:
+    arch = cfg.name
+    shape_name = shape.name
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode,
+    }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    shard_batch = shape.global_batch % _dp_size(mesh) == 0 and shape.global_batch >= _dp_size(mesh)
+    ctx = make_ctx(mesh, shard_batch=shard_batch)
+    tp = ctx.tp_size
+
+    t0 = time.perf_counter()
+    try:
+        if shape.mode == "train":
+            settings = TrainSettings(remat=remat, opt=OptConfig(kind=opt_kind),
+                                     microbatches=microbatches, param_mode=param_mode,
+                                     pipeline_micro=pipeline_micro,
+                                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+            step, in_sh, _ = make_train_step(cfg, ctx, settings)
+            p_shapes, o_shapes = train_state_shapes(cfg, settings, tp)
+            batch = train_batch_specs(cfg, shape)
+            lowered = step.lower(p_shapes, o_shapes, batch)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg, ctx, s_alloc=shape.seq_len,
+                                     q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                     serve_sharding=serve_sharding)
+            p_shapes = jax.eval_shape(
+                lambda: __import__("repro.models.lm", fromlist=["init_lm"]).init_lm(
+                    jax.random.PRNGKey(0), cfg, tp
+                )
+            )
+            batch = prefill_batch_specs(cfg, shape)
+            lowered = step.lower(p_shapes, batch)
+        else:  # decode
+            step = make_decode_step(cfg, ctx, serve_sharding=serve_sharding)
+            p_shapes = jax.eval_shape(
+                lambda: __import__("repro.models.lm", fromlist=["init_lm"]).init_lm(
+                    jax.random.PRNGKey(0), cfg, tp
+                )
+            )
+            cache, batch_t, pos = decode_input_specs(cfg, shape, tp)
+            lowered = step.lower(p_shapes, cache, batch_t, pos)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        coll = hlo_stats.collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            n_chips=n_chips,
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            flops=ca.get("flops", 0.0),
+            hbm_bytes=ca.get("bytes accessed", 0.0),
+            collectives={"bytes": coll.per_op_bytes, "count": coll.count},
+            collective_bytes_total=coll.total,
+            roofline=hlo_stats.roofline_terms(
+                ca.get("flops", 0.0), ca.get("bytes accessed", 0.0), coll.total, n_chips
+            ),
+        )
+        if verbose:
+            print(
+                f"[ok] {arch:>18s} × {shape_name:<11s} mesh={rec['mesh']:<7s} "
+                f"compile={t_compile:6.1f}s arg={ma.argument_size_in_bytes/1e9:6.2f}GB "
+                f"temp={ma.temp_size_in_bytes/1e9:6.2f}GB "
+                f"flops={rec['flops']:.3e} coll={coll.total/1e6:9.1f}MB"
+            )
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug we record
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} mesh={rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for name in mesh.axis_names:
+        if name != "model":
+            n *= mesh.shape[name]
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true", help="2×16×16 mesh (default 16×16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt", default="adafactor", choices=("adamw", "adamw_bf16", "adafactor"))
+    ap.add_argument("--remat", default="full", choices=("none", "dots", "full"))
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--serve-sharding", default="fsdp", choices=("fsdp", "tp"))
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+    records = []
+    for arch, shape in cells:
+        for mp in meshes:
+            records.append(
+                run_cell(arch, shape, multi_pod=mp, opt_kind=args.opt, remat=args.remat,
+                         microbatches=args.microbatches,
+                         serve_sharding=args.serve_sharding)
+            )
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_fail = sum(r["status"] == "failed" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``collective_bytes`` parses the compiled HLO text and sums the *operand*
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (cost_analysis does not report these). Shapes are
+parsed from the HLO type strings; sizes are per-participant (the compiled
+module is the per-device program, so operand bytes ≈ bytes crossing this
+chip's links, the right unit for the ICI roofline term).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["CollectiveStats", "collective_bytes", "roofline_terms", "HW"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<otype>[a-z0-9]+)\[(?P<oshape>[0-9,]*)\][^ ]*)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype)
+    if n is None:
+        return 0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: dict  # op kind -> output bytes total
+    count: dict
+
+    @property
+    def total(self) -> int:
+        return sum(self.per_op_bytes.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    per = {k: 0 for k in _COLLECTIVES}
+    cnt = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:  # async pair: count only the start
+            continue
+        if m.group("otype") is not None:
+            b = _nbytes(m.group("otype"), m.group("oshape"))
+        else:
+            # tuple result (e.g. variadic all-gather / -start): sum members
+            head = line.split(f" {op}", 1)[0]
+            b = sum(_nbytes(t, s) for t, s in _SHAPE_RE.findall(head))
+        per[op] += b
+        cnt[op] += 1
+    return CollectiveStats(per, cnt)
+
+
+#: TPU v5e hardware constants (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+}
+
+
+def roofline_terms(
+    flops: float, hbm_bytes: float, coll_bytes: float, n_chips: int
+) -> dict:
+    """Three per-chip roofline terms in seconds. ``flops``/``hbm_bytes``
+    come from compiled.cost_analysis() of the per-device module."""
+    return {
+        "t_compute": flops / HW["peak_flops_bf16"],
+        "t_memory": hbm_bytes / HW["hbm_bw"],
+        "t_collective": coll_bytes / HW["ici_bw"],
+        "n_chips": n_chips,
+    }

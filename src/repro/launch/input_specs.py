@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable,
+weak-type-correct, zero allocation (the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.parallel.padding import padded_dims
+
+__all__ = ["train_batch_specs", "decode_input_specs", "prefill_batch_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.n_codebooks > 1:
+        batch["labels"] = _sds((B, S, cfg.n_codebooks), jnp.int32)
+    else:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        return {"tokens": _sds((B, S), jnp.int32)}
+    return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec, tp: int):
+    """(cache, batch_t, pos) stand-ins: one new token against a KV cache
+    of shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, B, S, tp))
+    if cfg.input_mode == "tokens":
+        batch_t = {"tokens": _sds((B, 1), jnp.int32)}
+    else:
+        batch_t = {"embeds": _sds((B, 1, cfg.d_model), jnp.bfloat16)}
+    pos = _sds((), jnp.int32)
+    return cache_shapes, batch_t, pos

@@ -1,0 +1,357 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis with loop-corrected HLO accounting.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of
+trip count (verified in EXPERIMENTS.md §Dry-run), and this framework
+deliberately uses `lax.scan` at three levels (layers, flash-attention
+chunks, grad-accum microbatches). Raw numbers would undercount a 61-layer
+model by ~61×. Correction strategy, per cell:
+
+  1. *Analysis variants*: compile the SAME step with per-stack depths
+     (1,1,…), then (2,1,…), (1,2,…) … — all with LOOP-FREE attention
+     (q_chunk = kv_chunk = S, one block) and microbatches=1, so the only
+     while loop left is the layer scan, which the depth extrapolation
+     linearizes exactly:  total = base + Σ_s (n_s − 1) · per_layer_s.
+     (Chunking changes memory layout, never FLOPs or collective bytes.)
+  2. *SSD correction*: the Mamba-2 chunk scan remains a loop (chunk size
+     changes real FLOPs, so it cannot be unrolled away); its body cost
+     appears once per layer and is scaled by the analytic chunk count
+     with an exact per-chunk FLOP formula.
+  3. *Memory term*: HBM bytes are computed analytically (weights read
+     once per step + activation/KV/logit traffic) — the CPU backend's
+     'bytes accessed' reflects CPU buffer assignment, not TPU fusion.
+  4. MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (+attention) and
+     the MODEL_FLOPS / HLO_FLOPs ratio are reported per cell.
+
+Outputs one JSON record per cell; EXPERIMENTS.md tables are generated
+from these artifacts (benchmarks/roofline_report.py).
+"""
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.configs.registry import ARCHS, SHAPES, ShapeSpec, get_arch, shape_applicable
+from repro.launch import hlo_stats
+from repro.models import lm as lm_mod
+from repro.models.config import ArchConfig
+from repro.parallel.padding import padded_dims
+
+__all__ = ["analyze_cell", "analytic_model_flops", "analytic_hbm_bytes"]
+
+
+# ------------------------------------------------------------ analytic --------
+
+
+def _active_params(cfg: ArchConfig) -> float:
+    """Params touched per token (MoE: shared + top_k experts only)."""
+    total = cfg.param_count()
+    if not cfg.is_moe:
+        return total
+    moe_layers = cfg.n_layers - cfg.first_k_dense
+    g = 3 if cfg.gated_mlp else 2
+    routed_all = moe_layers * cfg.n_experts * g * cfg.d_model * cfg.moe_d_ff
+    routed_active = moe_layers * cfg.moe_top_k * g * cfg.d_model * cfg.moe_d_ff
+    return total - routed_all + routed_active
+
+
+def _attn_flops_per_layer(cfg: ArchConfig, B: int, S: int, mode: str) -> float:
+    """Score+value matmul FLOPs (projections are inside param counts)."""
+    if not cfg.uses_attention:
+        return 0.0
+    if cfg.attention == "mla":
+        dh_qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        dh_v = cfg.v_head_dim
+    else:
+        dh_qk = dh_v = cfg.d_head
+    H = cfg.n_heads
+    if mode == "decode":
+        # one query over the full cache
+        return 2.0 * B * H * S * (dh_qk + dh_v)
+    # causal full-seq: ~half the S×S block
+    eff = S * S / 2 if not cfg.sliding_window else S * min(S, cfg.sliding_window)
+    return 2.0 * B * H * eff * (dh_qk + dh_v)
+
+
+def _ssd_flops_per_layer(cfg: ArchConfig, B: int, S: int, mode: str) -> float:
+    if not cfg.uses_ssm:
+        return 0.0
+    dims_H = cfg.d_inner // cfg.ssm_head_dim
+    P, N = cfg.ssm_head_dim, cfg.ssm_state
+    if mode == "decode":
+        # state update + readout: B·H·P·N each
+        return 2.0 * 2 * B * dims_H * P * N
+    Q = min(cfg.ssm_chunk, S)
+    nc = max(1, S // Q)
+    # per chunk: CB (Q²N) + Y_diag (Q²·H(+HP)) + Y_off/state (Q·H·P·N ×2)
+    per_chunk = 2.0 * B * (Q * Q * N + Q * Q * dims_H * (1 + P) + 2 * Q * dims_H * P * N)
+    return per_chunk * nc
+
+
+def analytic_model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Whole-step model FLOPs (all chips), fwd(+bwd ×3 for train)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_active = _active_params(cfg)
+    L = cfg.n_layers
+    if shape.mode == "train":
+        tokens = B * S
+        base = 2.0 * n_active * tokens
+        attn = _attn_flops_per_layer(cfg, B, S, "train") * L
+        ssd = _ssd_flops_per_layer(cfg, B, S, "train") * L
+        return 3.0 * (base + attn + ssd)  # fwd + 2× bwd
+    if shape.mode == "prefill":
+        tokens = B * S
+        return 2.0 * n_active * tokens + (
+            _attn_flops_per_layer(cfg, B, S, "prefill")
+            + _ssd_flops_per_layer(cfg, B, S, "prefill")
+        ) * L
+    # decode: one token per sequence
+    return 2.0 * n_active * B + (
+        _attn_flops_per_layer(cfg, B, S, "decode")
+        + _ssd_flops_per_layer(cfg, B, S, "decode")
+    ) * L
+
+
+def _cache_bytes(cfg: ArchConfig, B: int, S: int, tp: int) -> float:
+    pd = padded_dims(cfg, tp)
+    total = 0.0
+    for spec in lm_mod.stacks_for(cfg):
+        for _, shape_, dt, _ in lm_mod._cache_entry_shapes(cfg, pd, spec, B, S, tp):
+            total += float(np.prod(shape_)) * np.dtype(dt).itemsize
+    return total
+
+
+def analytic_hbm_bytes(cfg: ArchConfig, shape: ShapeSpec, tp: int, n_chips: int) -> float:
+    """Per-chip HBM bytes per step (floor: weights once + act/KV traffic).
+
+    Train: weights read fwd + bwd + grads written + optimizer state rw
+    (≈ 6× param bytes ÷ chips with full sharding) + activations 2 passes.
+    Decode: full cache read + params/TP read. Prefill: params + act.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    p_bytes = cfg.param_count() * 2.0  # bf16
+    d = cfg.d_model
+    if shape.mode == "train":
+        act = B * S * d * 2.0 * cfg.n_layers * 4  # x in/out per layer, fwd+bwd
+        opt = cfg.param_count() * (4 + 4 + 4)  # m rw + fp32 master write
+        return (3 * p_bytes + opt + act) / n_chips
+    if shape.mode == "prefill":
+        act = B * S * d * 2.0 * cfg.n_layers * 2
+        return (p_bytes + act + _cache_bytes(cfg, B, S, tp)) / n_chips
+    cache = _cache_bytes(cfg, B, S, tp)
+    act = B * d * 2.0 * cfg.n_layers * 4
+    return (p_bytes + cache + act) / n_chips
+
+
+# ------------------------------------------------------------ HLO-corrected ---
+
+
+def _reduced_cfg(cfg: ArchConfig, stack_sizes: dict) -> ArchConfig:
+    """Same dims, reduced depth per stack."""
+    if cfg.is_moe and cfg.first_k_dense:
+        dense = stack_sizes.get("dense", 1)
+        moe = stack_sizes.get("moe", 1)
+        return dataclasses.replace(cfg, n_layers=dense + moe, first_k_dense=dense)
+    name = lm_mod.stacks_for(cfg)[0].name
+    n = stack_sizes.get(name, 1)
+    # keep SWA global-layer structure meaningful at tiny depth
+    glob = tuple(g for g in cfg.global_layers if g < n)
+    return dataclasses.replace(cfg, n_layers=n, global_layers=glob)
+
+
+def _compile_variant(cfg, shape, multi_pod, *, loop_free_attn, opt_kind, remat,
+                     serve_sharding="fsdp", param_mode="fsdp", pipeline_micro=0):
+    """One lower+compile with UNROLLED layers (see lm.ANALYSIS_UNROLL_LAYERS)."""
+    from repro.launch.dryrun import run_cell_for_cfg
+
+    lm_mod.ANALYSIS_UNROLL_LAYERS = True
+    try:
+        return run_cell_for_cfg(
+            cfg, shape, multi_pod=multi_pod, opt_kind=opt_kind, remat=remat,
+            microbatches=1,
+            q_chunk=shape.seq_len if loop_free_attn else 512,
+            kv_chunk=shape.seq_len if loop_free_attn else 1024,
+            serve_sharding=serve_sharding,
+            param_mode=param_mode,
+            pipeline_micro=pipeline_micro,
+            verbose=False,
+        )
+    finally:
+        lm_mod.ANALYSIS_UNROLL_LAYERS = False
+
+
+def analyze_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    opt_kind: str = "adafactor",
+    remat: str = "full",
+    serve_sharding: str = "fsdp",
+    param_mode: str = "fsdp",
+    pipeline_micro: int = 0,
+    bf16_reduce: bool = False,
+    depths: tuple = (1, 2),
+    production_rec: dict | None = None,
+    verbose: bool = True,
+) -> dict:
+    from repro.models import layers as _layers
+
+    _layers.TP_REDUCE_BF16 = bf16_reduce
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": reason}
+
+    stacks = lm_mod.stacks_for(cfg)
+    names = [s.name for s in stacks]
+    depth = {s.name: s.n_layers for s in stacks}
+
+    # base: every stack at depth d0 (d0=2 stabilizes cells where XLA picks
+    # different collective strategies at depth 1 — pass depths=(2,3))
+    d0 = depths[0]
+    base_cfg = _reduced_cfg(cfg, {n: d0 for n in names})
+    base = _compile_variant(base_cfg, shape, multi_pod,
+                            loop_free_attn=shape.mode != "decode",
+                            opt_kind=opt_kind, remat=remat,
+                            serve_sharding=serve_sharding, param_mode=param_mode,
+                            pipeline_micro=pipeline_micro)
+    if base["status"] != "ok":
+        return {"arch": arch, "shape": shape_name, "status": "failed",
+                "stage": "base", "error": base.get("error")}
+
+    per_layer = {}
+    for n in names:
+        sizes = {m: (depths[1] if m == n else d0) for m in names}
+        var = _compile_variant(_reduced_cfg(cfg, sizes), shape, multi_pod,
+                               loop_free_attn=shape.mode != "decode",
+                               opt_kind=opt_kind, remat=remat,
+                               serve_sharding=serve_sharding, param_mode=param_mode,
+                               pipeline_micro=pipeline_micro)
+        if var["status"] != "ok":
+            return {"arch": arch, "shape": shape_name, "status": "failed",
+                    "stage": f"depth2:{n}", "error": var.get("error")}
+        per_layer[n] = {
+            "flops": var["flops"] - base["flops"],
+            "coll": var["collective_bytes_total"] - base["collective_bytes_total"],
+            "hbm": var["hbm_bytes"] - base["hbm_bytes"],
+        }
+
+    flops = base["flops"]
+    coll = base["collective_bytes_total"]
+    hbm_raw = base["hbm_bytes"]
+    for n in names:
+        flops += per_layer[n]["flops"] * (depth[n] - d0)
+        coll += per_layer[n]["coll"] * (depth[n] - d0)
+        hbm_raw += per_layer[n]["hbm"] * (depth[n] - d0)
+
+    # SSD chunk-loop correction (train/prefill only; decode has no loop)
+    ssd_note = None
+    if cfg.uses_ssm and shape.mode != "decode":
+        B, S = shape.global_batch, shape.seq_len
+        Q = min(cfg.ssm_chunk, S)
+        nc = max(1, S // Q)
+        per_chip = _ssd_flops_per_layer(cfg, B, S, shape.mode) / nc / (512 if multi_pod else 256)
+        mult = 3.0 if shape.mode == "train" else 1.0
+        add = per_chip * (nc - 1) * cfg.n_layers * mult
+        flops += add
+        ssd_note = f"+{add:.3e} flops for {nc - 1} uncounted SSD chunks/layer"
+
+    n_chips = 512 if multi_pod else 256
+    model_flops = analytic_model_flops(cfg, shape)
+    hbm_analytic = analytic_hbm_bytes(cfg, shape, 16, n_chips)
+    terms = hlo_stats.roofline_terms(flops, hbm_analytic, coll, n_chips)
+    dominant = max(
+        ("t_compute", "t_memory", "t_collective"), key=lambda k: terms[k]
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "serve_sharding": serve_sharding if shape.mode != "train" else None,
+        "param_mode": param_mode if shape.mode == "train" else None,
+        "pipeline_micro": pipeline_micro,
+        "bf16_reduce": bf16_reduce,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "n_chips": n_chips,
+        "flops_per_chip_corrected": flops,
+        "collective_bytes_per_chip": coll,
+        "hbm_bytes_analytic_per_chip": hbm_analytic,
+        "hbm_bytes_hlo_raw_per_chip": hbm_raw,
+        "model_flops_total": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / max(flops, 1e-9),
+        "roofline": terms,
+        "dominant": dominant,
+        "per_layer": per_layer,
+        "base": {k: base[k] for k in ("flops", "collective_bytes_total", "hbm_bytes")},
+        "collectives_base_breakdown": base.get("collectives"),
+        "ssd_correction": ssd_note,
+        "production": (
+            {k: production_rec.get(k) for k in ("memory", "compile_s", "status")}
+            if production_rec
+            else None
+        ),
+    }
+    if verbose:
+        t = terms
+        print(
+            f"[roofline] {arch:>18s} × {shape_name:<11s} "
+            f"Tc={t['t_compute']*1e3:9.3f}ms Tm={t['t_memory']*1e3:9.3f}ms "
+            f"Tx={t['t_collective']*1e3:9.3f}ms dom={dominant[2:]:<10s} "
+            f"useful={rec['useful_flops_ratio']*100:5.1f}%"
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    ap.add_argument("--serve-sharding", default="fsdp", choices=("fsdp", "tp"))
+    ap.add_argument("--param-mode", default="fsdp", choices=("fsdp", "fsdp_all"))
+    ap.add_argument("--bf16-reduce", action="store_true")
+    ap.add_argument("--pipeline-micro", type=int, default=0)
+    ap.add_argument("--depths", default="1,2", help="extrapolation depths, e.g. 2,3")
+    args = ap.parse_args()
+
+    cells = (
+        [(a, s) for a in ARCHS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    records = []
+    for arch, shape in cells:
+        records.append(analyze_cell(arch, shape, multi_pod=args.multi_pod,
+                                    serve_sharding=args.serve_sharding,
+                                    param_mode=args.param_mode,
+                                    pipeline_micro=args.pipeline_micro,
+                                    bf16_reduce=args.bf16_reduce,
+                                    depths=tuple(int(d) for d in args.depths.split(","))))
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    existing = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    keyed = {(r["arch"], r["shape"], r.get("mesh", ""), r.get("serve_sharding"),
+              r.get("param_mode"), r.get("bf16_reduce"), r.get("pipeline_micro")): r
+             for r in existing}
+    for r in records:
+        keyed[(r["arch"], r["shape"], r.get("mesh", ""), r.get("serve_sharding"),
+               r.get("param_mode"), r.get("bf16_reduce"), r.get("pipeline_micro"))] = r
+    with open(args.out, "w") as f:
+        json.dump(list(keyed.values()), f, indent=1)
+    print(f"wrote {args.out} ({len(keyed)} cells)")
+
+
+if __name__ == "__main__":
+    main()

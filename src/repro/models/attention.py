@@ -1,0 +1,295 @@
+"""Attention: GQA (with RoPE variants, sliding window) and MLA (DeepSeek).
+
+Two execution paths per variant:
+  * full-sequence (train / prefill): `flash_attention` (chunked online
+    softmax, pure jnp — any sharding, any head count).
+  * decode: one query token against a cache whose *sequence* dim may be
+    sharded over the ``model`` mesh axis (SP). Each shard computes a
+    partial (o, m, l) and the result is combined with an exp-rescaled
+    psum — flash-decoding across chips. ``axis_name=None`` degrades to
+    local compute (single-device smoke tests).
+
+MLA decode uses the absorbed form: scores are taken against the latent
+cache directly (q_nope absorbed through W_uk, attention output through
+W_uv), so per-step work is O(S · kv_lora_rank) instead of
+O(S · n_heads · d_head).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.padding import PaddedDims
+from .config import ArchConfig
+from .layers import Params, apply_rope, dense, dense_init, flash_attention
+
+__all__ = [
+    "init_gqa",
+    "gqa_axes",
+    "gqa_forward",
+    "gqa_project_decode",
+    "gqa_attend_decode",
+    "init_mla",
+    "mla_axes",
+    "mla_forward",
+    "mla_project_decode",
+    "mla_attend_decode",
+]
+
+NEG = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------- GQA --------
+
+
+def init_gqa(key, cfg: ArchConfig, pd: PaddedDims, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv = pd.n_heads, pd.n_kv_heads
+    wq = dense_init(ks[0], d, hq * dh, dtype)
+    if pd.n_heads != cfg.n_heads:  # zero-out padded q heads
+        wq = wq.reshape(d, hq, dh).at[:, cfg.n_heads :, :].set(0.0).reshape(d, hq * dh)
+    return {
+        "wq": wq,
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], hq * dh, d, dtype),
+    }
+
+
+def gqa_axes(cfg: ArchConfig, pd: PaddedDims) -> Params:
+    kv_sharded = pd.n_kv_heads % 8 == 0  # replicate tiny KV projections
+    kv = ("fsdp", "heads") if kv_sharded else ("fsdp", None)
+    return {"wq": ("fsdp", "heads"), "wk": kv, "wv": kv, "wo": ("heads", "fsdp")}
+
+
+def _split_heads(x, n_heads, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, d_head)
+
+
+def gqa_forward(
+    p: Params,
+    x: jax.Array,  # [B, S, D]
+    positions: jax.Array,  # [B, S]
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    *,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Returns (output [B,S,D], (k, v) for cache seeding)."""
+    dh = cfg.d_head
+    q = _split_heads(dense(x, p["wq"]), pd.n_heads, dh)
+    k = _split_heads(dense(x, p["wk"]), pd.n_kv_heads, dh)
+    v = _split_heads(dense(x, p["wv"]), pd.n_kv_heads, dh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    o = flash_attention(
+        q, k, v, positions, positions,
+        causal=True, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+    out = dense(o.reshape(*x.shape[:2], pd.n_heads * dh), p["wo"])
+    return out, (k, v)
+
+
+def _partial_softmax(scores: jax.Array, values: jax.Array):
+    """scores [..., S], values [..., S, Dv] → (o, m, l) partials (fp32)."""
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(m[..., None] <= NEG / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("...k,...kd->...d", p, values.astype(jnp.float32))
+    return o, m, l
+
+
+def _combine_over_axis(o, m, l, axis_name):
+    """Exp-rescaled psum combine of softmax partials over a mesh axis."""
+    if axis_name is None:
+        return o / jnp.maximum(l[..., None], 1e-30)
+    g_m = jax.lax.pmax(m, axis_name)
+    scale = jnp.exp(m - g_m)
+    g_l = jax.lax.psum(l * scale, axis_name)
+    g_o = jax.lax.psum(o * scale[..., None], axis_name)
+    return g_o / jnp.maximum(g_l[..., None], 1e-30)
+
+
+def gqa_project_decode(
+    p: Params, x_t: jax.Array, pos: jax.Array, cfg: ArchConfig, pd: PaddedDims
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode-step projections: q [B,1,Hq,Dh], k_new/v_new [B,Hkv,Dh].
+
+    The caller writes (k_new, v_new) into the cache slot for ``pos``
+    BEFORE attending, so the current token attends to itself via the
+    cache — exactly once, on the shard owning the slot.
+    """
+    dh = cfg.d_head
+    B = x_t.shape[0]
+    q = _split_heads(dense(x_t, p["wq"]), pd.n_heads, dh)
+    k_new = _split_heads(dense(x_t, p["wk"]), pd.n_kv_heads, dh)
+    v_new = _split_heads(dense(x_t, p["wv"]), pd.n_kv_heads, dh)
+    posb = jnp.broadcast_to(pos, (B, 1))
+    q = apply_rope(q, posb, cfg.rope_theta, cfg.rotary_pct)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta, cfg.rotary_pct)
+    return q, k_new[:, 0], v_new[:, 0]
+
+
+def gqa_attend_decode(
+    q: jax.Array,  # [B, 1, Hq, Dh]
+    k_cache: jax.Array,  # [B, S_loc, Hkv, Dh]  (seq-sharded under shard_map)
+    v_cache: jax.Array,
+    kv_pos: jax.Array,  # [S_loc] global positions (-1 = empty slot)
+    pos: jax.Array,  # scalar — current decode position
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    *,
+    window: int = 0,
+    axis_name: str | None = None,
+) -> jax.Array:
+    """Flash-decoding over a (possibly seq-sharded) cache → heads [B,1,Hq·Dh]."""
+    dh = cfg.d_head
+    B = q.shape[0]
+    hq, hkv = pd.n_heads, pd.n_kv_heads
+    G = hq // hkv
+    qh = q.reshape(B, hkv, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    if isinstance(window, int) and window == 0:
+        pass
+    else:
+        valid &= kv_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG)
+    o, m, l = _partial_softmax(s, v_cache.transpose(0, 2, 1, 3)[:, :, None, :, :])
+    o = _combine_over_axis(o, m, l, axis_name)
+    return o.astype(q.dtype).reshape(B, 1, hq * dh)  # caller applies wo
+
+
+# ---------------------------------------------------------------- MLA --------
+
+
+def init_mla(key, cfg: ArchConfig, pd: PaddedDims, dtype) -> Params:
+    ks = jax.random.split(key, 7)
+    d = cfg.d_model
+    h = pd.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "wq_a": dense_init(ks[0], d, rq, dtype),
+        "q_a_norm": jnp.ones((rq,), jnp.float32),
+        "wq_b": dense_init(ks[1], rq, h * (dn + dr), dtype),
+        "wkv_a": dense_init(ks[2], d, rkv + dr, dtype),
+        "kv_a_norm": jnp.ones((rkv,), jnp.float32),
+        "wk_b": dense_init(ks[3], rkv, h * dn, dtype),
+        "wv_b": dense_init(ks[4], rkv, h * dv, dtype),
+        "wo": dense_init(ks[5], h * dv, d, dtype),
+    }
+
+
+def mla_axes(cfg: ArchConfig, pd: PaddedDims) -> Params:
+    return {
+        "wq_a": ("fsdp", None),
+        "q_a_norm": (None,),
+        "wq_b": (None, "heads"),
+        "wkv_a": ("fsdp", None),
+        "kv_a_norm": (None,),
+        "wk_b": (None, "heads"),
+        "wv_b": (None, "heads"),
+        "wo": ("heads", "fsdp"),
+    }
+
+
+def _mla_qkv(p, x, positions, cfg, pd):
+    from .layers import rmsnorm
+
+    B, S, _ = x.shape
+    h = pd.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = dense(rmsnorm(dense(x, p["wq_a"]), p["q_a_norm"]), p["wq_b"])
+    q = q.reshape(B, S, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = dense(x, p["wkv_a"])  # [B,S,rkv+dr]
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    c_kv = rmsnorm(c_kv, p["kv_a_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    *,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    window: int = 0,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Materialized (prefill/train) MLA; caches (c_kv, k_rope)."""
+    B, S, _ = x.shape
+    h = pd.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, positions, cfg, pd)
+    k_nope = dense(c_kv, p["wk_b"]).reshape(B, S, h, dn)
+    v = dense(c_kv, p["wv_b"]).reshape(B, S, h, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, dr))], axis=-1)
+    o = flash_attention(
+        q, k, v, positions, positions,
+        causal=True, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        scale=1.0 / math.sqrt(dn + dr),
+    )
+    out = dense(o.reshape(B, S, h * dv), p["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_project_decode(
+    p: Params, x_t: jax.Array, pos: jax.Array, cfg: ArchConfig, pd: PaddedDims
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Decode projections: q_nope [B,1,H,dn], q_rope [B,1,H,dr],
+    c_new [B,rkv], krope_new [B,dr] (cache entries for slot ``pos``)."""
+    B = x_t.shape[0]
+    posb = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope, c_new, krope_new = _mla_qkv(p, x_t, posb, cfg, pd)
+    return q_nope, q_rope, c_new[:, 0], krope_new[:, 0]
+
+
+def mla_attend_decode(
+    q_nope: jax.Array,  # [B, 1, H, dn]
+    q_rope: jax.Array,  # [B, 1, H, dr]
+    ckv_cache: jax.Array,  # [B, S_loc, rkv]
+    krope_cache: jax.Array,  # [B, S_loc, dr]
+    kv_pos: jax.Array,  # [S_loc]
+    pos: jax.Array,
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    *,
+    axis_name: str | None = None,
+) -> jax.Array:
+    """Absorbed-form MLA flash-decoding → latent ctx [B, H, rkv].
+
+    The caller applies W_uv (absorbed value up-proj) + wo; both are
+    TP-sharded over heads so they stay in pjit-land.
+    """
+    B = q_nope.shape[0]
+    h = pd.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    # q_nope already absorbed through W_uk by the caller → q_eff [B,h,rkv]
+    q_eff = q_nope[:, 0].astype(jnp.float32)
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_eff, ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum(
+        "bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), krope_cache.astype(jnp.float32)
+    )
+    s = (s_nope + s_rope) / math.sqrt(dn + dr)  # [B,h,S_loc]
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    s = jnp.where(valid[None, None, :], s, NEG)
+    o, m, l = _partial_softmax(s, ckv_cache[:, None, :, :])  # ctx over latent [B,h,rkv]
+    ctx = _combine_over_axis(o, m, l, axis_name)  # [B,h,rkv]
+    return ctx.astype(krope_cache.dtype)

@@ -1,0 +1,365 @@
+"""Transformer blocks: kinds "attn", "moe", "ssm", "hybrid".
+
+  attn   — pre-norm attention (GQA or MLA) + gated MLP
+  moe    — pre-norm attention + (shared-expert MLP ∥ routed MoE)
+  ssm    — pre-norm Mamba-2 SSD only (no MLP — Mamba blocks carry none)
+  hybrid — Hymba: attention ∥ SSD on the same normed input, per-branch
+           RMSNorm then averaged, + gated MLP
+
+All kinds share the same (params, x, positions) calling convention so a
+stack can run under `lax.scan`. Decode attention goes through shard_map
+when the KV cache sequence is sharded (SP) — see `_attend_*_sharded`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.padding import PaddedDims
+from repro.parallel.sharding import MeshCtx
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig
+from .layers import Params, dense, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+__all__ = [
+    "init_block",
+    "block_axes",
+    "block_forward",
+    "block_decode",
+    "GLOBAL_WINDOW",
+]
+
+#: sentinel window for "global attention" layers inside a SWA arch
+GLOBAL_WINDOW = 1 << 30
+
+
+def _mlp_like_axes(gated: bool) -> Params:
+    ax = {"wi": ("fsdp", "mlp"), "wo": ("mlp", "fsdp")}
+    if gated:
+        ax["wg"] = ("fsdp", "mlp")
+    return ax
+
+
+def init_block(key, cfg: ArchConfig, pd: PaddedDims, tp: int, dtype, kind: str, d_ff: int) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": rmsnorm_init(d)}
+    if kind in ("attn", "moe", "hybrid"):
+        if cfg.attention == "mla":
+            p["attn"] = attn_mod.init_mla(ks[0], cfg, pd, dtype)
+        else:
+            p["attn"] = attn_mod.init_gqa(ks[0], cfg, pd, dtype)
+    if kind in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, tp, dtype)
+    if kind == "hybrid":
+        p["norm_attn"] = rmsnorm_init(d)
+        p["norm_ssm"] = rmsnorm_init(d)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, tp, dtype)
+        if cfg.n_shared_experts:
+            p["shared"] = mlp_init(
+                ks[3], d, cfg.n_shared_experts * cfg.moe_d_ff, dtype, cfg.gated_mlp
+            )
+        p["ln2"] = rmsnorm_init(d)
+    elif kind in ("attn", "hybrid") and d_ff > 0:
+        p["mlp"] = mlp_init(ks[4], d, d_ff, dtype, cfg.gated_mlp)
+        p["ln2"] = rmsnorm_init(d)
+    return p
+
+
+def block_axes(cfg: ArchConfig, pd: PaddedDims, tp: int, kind: str, d_ff: int) -> Params:
+    ax: Params = {"ln1": (None,)}
+    if kind in ("attn", "moe", "hybrid"):
+        ax["attn"] = (
+            attn_mod.mla_axes(cfg, pd) if cfg.attention == "mla" else attn_mod.gqa_axes(cfg, pd)
+        )
+    if kind in ("ssm", "hybrid"):
+        ax["ssm"] = ssm_mod.ssm_axes(cfg, tp)
+    if kind == "hybrid":
+        ax["norm_attn"] = (None,)
+        ax["norm_ssm"] = (None,)
+    if kind == "moe":
+        ax["moe"] = moe_mod.moe_axes(cfg, tp)
+        if cfg.n_shared_experts:
+            ax["shared"] = _mlp_like_axes(cfg.gated_mlp)
+        ax["ln2"] = (None,)
+    elif kind in ("attn", "hybrid") and d_ff > 0:
+        ax["mlp"] = _mlp_like_axes(cfg.gated_mlp)
+        ax["ln2"] = (None,)
+    return ax
+
+
+# ---------------------------------------------------------------- forward -----
+
+
+def block_forward(
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    ctx: MeshCtx | None,
+    *,
+    kind: str,
+    window,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> tuple[jax.Array, tuple, jax.Array]:
+    """Returns (x_out, cache_entries, aux_loss). ``window`` may be a
+    static int (0 = global) or a traced per-layer scalar."""
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    cache_entries: tuple = ()
+
+    attn_out = None
+    if kind in ("attn", "moe", "hybrid"):
+        if cfg.attention == "mla":
+            attn_out, (ckv, krope) = attn_mod.mla_forward(
+                p["attn"], xn, positions, cfg, pd, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                window=window,
+            )
+            cache_entries += (ckv, krope)
+        else:
+            attn_out, (k, v) = attn_mod.gqa_forward(
+                p["attn"], xn, positions, cfg, pd, window=window,
+                q_chunk=q_chunk, kv_chunk=kv_chunk,
+            )
+            cache_entries += (k, v)
+
+    ssm_out = None
+    if kind in ("ssm", "hybrid"):
+        ssm_out, ssm_state = ssm_mod.ssm_forward(
+            p["ssm"], xn, cfg, ctx.tp_size if ctx else 1, return_state=True
+        )
+        cache_entries += (ssm_state["conv_x"], ssm_state["conv_bc"], ssm_state["state"])
+
+    if kind == "hybrid":
+        mix = 0.5 * (
+            rmsnorm(attn_out, p["norm_attn"], cfg.norm_eps)
+            + rmsnorm(ssm_out, p["norm_ssm"], cfg.norm_eps)
+        )
+        x = x + mix
+    elif kind == "ssm":
+        x = x + ssm_out
+    else:
+        x = x + attn_out
+
+    if "ln2" in p:
+        xn2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        h = jnp.zeros_like(x)
+        if "shared" in p:
+            h = h + mlp_apply(p["shared"], xn2, cfg.act, cfg.gated_mlp)
+        if "moe" in p:
+            y, a = moe_mod.moe_forward(p["moe"], xn2, cfg, ctx)
+            h = h + y.astype(x.dtype)
+            aux = aux + cfg.moe_aux_alpha * a
+        if "mlp" in p:
+            h = h + mlp_apply(p["mlp"], xn2, cfg.act, cfg.gated_mlp)
+        x = x + h
+    return x, cache_entries, aux
+
+
+# ---------------------------------------------------------------- decode ------
+
+
+def _dp_spec(ctx: MeshCtx):
+    if not ctx.shard_batch:
+        return None
+    return ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+
+def _attend_gqa_sharded(
+    ctx: MeshCtx | None,
+    q,  # [B,1,Hq,Dh]
+    k_new,  # [B,Hkv,Dh]
+    v_new,
+    ck,  # [B,S,Hkv,Dh]
+    cv,
+    pos,
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    window,
+):
+    """Cache write + flash-decoding, seq-sharded over the model axis."""
+
+    def local(q, k_new, v_new, ck, cv, pos, axis_name):
+        B, S_loc = ck.shape[0], ck.shape[1]
+        base = (
+            jax.lax.axis_index(axis_name) * S_loc if axis_name is not None else 0
+        )
+        slot = pos - base
+        owns = (slot >= 0) & (slot < S_loc)
+        slot_c = jnp.clip(slot, 0, S_loc - 1)
+        old_k = jax.lax.dynamic_slice(ck, (0, slot_c, 0, 0), (B, 1) + ck.shape[2:])
+        old_v = jax.lax.dynamic_slice(cv, (0, slot_c, 0, 0), (B, 1) + cv.shape[2:])
+        wk = jnp.where(owns, k_new[:, None].astype(ck.dtype), old_k)
+        wv = jnp.where(owns, v_new[:, None].astype(cv.dtype), old_v)
+        ck = jax.lax.dynamic_update_slice(ck, wk, (0, slot_c, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, wv, (0, slot_c, 0, 0))
+        kv_pos = base + jnp.arange(S_loc, dtype=jnp.int32)
+        o = attn_mod.gqa_attend_decode(
+            q, ck, cv, kv_pos, pos, cfg, pd, window=window, axis_name=axis_name
+        )
+        return o, ck, cv
+
+    if ctx is None:
+        return local(q, k_new, v_new, ck, cv, pos, None)
+
+    dp = _dp_spec(ctx)
+    f = jax.shard_map(
+        lambda *a: local(*a, ctx.tp_axis),
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp, None, None, None),
+            P(dp, None, None),
+            P(dp, None, None),
+            P(dp, "model", None, None),
+            P(dp, "model", None, None),
+            P(),
+        ),
+        out_specs=(P(dp, None, None), P(dp, "model", None, None), P(dp, "model", None, None)),
+        check_vma=False,
+    )
+    return f(q, k_new, v_new, ck, cv, pos)
+
+
+def _attend_mla_sharded(
+    ctx: MeshCtx | None,
+    q_eff,  # [B,1,H,rkv] — q_nope absorbed through W_uk
+    q_rope,  # [B,1,H,dr]
+    c_new,  # [B,rkv]
+    kr_new,  # [B,dr]
+    ckv,  # [B,S,rkv]
+    krope,  # [B,S,dr]
+    pos,
+    cfg: ArchConfig,
+    pd: PaddedDims,
+):
+    def local(q_eff, q_rope, c_new, kr_new, ckv, krope, pos, axis_name):
+        B, S_loc = ckv.shape[0], ckv.shape[1]
+        base = jax.lax.axis_index(axis_name) * S_loc if axis_name is not None else 0
+        slot = pos - base
+        owns = (slot >= 0) & (slot < S_loc)
+        slot_c = jnp.clip(slot, 0, S_loc - 1)
+        old_c = jax.lax.dynamic_slice(ckv, (0, slot_c, 0), (B, 1, ckv.shape[2]))
+        old_r = jax.lax.dynamic_slice(krope, (0, slot_c, 0), (B, 1, krope.shape[2]))
+        wc = jnp.where(owns, c_new[:, None].astype(ckv.dtype), old_c)
+        wr = jnp.where(owns, kr_new[:, None].astype(krope.dtype), old_r)
+        ckv = jax.lax.dynamic_update_slice(ckv, wc, (0, slot_c, 0))
+        krope = jax.lax.dynamic_update_slice(krope, wr, (0, slot_c, 0))
+        kv_pos = base + jnp.arange(S_loc, dtype=jnp.int32)
+        ctx_lat = attn_mod.mla_attend_decode(
+            q_eff, q_rope, ckv, krope, kv_pos, pos, cfg, pd, axis_name=axis_name
+        )
+        return ctx_lat, ckv, krope
+
+    if ctx is None:
+        return local(q_eff, q_rope, c_new, kr_new, ckv, krope, pos, None)
+
+    dp = _dp_spec(ctx)
+    f = jax.shard_map(
+        lambda *a: local(*a, ctx.tp_axis),
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp, None, None, None),
+            P(dp, None, None, None),
+            P(dp, None),
+            P(dp, None),
+            P(dp, "model", None),
+            P(dp, "model", None),
+            P(),
+        ),
+        out_specs=(P(dp, None, None), P(dp, "model", None), P(dp, "model", None)),
+        check_vma=False,
+    )
+    return f(q_eff, q_rope, c_new, kr_new, ckv, krope, pos)
+
+
+def block_decode(
+    p: Params,
+    x: jax.Array,  # [B, 1, D]
+    cache: tuple,  # per-layer cache entries (matches block_forward order)
+    pos,
+    cfg: ArchConfig,
+    pd: PaddedDims,
+    ctx: MeshCtx | None,
+    *,
+    kind: str,
+    window,
+) -> tuple[jax.Array, tuple]:
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_cache: tuple = ()
+
+    attn_out = None
+    ssm_in_cache_offset = 0
+    if kind in ("attn", "moe", "hybrid"):
+        if cfg.attention == "mla":
+            ckv, krope = cache[0], cache[1]
+            ssm_in_cache_offset = 2
+            q_nope, q_rope, c_new, kr_new = attn_mod.mla_project_decode(
+                p["attn"], xn, pos, cfg, pd
+            )
+            rkv, h = cfg.kv_lora_rank, pd.n_heads
+            wk_b = p["attn"]["wk_b"].reshape(rkv, h, cfg.qk_nope_dim)
+            q_eff = jnp.einsum(
+                "bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wk_b.astype(jnp.float32)
+            )
+            ctx_lat, ckv, krope = _attend_mla_sharded(
+                ctx, q_eff, q_rope, c_new, kr_new, ckv, krope, pos, cfg, pd
+            )
+            wv_b = p["attn"]["wv_b"].reshape(rkv, h, cfg.v_head_dim)
+            o_heads = jnp.einsum(
+                "bhr,rhd->bhd", ctx_lat.astype(jnp.float32), wv_b.astype(jnp.float32)
+            )
+            attn_out = dense(
+                o_heads.astype(x.dtype).reshape(x.shape[0], 1, h * cfg.v_head_dim),
+                p["attn"]["wo"],
+            )
+            new_cache += (ckv, krope)
+        else:
+            ck, cv = cache[0], cache[1]
+            ssm_in_cache_offset = 2
+            q, k_new, v_new = attn_mod.gqa_project_decode(p["attn"], xn, pos, cfg, pd)
+            o, ck, cv = _attend_gqa_sharded(
+                ctx, q, k_new, v_new, ck, cv, pos, cfg, pd, window
+            )
+            attn_out = dense(o, p["attn"]["wo"])
+            new_cache += (ck, cv)
+
+    ssm_out = None
+    if kind in ("ssm", "hybrid"):
+        state = {
+            "conv_x": cache[ssm_in_cache_offset],
+            "conv_bc": cache[ssm_in_cache_offset + 1],
+            "state": cache[ssm_in_cache_offset + 2],
+        }
+        ssm_out, ns = ssm_mod.ssm_decode(p["ssm"], xn, state, cfg, ctx.tp_size if ctx else 1)
+        new_cache += (ns["conv_x"], ns["conv_bc"], ns["state"])
+
+    if kind == "hybrid":
+        mix = 0.5 * (
+            rmsnorm(attn_out, p["norm_attn"], cfg.norm_eps)
+            + rmsnorm(ssm_out, p["norm_ssm"], cfg.norm_eps)
+        )
+        x = x + mix
+    elif kind == "ssm":
+        x = x + ssm_out
+    else:
+        x = x + attn_out
+
+    if "ln2" in p:
+        xn2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        h = jnp.zeros_like(x)
+        if "shared" in p:
+            h = h + mlp_apply(p["shared"], xn2, cfg.act, cfg.gated_mlp)
+        if "moe" in p:
+            y, _ = moe_mod.moe_forward(p["moe"], xn2, cfg, ctx)
+            h = h + y.astype(x.dtype)
+        if "mlp" in p:
+            h = h + mlp_apply(p["mlp"], xn2, cfg.act, cfg.gated_mlp)
+        x = x + h
+    return x, new_cache

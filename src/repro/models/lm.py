@@ -1,0 +1,498 @@
+"""Unified decoder LM over all assigned architectures.
+
+Layers are organized into *stacks* (homogeneous runs of blocks executed
+with `lax.scan` over stacked params — HLO size is depth-independent).
+Most archs have one stack; DeepSeek-V3 has a dense prefix stack + an MoE
+stack. Per-layer sliding windows (Hymba) ride along the scan as a traced
+array.
+
+Entry points:
+  init_lm / lm_axes       — params pytree + logical sharding axes
+  forward_train           — full-seq forward → (loss, metrics)
+  prefill                 — full-seq forward → (last-token logits, cache)
+  decode_step             — one token + cache → (logits, cache)
+  init_cache              — zeroed cache pytree for a given (B, S_alloc)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.padding import PaddedDims, padded_dims
+from repro.parallel.pipeline import pipeline_available, pipeline_stack_forward
+from repro.parallel.sharding import MeshCtx
+from . import blocks as blk
+from . import ssm as ssm_mod
+from .config import ArchConfig
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = [
+    "StackSpec",
+    "stacks_for",
+    "init_lm",
+    "lm_axes",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_axes",
+]
+
+
+#: when True, stacks run as unrolled python loops instead of lax.scan —
+#: set by launch.roofline so HLO cost_analysis (which counts a while-loop
+#: body once, ignoring trip count) sees every layer. Production always
+#: uses the scan (depth-independent HLO).
+ANALYSIS_UNROLL_LAYERS = False
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSpec:
+    name: str
+    kind: str  # "attn" | "moe" | "ssm" | "hybrid"
+    n_layers: int
+    d_ff: int  # dense-MLP width inside the block (0 = none)
+
+
+def stacks_for(cfg: ArchConfig) -> list[StackSpec]:
+    if cfg.family == "ssm":
+        return [StackSpec("main", "ssm", cfg.n_layers, 0)]
+    if cfg.family == "hybrid":
+        return [StackSpec("main", "hybrid", cfg.n_layers, cfg.d_ff)]
+    if cfg.is_moe:
+        stacks = []
+        if cfg.first_k_dense:
+            stacks.append(StackSpec("dense", "attn", cfg.first_k_dense, cfg.dense_d_ff))
+        stacks.append(StackSpec("moe", "moe", cfg.n_layers - cfg.first_k_dense, 0))
+        return stacks
+    return [StackSpec("main", "attn", cfg.n_layers, cfg.d_ff)]
+
+
+def _windows_for(cfg: ArchConfig, spec: StackSpec, layer_offset: int) -> np.ndarray | int:
+    """Per-layer sliding windows; 0 → global (static skip of the mask)."""
+    if cfg.sliding_window <= 0:
+        return 0
+    glob = set(cfg.global_layers)
+    return np.array(
+        [
+            blk.GLOBAL_WINDOW if (layer_offset + i) in glob else cfg.sliding_window
+            for i in range(spec.n_layers)
+        ],
+        dtype=np.int32,
+    )
+
+
+# ---------------------------------------------------------------- init --------
+
+
+def init_lm(key, cfg: ArchConfig, tp: int = 1) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    pd = padded_dims(cfg, tp)
+    keys = jax.random.split(key, 8)
+    params: Params = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = (
+            jax.random.normal(keys[0], (pd.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    off = 0
+    for i, spec in enumerate(stacks_for(cfg)):
+        lkeys = jax.random.split(jax.random.fold_in(keys[1], i), spec.n_layers)
+        params[f"stack_{spec.name}"] = jax.vmap(
+            lambda k: blk.init_block(k, cfg, pd, tp, dtype, spec.kind, spec.d_ff)
+        )(lkeys)
+        off += spec.n_layers
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            params["head"] = jax.vmap(
+                lambda k: dense_init(k, cfg.d_model, pd.vocab_size, dtype)
+            )(jax.random.split(keys[2], cfg.n_codebooks))
+        else:
+            params["head"] = dense_init(keys[2], cfg.d_model, pd.vocab_size, dtype)
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": dense_init(keys[3], 2 * cfg.d_model, cfg.d_model, dtype),
+            "block": blk.init_block(
+                keys[4], cfg, pd, tp, dtype, "attn", cfg.dense_d_ff or cfg.d_ff or 4 * cfg.d_model
+            ),
+            "norm": rmsnorm_init(cfg.d_model),
+        }
+    return params
+
+
+def lm_axes(cfg: ArchConfig, tp: int = 1, *, serve: bool = False,
+            ep_over_data: bool = False) -> Params:
+    """Logical sharding axes. ``serve=True`` switches to inference-time
+    placement: no ZeRO/FSDP gathers (weights pure-TP: "fsdp"→replicated,
+    expert d_ff unsharded); ``ep_over_data`` additionally spreads experts
+    over (data, model) — global EP for big-MoE serving (caller checks the
+    expert count divides the mesh)."""
+    pd = padded_dims(cfg, tp)
+    ax: Params = {}
+    if cfg.input_mode == "tokens":
+        ax["embed"] = ("vocab", None)  # row-sharded: gather → select+psum
+    for spec in stacks_for(cfg):
+        bax = blk.block_axes(cfg, pd, tp, spec.kind, spec.d_ff)
+        # prepend the stacked layer axis
+        ax[f"stack_{spec.name}"] = jax.tree.map(
+            lambda axes: ("layers",) + tuple(axes),
+            bax,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+        )
+    ax["final_norm"] = (None,)
+    if not cfg.tie_embeddings:
+        ax["head"] = (None, "fsdp", "vocab") if cfg.n_codebooks > 1 else ("fsdp", "vocab")
+    if cfg.mtp:
+        ax["mtp"] = {
+            "proj": ("fsdp", None),
+            "block": blk.block_axes(cfg, pd, tp, "attn", cfg.dense_d_ff or cfg.d_ff or 4 * cfg.d_model),
+            "norm": (None,),
+        }
+    if serve:
+        def _serve_axes(axes):
+            return tuple(
+                None if a in ("fsdp", "expert_mlp")
+                else ("experts_serve" if (a == "experts" and ep_over_data) else a)
+                for a in axes
+            )
+
+        ax = jax.tree.map(
+            _serve_axes, ax,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+    return ax
+
+
+# ---------------------------------------------------------------- embed/head ---
+
+
+def _embed_in(params: Params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def _logits(params: Params, x: jax.Array, cfg: ArchConfig, pd: PaddedDims) -> jax.Array:
+    """x [..., D] → logits [..., V_pad] (or [..., CB, V_pad]); pad vocab
+    masked to -inf so it never receives probability mass."""
+    if cfg.tie_embeddings:
+        w = params["embed"].T  # [D, V_pad]
+        logits = dense(x, w)
+    elif cfg.n_codebooks > 1:
+        logits = jnp.einsum("...d,cdv->...cv", x, params["head"]).astype(x.dtype)
+    else:
+        logits = dense(x, params["head"])
+    if pd.vocab_size != cfg.vocab_size:
+        mask = jnp.arange(pd.vocab_size) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over labels >= 0. logits [..., V], labels [...]."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    valid = (labels >= 0).astype(jnp.float32)
+    total = jnp.maximum(valid.sum(), 1.0)
+    return jnp.sum(nll * valid) / total, total
+
+
+# ---------------------------------------------------------------- stacks -------
+
+
+def _run_stack_forward(
+    stack_params,
+    spec: StackSpec,
+    x,
+    positions,
+    cfg,
+    pd,
+    ctx,
+    *,
+    remat: str,
+    collect_cache: bool,
+    q_chunk: int,
+    kv_chunk: int,
+    layer_offset: int,
+):
+    windows = _windows_for(cfg, spec, layer_offset)
+    static_window = isinstance(windows, int)
+
+    def body(x, inp):
+        p_l = inp[0]
+        window = 0 if static_window else inp[1]
+        x, cache, aux = blk.block_forward(
+            p_l, x, positions, cfg, pd, ctx,
+            kind=spec.kind, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        return x, ((cache if collect_cache else ()), aux)
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False,
+        )
+
+    xs = (stack_params,) if static_window else (stack_params, jnp.asarray(windows))
+    if ANALYSIS_UNROLL_LAYERS:
+        caches_l, aux_l = [], []
+        for i in range(spec.n_layers):
+            inp = jax.tree.map(lambda a: a[i], xs)
+            x, (c, a) = body(x, inp)
+            caches_l.append(c)
+            aux_l.append(a)
+        caches = jax.tree.map(lambda *ls: jnp.stack(ls), *caches_l) if caches_l and caches_l[0] else ()
+        return x, caches, jnp.sum(jnp.stack(aux_l))
+    x, (caches, auxes) = jax.lax.scan(body, x, xs)
+    return x, caches, jnp.sum(auxes)
+
+
+# ---------------------------------------------------------------- train --------
+
+
+def forward_train(
+    params: Params,
+    batch: dict,
+    cfg: ArchConfig,
+    ctx: MeshCtx | None = None,
+    *,
+    remat: str = "dots",
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    pipeline_micro: int = 0,
+) -> tuple[jax.Array, dict]:
+    """batch: {"tokens" | "embeds", "labels"} → (loss, metrics).
+
+    ``pipeline_micro > 0`` runs eligible stacks as a GPipe pipeline over
+    the ``pod`` mesh axis with that many microbatches (see
+    parallel/pipeline.py for scope)."""
+    tp = ctx.tp_size if ctx else 1
+    pd = padded_dims(cfg, tp)
+    x = _embed_in(params, batch, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    off = 0
+    for spec in stacks_for(cfg):
+        use_pp = (
+            pipeline_micro > 0
+            and pipeline_available(ctx, spec.kind, spec.n_layers)
+            and isinstance(_windows_for(cfg, spec, off), int)
+        )
+        if use_pp:
+            def body(p_l, xb, pos):
+                y, _, _ = blk.block_forward(
+                    p_l, xb, pos, cfg, pd, ctx, kind=spec.kind, window=0,
+                    q_chunk=q_chunk, kv_chunk=kv_chunk,
+                )
+                return y
+
+            if remat in ("full", "dots"):
+                body = jax.checkpoint(body, prevent_cse=False)
+            x = pipeline_stack_forward(
+                params[f"stack_{spec.name}"], body, x, positions, ctx,
+                n_micro=pipeline_micro,
+            )
+            off += spec.n_layers
+            continue
+        x, _, aux = _run_stack_forward(
+            params[f"stack_{spec.name}"], spec, x, positions, cfg, pd, ctx,
+            remat=remat, collect_cache=False, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            layer_offset=off,
+        )
+        off += spec.n_layers
+        aux_total = aux_total + aux
+
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, h, cfg, pd)
+    loss, n_tok = _xent(logits, batch["labels"])
+    metrics = {"ce": loss, "aux": aux_total, "tokens": n_tok}
+
+    if cfg.mtp and "mtp" in params:
+        # predict token t+2: combine h_t with the embedding of token t+1
+        emb_next = _embed_in(params, batch, cfg)  # embeddings of input tokens
+        comb = jnp.concatenate([h[:, :-1], emb_next[:, 1:]], axis=-1)
+        hm = dense(comb, params["mtp"]["proj"])
+        hm, _, _ = blk.block_forward(
+            params["mtp"]["block"], hm, positions[:, :-1], cfg, pd, ctx,
+            kind="attn", window=0, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        hm = rmsnorm(hm, params["mtp"]["norm"], cfg.norm_eps)
+        mtp_logits = _logits(params, hm, cfg, pd)
+        mtp_labels = batch["labels"][:, 1:]
+        mtp_loss, _ = _xent(mtp_logits, mtp_labels)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+
+    return loss + aux_total, metrics
+
+
+# ---------------------------------------------------------------- cache --------
+
+
+def _cache_entry_shapes(cfg: ArchConfig, pd: PaddedDims, spec: StackSpec, B: int, S: int, tp: int):
+    """(name, shape, dtype, logical_axes) per cache leaf of one stack."""
+    dt = jnp.dtype(cfg.dtype)
+    L = spec.n_layers
+    out = []
+    if spec.kind in ("attn", "moe", "hybrid"):
+        if cfg.attention == "mla":
+            out.append(("ckv", (L, B, S, cfg.kv_lora_rank), dt, ("layers", "batch", "kv_seq", None)))
+            out.append(("krope", (L, B, S, cfg.qk_rope_dim), dt, ("layers", "batch", "kv_seq", None)))
+        else:
+            kv = (L, B, S, pd.n_kv_heads, cfg.d_head)
+            ax = ("layers", "batch", "kv_seq", None, None)
+            out.append(("k", kv, dt, ax))
+            out.append(("v", kv, dt, ax))
+    if spec.kind in ("ssm", "hybrid"):
+        dims = ssm_mod.ssm_dims(cfg, tp)
+        out.append(
+            ("conv_x", (L, B, cfg.ssm_conv - 1, dims["di"]), dt, ("layers", "batch", None, "heads"))
+        )
+        out.append(
+            ("conv_bc", (L, B, cfg.ssm_conv - 1, 2 * dims["N"]), dt, ("layers", "batch", None, None))
+        )
+        out.append(
+            (
+                "state",
+                (L, B, dims["H_pad"], dims["P"], dims["N"]),
+                jnp.float32,
+                ("layers", "batch", "heads", None, None),
+            )
+        )
+    return out
+
+
+def init_cache(cfg: ArchConfig, B: int, S_alloc: int, tp: int = 1) -> Params:
+    pd = padded_dims(cfg, tp)
+    cache: Params = {}
+    for spec in stacks_for(cfg):
+        for name, shape, dt, _ in _cache_entry_shapes(cfg, pd, spec, B, S_alloc, tp):
+            cache[f"{spec.name}/{name}"] = jnp.zeros(shape, dt)
+    return cache
+
+
+def cache_axes(cfg: ArchConfig, B: int, S_alloc: int, tp: int = 1) -> Params:
+    pd = padded_dims(cfg, tp)
+    ax: Params = {}
+    for spec in stacks_for(cfg):
+        for name, _, _, axes in _cache_entry_shapes(cfg, pd, spec, B, S_alloc, tp):
+            ax[f"{spec.name}/{name}"] = axes
+    return ax
+
+
+# ---------------------------------------------------------------- prefill ------
+
+
+def prefill(
+    params: Params,
+    batch: dict,
+    cfg: ArchConfig,
+    ctx: MeshCtx | None = None,
+    *,
+    s_alloc: int | None = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> tuple[jax.Array, Params]:
+    """Full-prompt forward → (logits of last position, primed cache)."""
+    tp = ctx.tp_size if ctx else 1
+    pd = padded_dims(cfg, tp)
+    x = _embed_in(params, batch, cfg)
+    B, S = x.shape[:2]
+    s_alloc = s_alloc or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    cache: Params = {}
+    off = 0
+    for spec in stacks_for(cfg):
+        x, caches, _ = _run_stack_forward(
+            params[f"stack_{spec.name}"], spec, x, positions, cfg, pd, ctx,
+            remat="none", collect_cache=True, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            layer_offset=off,
+        )
+        off += spec.n_layers
+        names = [e[0] for e in _cache_entry_shapes(cfg, pd, spec, B, s_alloc, tp)]
+        # caches: tuple of stacked [L, B, S, ...] arrays in block order; the
+        # SSD state is not produced by the full-seq path (prefill of SSM
+        # archs re-runs the tail step-wise or uses return_state) — attn
+        # entries first, in order.
+        for name, arr in zip(names, caches):
+            if arr.shape[2] != s_alloc and name in ("k", "v", "ckv", "krope"):
+                pad = [(0, 0)] * arr.ndim
+                pad[2] = (0, s_alloc - arr.shape[2])
+                arr = jnp.pad(arr, pad)
+            cache[f"{spec.name}/{name}"] = arr
+
+    h = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, h, cfg, pd)[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------- decode -------
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    batch_t: dict,  # {"tokens": [B,1]} or {"embeds": [B,1,D]}
+    pos: jax.Array,  # scalar int32 — position being generated
+    cfg: ArchConfig,
+    ctx: MeshCtx | None = None,
+) -> tuple[jax.Array, Params]:
+    """One decode step → (logits [B, V(·CB)], updated cache)."""
+    tp = ctx.tp_size if ctx else 1
+    pd = padded_dims(cfg, tp)
+    x = _embed_in(params, batch_t, cfg)
+
+    new_cache: Params = {}
+    off = 0
+    for spec in stacks_for(cfg):
+        names = [e[0] for e in _cache_entry_shapes(cfg, pd, spec, 1, 1, tp)]
+        stack_cache = tuple(cache[f"{spec.name}/{n}"] for n in names)
+        windows = _windows_for(cfg, spec, off)
+        static_window = isinstance(windows, int)
+
+        def body(x, inp):
+            p_l = inp[0]
+            cache_l = tuple(inp[1])
+            window = 0 if static_window else inp[2]
+            x, cache_out = blk.block_decode(
+                p_l, x, cache_l, pos, cfg, pd, ctx, kind=spec.kind, window=window
+            )
+            return x, cache_out
+
+        xs = (params[f"stack_{spec.name}"], list(stack_cache))
+        if not static_window:
+            xs = xs + (jnp.asarray(windows),)
+        if ANALYSIS_UNROLL_LAYERS:
+            outs_l = []
+            for i in range(spec.n_layers):
+                inp = jax.tree.map(lambda a: a[i], xs)
+                x, out_i = body(x, inp)
+                outs_l.append(out_i)
+            outs = jax.tree.map(lambda *ls: jnp.stack(ls), *outs_l)
+        else:
+            x, outs = jax.lax.scan(body, x, xs)
+        for n, arr in zip(names, outs):
+            new_cache[f"{spec.name}/{n}"] = arr
+        off += spec.n_layers
+
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, h, cfg, pd)[:, 0]
+    return logits, new_cache

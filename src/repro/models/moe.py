@@ -1,0 +1,285 @@
+"""Mixture-of-Experts: shared + routed experts, EP over the model axis.
+
+Design (replicated-activation expert parallelism):
+  * activations [B,S,D] are data-parallel over (pod, data) and replicated
+    over ``model``; every model shard routes the same local tokens but
+    owns only E/tp experts, so dispatch/combine are LOCAL (no all_to_all)
+    and one psum over ``model`` merges the partial outputs — the same
+    collective cost as a TP MLP.
+  * expert weights are additionally FSDP-sharded on d_ff over (pod,data)
+    and all-gathered in-layer (ZeRO-3), so a 671B MoE fits 512 chips.
+  * capacity-factor dispatch (static shapes): per-shard capacity
+    C = ceil(T_loc · top_k · cf / E); overflow tokens drop (scatter mode
+    'drop'), underflow slots are zero rows.
+  * shared experts are an always-on dense MLP in plain pjit-land.
+
+``ctx=None`` (smoke tests) runs the identical code with E_loc = E and no
+collectives.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import MeshCtx
+from .config import ArchConfig
+from .layers import Params, dense_init
+
+__all__ = ["init_moe", "moe_axes", "moe_forward"]
+
+
+def _e_pad(cfg: ArchConfig, tp: int) -> int:
+    return -(-cfg.n_experts // tp) * tp
+
+
+def init_moe(key, cfg: ArchConfig, tp: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.moe_d_ff
+    E = _e_pad(cfg, tp)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "wi": (jax.random.truncated_normal(ks[1], -2, 2, (E, d, f)) * std).astype(dtype),
+        "wg": (jax.random.truncated_normal(ks[2], -2, 2, (E, d, f)) * std).astype(dtype),
+        "wo": (
+            jax.random.truncated_normal(ks[3], -2, 2, (E, f, d)) * (1.0 / math.sqrt(f))
+        ).astype(dtype),
+    }
+    return p
+
+
+def moe_axes(cfg: ArchConfig, tp: int) -> Params:
+    return {
+        "router": (None, None),
+        "wi": ("experts", None, "expert_mlp"),
+        "wg": ("experts", None, "expert_mlp"),
+        "wo": ("experts", "expert_mlp", None),
+    }
+
+
+def _route(cfg: ArchConfig, logits: jax.Array, e_valid: int):
+    """Top-k routing. Returns (expert_idx [T,k], gates [T,k], probs [T,E])."""
+    mask = jnp.arange(logits.shape[-1]) < e_valid  # pad experts never win
+    logits = jnp.where(mask, logits, -1e30)
+    if cfg.router_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        probs = scores
+    top, idx = jax.lax.top_k(scores, cfg.moe_top_k)
+    gates = top / jnp.maximum(top.sum(-1, keepdims=True), 1e-9)
+    return idx, gates.astype(jnp.float32), probs
+
+
+def _moe_local(
+    x: jax.Array,  # [T, D] local tokens (replicated over model)
+    p: Params,  # wi/wg/wo already gathered to full d_ff; router full
+    e_offset,  # scalar — first expert id owned by this shard
+    E_local: int,
+    cfg: ArchConfig,
+    act,
+) -> tuple[jax.Array, jax.Array]:
+    """Partial MoE output using only the local experts + aux-loss stats."""
+    T, D = x.shape
+    E = p["router"].shape[-1]
+    k = cfg.moe_top_k
+    C = max(1, int(math.ceil(T * k * cfg.capacity_factor / cfg.n_experts)))
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    idx, gates, probs = _route(cfg, logits, cfg.n_experts)
+
+    # local expert slot for each (token, k): in [0, E_local) or out-of-range
+    local_e = idx - e_offset  # [T, k]
+    is_local = (local_e >= 0) & (local_e < E_local)
+    flat_e = jnp.where(is_local, local_e, E_local).reshape(-1)  # E_local = drop row
+    # position of each assignment within its expert (over T·k flattened order)
+    onehot = jax.nn.one_hot(flat_e, E_local + 1, dtype=jnp.int32)  # [T*k, E+1]
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [T*k]
+    slot = jnp.where(flat_e == E_local, C, slot)  # force drop
+
+    tok = jnp.repeat(jnp.arange(T), k)
+    x_buf = jnp.zeros((E_local, C, D), x.dtype)
+    x_buf = x_buf.at[flat_e, slot].set(x[tok], mode="drop")
+
+    h = jnp.einsum("ecd,edf->ecf", x_buf, p["wi"], preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", x_buf, p["wg"], preferred_element_type=jnp.float32)
+    h = (act(g) * h).astype(x.dtype)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"], preferred_element_type=jnp.float32)
+
+    y_tok = y_buf.at[flat_e, slot].get(mode="fill", fill_value=0.0)  # [T*k, D]
+    gate_flat = gates.reshape(-1) * is_local.reshape(-1)
+    y = jnp.zeros((T, D), jnp.float32).at[tok].add(y_tok * gate_flat[:, None])
+
+    # aux load-balance stats (fraction routed, mean prob) — psum'd by caller
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1)  # [T, E]
+    frac = sel.mean(0)
+    mean_p = probs.mean(0)
+    aux = jnp.sum(frac * mean_p) * cfg.n_experts
+    return y, aux
+
+
+def ep_over_data_ok(cfg: ArchConfig, ctx: MeshCtx | None) -> bool:
+    """Global EP (experts over data×model) requires divisibility."""
+    if ctx is None or "data" not in ctx.mesh.axis_names:
+        return False
+    E = _e_pad(cfg, ctx.tp_size)
+    return E % (ctx.mesh.shape["data"] * ctx.tp_size) == 0
+
+
+def moe_forward(
+    p: Params,
+    x: jax.Array,  # [B, S, D]
+    cfg: ArchConfig,
+    ctx: MeshCtx | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Routed-expert output (shared experts handled by the caller's MLP).
+
+    Returns (y [B,S,D], aux_loss scalar).
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+
+    if ctx is None:
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        y, aux = _moe_local(x.reshape(B * S, D), p, 0, E, cfg, act)
+        return y.reshape(B, S, D).astype(x.dtype), aux
+
+    if ctx.serve_ep and ep_over_data_ok(cfg, ctx):
+        return _moe_global_ep(p, x, cfg, ctx)
+
+    tp = ctx.tp_size
+    E_local = E // tp
+    dp_spec = (
+        (ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]) if ctx.shard_batch else None
+    )
+    fsdp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+    def shard_fn(x_loc, router, wi, wg, wo):
+        # gather the FSDP-sharded d_ff in-layer (ZeRO-3)
+        wi = jax.lax.all_gather(wi, ctx.dp_axes, axis=2, tiled=True)
+        wg = jax.lax.all_gather(wg, ctx.dp_axes, axis=2, tiled=True)
+        wo = jax.lax.all_gather(wo, ctx.dp_axes, axis=1, tiled=True)
+        e_offset = jax.lax.axis_index(ctx.tp_axis) * E_local
+        Bl, Sl, Dl = x_loc.shape
+        y, aux = _moe_local(
+            x_loc.reshape(Bl * Sl, Dl),
+            {"router": router, "wi": wi, "wg": wg, "wo": wo},
+            e_offset,
+            E_local,
+            cfg,
+            jax.nn.silu if cfg.act == "silu" else jax.nn.gelu,
+        )
+        y = jax.lax.psum(y, ctx.tp_axis)
+        aux = jax.lax.psum(aux, ctx.tp_axis) / tp  # same stats on every shard
+        return y.reshape(Bl, Sl, Dl).astype(x_loc.dtype), aux
+
+    if ctx.serve_ep:
+        # serving without global EP: expert weights model-sharded only,
+        # no FSDP gather — skip the in-layer all_gathers.
+        def shard_fn_serve(x_loc, router, wi, wg, wo):
+            e_offset = jax.lax.axis_index(ctx.tp_axis) * E_local
+            Bl, Sl, Dl = x_loc.shape
+            y, aux = _moe_local(
+                x_loc.reshape(Bl * Sl, Dl),
+                {"router": router, "wi": wi, "wg": wg, "wo": wo},
+                e_offset, E_local, cfg,
+                jax.nn.silu if cfg.act == "silu" else jax.nn.gelu,
+            )
+            y = jax.lax.psum(y, ctx.tp_axis)
+            return y.reshape(Bl, Sl, Dl).astype(x_loc.dtype), jax.lax.psum(aux, ctx.tp_axis) / tp
+
+        y, aux = jax.shard_map(
+            shard_fn_serve,
+            mesh=ctx.mesh,
+            in_specs=(
+                P(dp_spec, None, None),
+                P(None, None),
+                P("model", None, None),
+                P("model", None, None),
+                P("model", None, None),
+            ),
+            out_specs=(P(dp_spec, None, None), P()),
+            check_vma=False,
+        )(x, p["router"], p["wi"], p["wg"], p["wo"])
+        return y, aux
+
+    y, aux = jax.shard_map(
+        shard_fn,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp_spec, None, None),
+            P(None, None),
+            P("model", None, fsdp),
+            P("model", None, fsdp),
+            P("model", fsdp, None),
+        ),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["wi"], p["wg"], p["wo"])
+    return y, aux
+
+
+def _moe_global_ep(p: Params, x: jax.Array, cfg: ArchConfig, ctx: MeshCtx):
+    """Serving-time global EP: experts sharded over (data, model); token
+    activations are all-gathered across the dp axes (tiny at decode),
+    every chip computes partials for ALL tokens with its E/(data·tp)
+    experts, one psum over (data, model) rebuilds the output, and each
+    dp row keeps its own slice. Collectives: one small all-gather + one
+    [T_global, D] psum — no per-layer weight movement at all."""
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    tp = ctx.tp_size
+    data = ctx.mesh.shape["data"]
+    E_local = E // (data * tp)
+    dp_spec = (
+        (ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]) if ctx.shard_batch else None
+    )
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    has_pod = "pod" in ctx.mesh.axis_names
+
+    def shard_fn(x_loc, router, wi, wg, wo):
+        if dp_spec is not None:
+            x_all = jax.lax.all_gather(x_loc, ctx.dp_axes, axis=0, tiled=True)
+        else:
+            x_all = x_loc
+        Bg, Sl, Dl = x_all.shape
+        e_offset = (
+            jax.lax.axis_index("data") * tp + jax.lax.axis_index(ctx.tp_axis)
+        ) * E_local
+        y, aux = _moe_local(
+            x_all.reshape(Bg * Sl, Dl),
+            {"router": router, "wi": wi, "wg": wg, "wo": wo},
+            e_offset, E_local, cfg, act,
+        )
+        y = jax.lax.psum(y, ("data", ctx.tp_axis))
+        aux = jax.lax.psum(aux, ("data", ctx.tp_axis)) / (data * tp)
+        y = y.reshape(Bg, Sl, Dl)
+        if dp_spec is not None:
+            # keep this dp row's slice
+            idx = jax.lax.axis_index("data")
+            if has_pod:
+                idx = jax.lax.axis_index("pod") * data + idx
+            Bl = x_loc.shape[0]
+            y = jax.lax.dynamic_slice(y, (idx * Bl, 0, 0), (Bl, Sl, Dl))
+        return y.astype(x_loc.dtype), aux
+
+    y, aux = jax.shard_map(
+        shard_fn,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp_spec, None, None),
+            P(None, None),
+            P(("data", "model"), None, None),
+            P(("data", "model"), None, None),
+            P(("data", "model"), None, None),
+        ),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["wi"], p["wg"], p["wo"])
+    return y, aux

@@ -1,0 +1,231 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Train/prefill: `lax.scan` over sequence chunks of length Q; within a
+chunk the quadratic "attention-like" form (masked decay matrix L) runs on
+the MXU, across chunks the O(1) state [B, H, P, N] is carried — per-step
+memory is O(B·H·Q²), independent of S (long_500k-safe).
+
+Decode: exact O(1) recurrent step on (conv_state, ssm_state).
+
+TP: heads are sharded over the ``model`` axis (padded to a multiple —
+pad heads have zero dt/out_proj so contribute nothing); the shared B/C
+projections (ngroups=1) are replicated. The fused in_proj of the
+reference implementation is split into (w_xz, w_bc, w_dt) so each part
+shards cleanly — mathematically identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense, dense_init, rmsnorm
+
+__all__ = ["ssm_dims", "init_ssm", "ssm_axes", "ssm_forward", "ssm_decode", "init_ssm_state"]
+
+
+def ssm_dims(cfg: ArchConfig, tp: int) -> dict[str, int]:
+    """Padded SSD dimensions for tensor-parallel degree ``tp``."""
+    P = cfg.ssm_head_dim
+    H = cfg.d_inner // P
+    H_pad = -(-H // tp) * tp if tp > 1 else H
+    return {
+        "P": P,
+        "H": H,
+        "H_pad": H_pad,
+        "di": H_pad * P,
+        "N": cfg.ssm_state,
+        "conv": cfg.ssm_conv,
+    }
+
+
+def init_ssm(key, cfg: ArchConfig, tp: int, dtype) -> Params:
+    dims = ssm_dims(cfg, tp)
+    d, di, N, H = cfg.d_model, dims["di"], dims["N"], dims["H_pad"]
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(
+        jax.random.uniform(ks[5], (H,)) * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+    )
+    p = {
+        "w_xz": dense_init(ks[0], d, 2 * di, dtype),
+        "w_bc": dense_init(ks[1], d, 2 * N, dtype),
+        "w_dt": dense_init(ks[2], d, H, dtype),
+        "conv_x": (jax.random.normal(ks[3], (cfg.ssm_conv, di)) * 0.1).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[4], (cfg.ssm_conv, 2 * N)) * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (jnp.log(jnp.expm1(dt))).astype(jnp.float32),
+        "out_norm": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[6], di, d, dtype),
+    }
+    # zero the pad heads end-to-end
+    if dims["H_pad"] != dims["H"]:
+        P = dims["P"]
+        live = dims["H"] * P
+        p["w_xz"] = p["w_xz"].at[:, live : di].set(0.0)  # x part
+        p["w_xz"] = p["w_xz"].at[:, di + live :].set(0.0)  # z part
+        p["w_out"] = p["w_out"].at[live:, :].set(0.0)
+        p["D"] = p["D"].at[dims["H"] :].set(0.0)
+    return p
+
+
+def ssm_axes(cfg: ArchConfig, tp: int) -> Params:
+    return {
+        "w_xz": ("fsdp", "heads"),
+        "w_bc": ("fsdp", None),
+        "w_dt": ("fsdp", "heads"),
+        "conv_x": (None, "heads"),
+        "conv_bc": (None, None),
+        "conv_x_b": ("heads",),
+        "conv_bc_b": (None,),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "out_norm": ("heads",),
+        "w_out": ("heads", "fsdp"),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x [B,S,C], w [K,C] → causal depthwise conv, silu activation."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssm_forward(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    tp: int,
+    *,
+    chunk: int | None = None,
+    return_state: bool = False,
+):
+    """Full-sequence SSD. x [B,S,D] → y [B,S,D] (+ final recurrent state
+    when ``return_state`` — used by prefill to prime the decode cache)."""
+    dims = ssm_dims(cfg, tp)
+    B, S, _ = x.shape
+    di, N, H, P = dims["di"], dims["N"], dims["H_pad"], dims["P"]
+    Q = min(chunk or cfg.ssm_chunk, S)
+    while S % Q:  # largest divisor ≤ requested chunk (keeps maths exact)
+        Q -= 1
+    nc = S // Q
+
+    xz = dense(x, p["w_xz"])
+    xs_raw, z = xz[..., :di], xz[..., di:]
+    bc_raw = dense(x, p["w_bc"])
+    dt = jax.nn.softplus(
+        dense(x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # [B,S,H]
+    xs = _causal_depthwise_conv(xs_raw, p["conv_x"], p["conv_x_b"])
+    bc = _causal_depthwise_conv(bc_raw, p["conv_bc"], p["conv_bc_b"])
+    Bm, Cm = bc[..., :N], bc[..., N:]  # [B,S,N] (ngroups=1, shared by heads)
+
+    A = -jnp.exp(p["A_log"])  # [H], negative
+    a = dt * A  # [B,S,H] log-decay per step
+    xh = xs.reshape(B, S, H, P)
+    dtx = xh.astype(jnp.float32) * dt[..., None]  # [B,S,H,P]
+
+    # chunked scan
+    a_c = a.reshape(B, nc, Q, H)
+    dtx_c = dtx.reshape(B, nc, Q, H, P)
+    B_c = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+
+    def chunk_step(h_state, inp):
+        a_q, dtx_q, B_q, C_q = inp  # [B,Q,H], [B,Q,H,P], [B,Q,N], [B,Q,N]
+        cum = jnp.cumsum(a_q, axis=1)  # [B,Q,H] inclusive
+        # within-chunk: L[b,h,q,t] = exp(cum[q]-cum[t]) for q>=t
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # [B,Q,T,H]
+        qt_mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(qt_mask[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bqn,btn->bqt", C_q, B_q)  # shared across heads
+        Y_diag = jnp.einsum("bqt,bqth,bthp->bqhp", CB, L, dtx_q)
+        # off-chunk: contribution of carried state
+        decay_q = jnp.exp(cum)  # [B,Q,H]
+        Y_off = jnp.einsum("bqn,bhpn,bqh->bqhp", C_q, h_state, decay_q)
+        # state update
+        total = cum[:, -1:, :]  # [B,1,H]
+        w = jnp.exp(total - cum)  # decay from t to chunk end
+        h_new = h_state * jnp.exp(total[:, 0, :])[:, :, None, None] + jnp.einsum(
+            "btn,bthp,bth->bhpn", B_q, dtx_q, w
+        )
+        return h_new, Y_diag + Y_off
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, Y = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            jnp.moveaxis(a_c, 1, 0),
+            jnp.moveaxis(dtx_c, 1, 0),
+            jnp.moveaxis(B_c, 1, 0),
+            jnp.moveaxis(C_c, 1, 0),
+        ),
+    )
+    Y = jnp.moveaxis(Y, 0, 1).reshape(B, S, H, P)  # [B,S,H,P]
+    Y = Y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = Y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = dense(y, p["w_out"])
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    state = {
+        "conv_x": _tail_window(xs_raw, K - 1).astype(x.dtype),
+        "conv_bc": _tail_window(bc_raw, K - 1).astype(x.dtype),
+        "state": h_final,
+    }
+    return out, state
+
+
+def _tail_window(x: jax.Array, k: int) -> jax.Array:
+    """Last k positions of [B,S,C] (S >= k assumed in prefill)."""
+    return x[:, x.shape[1] - k :, :]
+
+
+def init_ssm_state(cfg: ArchConfig, tp: int, batch: int, dtype=jnp.float32):
+    dims = ssm_dims(cfg, tp)
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, dims["di"]), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * dims["N"]), dtype),
+        "state": jnp.zeros((batch, dims["H_pad"], dims["P"], dims["N"]), jnp.float32),
+    }
+
+
+def ssm_decode(
+    p: Params, x_t: jax.Array, state: Params, cfg: ArchConfig, tp: int
+) -> tuple[jax.Array, Params]:
+    """One recurrent step. x_t [B,1,D] → (y [B,1,D], new state)."""
+    dims = ssm_dims(cfg, tp)
+    B = x_t.shape[0]
+    di, N, H, P = dims["di"], dims["N"], dims["H_pad"], dims["P"]
+    x = x_t[:, 0, :]
+    xz = dense(x, p["w_xz"])
+    xs, z = xz[..., :di], xz[..., di:]
+    bc = dense(x, p["w_bc"])
+    dt = jax.nn.softplus(dense(x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # [B,H]
+
+    # conv state update (window = last K-1 inputs + current)
+    win_x = jnp.concatenate([state["conv_x"], xs[:, None, :].astype(state["conv_x"].dtype)], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x, p["conv_x"]) + p["conv_x_b"])
+    win_bc = jnp.concatenate([state["conv_bc"], bc[:, None, :].astype(state["conv_bc"].dtype)], axis=1)
+    bc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc"]) + p["conv_bc_b"])
+    Bv, Cv = bc_c[..., :N].astype(jnp.float32), bc_c[..., N:].astype(jnp.float32)
+
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # [B,H]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    dtx = xh * dt[..., None]
+    h_new = state["state"] * decay[:, :, None, None] + jnp.einsum("bn,bhp->bhpn", Bv, dtx)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cv) + p["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x_t.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = dense(y, p["w_out"])[:, None, :]
+    new_state = {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "state": h_new}
+    return out, new_state

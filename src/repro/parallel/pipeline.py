@@ -1,0 +1,107 @@
+"""Pipeline parallelism over the ``pod`` mesh axis (GPipe schedule).
+
+The stacked layer axis of a homogeneous stack is sharded over ``pod``
+(each pod owns a contiguous run of layers); activations flow pod→pod
+with `lax.ppermute` on a microbatch schedule. The shard_map is *manual
+only over pod* (`axis_names={"pod"}`) — data/model sharding inside the
+body stays under the automatic partitioner, so TP/FSDP compose with PP.
+
+The forward is fully differentiable: JAX transposes the ppermutes, so
+the backward runs the reverse pipeline automatically (GPipe with
+activation stashing; combine with remat for the usual memory trade).
+
+v1 scope: train-time, uniform-window stacks without MoE (the MoE layer
+carries its own full-mesh shard_map, which cannot nest inside a manual
+pod axis). Covers the dense/SSM/audio/VLM archs; DeepSeek/Qwen keep
+ZeRO-3+EP on the pod axis instead. Inter-pod traffic per step is exactly
+one [microbatch, S, D] activation per pipeline tick — the DCI-friendly
+pattern pods want (vs. FSDP's per-layer weight gathers crossing pods).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .sharding import MeshCtx
+
+__all__ = ["pipeline_available", "pipeline_stack_forward"]
+
+
+def pipeline_available(ctx: MeshCtx | None, kind: str, n_layers: int) -> bool:
+    if ctx is None or "pod" not in ctx.mesh.axis_names:
+        return False
+    if kind in ("moe",):  # nested full-mesh shard_map — see module docstring
+        return False
+    return n_layers % ctx.mesh.shape["pod"] == 0
+
+
+def pipeline_stack_forward(
+    stack_params,
+    body_fn,  # body_fn(p_layer, x, positions) -> x   (aux-free fast path)
+    x: jax.Array,  # [B, S, D] — batch sharded over data, replicated over pod
+    positions: jax.Array,  # [B, S]
+    ctx: MeshCtx,
+    *,
+    n_micro: int = 4,
+) -> jax.Array:
+    """Run a layer stack as a GPipe pipeline over the pod axis."""
+    mesh = ctx.mesh
+    n_pods = mesh.shape["pod"]
+    B, S, D = x.shape
+    assert B % n_micro == 0, f"batch {B} not divisible by {n_micro} microbatches"
+    mb = B // n_micro
+    T = n_micro + n_pods - 1  # pipeline ticks incl. fill/drain bubble
+
+    # XLA:CPU hard-crashes ("Invalid binary instruction opcode copy") on
+    # bf16 select/ppermute/psum inside a manual-pod shard_map. All
+    # schedule plumbing (carry, permutes, masks, psum) therefore runs in
+    # f32; layer COMPUTE stays in the model dtype. CPU-only overhead —
+    # on TPU the plumbing dtype can be the model dtype.
+    plumb = jnp.float32
+
+    def shard_fn(params_local, x_full, pos_full):
+        p_idx = jax.lax.axis_index("pod")
+        xm = x_full.astype(plumb).reshape(n_micro, mb, S, D)
+        pos_mb = pos_full[:mb]
+
+        def run_local_layers(x_in):
+            def layer(x, p_l):
+                return body_fn(p_l, x, pos_mb), None
+
+            y, _ = jax.lax.scan(layer, x_in.astype(x_full.dtype), params_local)
+            return y.astype(plumb)
+
+        def tick(buf, t):
+            # pod 0 ingests microbatch t (clamped in the drain phase —
+            # those results never reach the collection window)
+            x_t = jax.lax.dynamic_index_in_dim(
+                xm, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False
+            )
+            first = (p_idx == 0).astype(plumb)
+            x_in = first * x_t + (1.0 - first) * buf
+            y = run_local_layers(x_in)
+            nxt = jax.lax.ppermute(
+                y, "pod", [(i, (i + 1) % n_pods) for i in range(n_pods)]
+            )
+            return nxt, y
+
+        buf0 = jnp.zeros((mb, S, D), plumb)
+        _, ys = jax.lax.scan(tick, buf0, jnp.arange(T))
+        # the LAST pod's outputs at ticks [n_pods-1, T) are microbatches 0..n_micro-1
+        out = ys[n_pods - 1 :]  # [n_micro, mb, S, D]
+        mask = (p_idx == n_pods - 1).astype(plumb)
+        out = jax.lax.psum(out * mask, "pod")
+        return out.astype(x_full.dtype).reshape(B, S, D)
+
+    # stacked layer axis over pod; everything else stays auto-partitioned
+    n_leaf_spec = jax.tree.map(lambda _: P("pod"), stack_params)
+    return jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(n_leaf_spec, P(), P()),
+        out_specs=P(),
+        axis_names={"pod"},
+        check_vma=False,
+    )(stack_params, x, positions)

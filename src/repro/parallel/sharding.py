@@ -1,0 +1,132 @@
+"""Mesh context and logical-axis sharding rules.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod. Parallelism map:
+
+  batch (activations)      → (pod, data)           [DP]
+  d_model dim of params    → (pod, data)           [FSDP / ZeRO-3]
+  heads / d_ff / experts   → model                 [TP / EP]
+  vocab (output head)      → model
+  embedding table d_model  → model (gather stays local; no FSDP needed)
+  KV-cache sequence        → model                 [SP — decode LSE-combine]
+
+``MeshCtx`` is threaded through the model code; ``None`` means
+single-device (smoke tests) and all shard_map/collective paths degrade to
+local compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshCtx", "make_ctx", "logical_to_spec", "param_specs_for_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]  # ("pod","data") or ("data",)
+    tp_axis: str  # "model"
+    shard_batch: bool = True  # False for global_batch < dp_size (long_500k)
+    serve_ep: bool = False  # serving: global expert-parallel MoE dispatch
+    fsdp_all: bool = False  # train: pure FSDP over every mesh axis (no TP)
+    fsdp_axes_override: tuple | None = None  # fsdp_all: narrower weight shard
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        s = 1
+        for a in self.dp_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def make_ctx(mesh: Mesh, *, shard_batch: bool = True) -> MeshCtx:
+    names = tuple(mesh.axis_names)
+    if "model" not in names:
+        raise ValueError(f"mesh must have a 'model' axis, got {names}")
+    dp = tuple(a for a in names if a != "model")
+    return MeshCtx(mesh=mesh, dp_axes=dp, tp_axis="model", shard_batch=shard_batch)
+
+
+#: logical axis name → mesh axes (None = replicated). The FSDP entry is
+#: filled per-mesh because the pod axis may be absent.
+_LOGICAL_RULES = {
+    "batch": "__dp__",
+    "fsdp": "__dp__",  # d_model dim of transformer params
+    "model_dim": None,  # activations' d_model — replicated
+    "seq": None,  # train/prefill activations sequence
+    "kv_seq": "model",  # decode KV cache sequence (SP)
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "experts_serve": "__ep_serve__",  # (data, model) when it divides, else model
+    "vocab": "model",
+    "embed_tp": "model",  # embedding table d_model
+    "expert_mlp": "__dp__",  # MoE expert d_ff — FSDP'd, gathered in-layer
+    "layers": None,
+    "layers_pp": "pod",  # pipeline stage axis
+    "stats": None,
+}
+
+
+def logical_to_spec(ctx: MeshCtx | None, axes: Sequence[str | None]) -> P:
+    """Map logical axis names to a PartitionSpec under ``ctx``."""
+    if ctx is None:
+        return P()
+    out = []
+    all_axes = tuple(ctx.mesh.axis_names)
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        if ax == "batch" and not ctx.shard_batch:
+            out.append(None)
+            continue
+        if ctx.fsdp_all:
+            # pure-FSDP placement: batch and the param d_model dim cover
+            # the WHOLE mesh; every TP-ish axis is replicated. Converts
+            # per-layer TP activation all-reduces into per-layer weight
+            # all-gathers + grad reduce-scatters (§Perf hillclimb).
+            if ax == "batch":
+                out.append(all_axes)
+                continue
+            if ax == "fsdp":
+                out.append(ctx.fsdp_axes_override or all_axes)
+                continue
+            if ax in ("heads", "kv_heads", "mlp", "vocab", "embed_tp",
+                      "experts", "expert_mlp", "kv_seq"):
+                out.append(None)
+                continue
+        rule = _LOGICAL_RULES.get(ax, None)
+        if rule == "__dp__":
+            out.append(ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0])
+        elif rule == "__ep_serve__":
+            out.append(("data", ctx.tp_axis))
+        else:
+            out.append(rule)
+    return P(*out)
+
+
+def param_specs_for_tree(ctx: MeshCtx | None, logical_tree) -> object:
+    """Map a pytree of logical-axis tuples to PartitionSpecs/shardings."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(ctx, axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )

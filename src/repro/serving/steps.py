@@ -1,0 +1,109 @@
+"""jit-compiled serving steps: prefill (prompt → cache) and decode.
+
+Decode sharding: batch over (pod, data); KV-cache sequence over ``model``
+(SP) — the per-layer attention runs as flash-decoding across chips with
+an exp-rescaled psum combine (see models/blocks.py). The cache is donated
+so decode is in-place at steady state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models import moe as moe_mod
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import MeshCtx, logical_to_spec, param_specs_for_tree
+
+__all__ = ["cache_shardings", "make_prefill_step", "make_decode_step", "token_specs",
+           "serve_ctx_and_axes"]
+
+
+def serve_ctx_and_axes(cfg: ArchConfig, ctx: MeshCtx | None, serve_sharding: str):
+    """(ctx, param_axes) for the chosen serving placement.
+
+    "fsdp" — training placement reused (ZeRO gathers every layer; the
+             baseline recorded in §Roofline).
+    "tp"   — inference placement: weights pure-TP, experts global-EP when
+             they divide (data × model). The §Perf hillclimb measures the
+             collective-term drop between the two.
+    """
+    if ctx is None or serve_sharding == "fsdp":
+        return ctx, lm.lm_axes(cfg, ctx.tp_size if ctx else 1)
+    ctx = dataclasses.replace(ctx, serve_ep=True)
+    epd = cfg.is_moe and moe_mod.ep_over_data_ok(cfg, ctx)
+    return ctx, lm.lm_axes(cfg, ctx.tp_size, serve=True, ep_over_data=epd)
+
+
+def cache_shardings(cfg: ArchConfig, ctx: MeshCtx | None, B: int, S_alloc: int):
+    tp = ctx.tp_size if ctx else 1
+    axes = lm.cache_axes(cfg, B, S_alloc, tp)
+    return param_specs_for_tree(ctx, axes)
+
+
+def token_specs(cfg: ArchConfig, ctx: MeshCtx | None):
+    if cfg.input_mode == "tokens":
+        return {"tokens": logical_to_spec(ctx, ("batch", None))}
+    return {"embeds": logical_to_spec(ctx, ("batch", None, None))}
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: MeshCtx | None, *, s_alloc: int,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      serve_sharding: str = "fsdp"):
+    """prefill_step(params, batch) -> (last logits, cache)."""
+    ctx, p_axes = serve_ctx_and_axes(cfg, ctx, serve_sharding)
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, ctx, s_alloc=s_alloc,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    if ctx is None:
+        return jax.jit(prefill_step)
+    tp = ctx.tp_size
+    from jax.sharding import PartitionSpec as P
+
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: ctx.sharding(*s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    p_spec = to_sh(param_specs_for_tree(ctx, p_axes))
+    b_spec = to_sh(token_specs(cfg, ctx))
+    # outs: logits replicated-over-model but batch-sharded; cache per axes
+    logits_spec = ctx.sharding(*logical_to_spec(ctx, ("batch", None) if cfg.n_codebooks == 1 else ("batch", None, None)))
+    return jax.jit(
+        prefill_step,
+        in_shardings=(p_spec, b_spec),
+        out_shardings=(logits_spec, to_sh(cache_shardings(cfg, ctx, 0, 0))),
+    )
+
+
+def make_decode_step(cfg: ArchConfig, ctx: MeshCtx | None, *,
+                     serve_sharding: str = "fsdp"):
+    """decode_step(params, cache, batch_t, pos) -> (logits, cache)."""
+    ctx, p_axes = serve_ctx_and_axes(cfg, ctx, serve_sharding)
+
+    def decode_step(params, cache, batch_t, pos):
+        return lm.decode_step(params, cache, batch_t, pos, cfg, ctx)
+
+    if ctx is None:
+        return jax.jit(decode_step, donate_argnums=(1,))
+    tp = ctx.tp_size
+    from jax.sharding import PartitionSpec as P
+
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: ctx.sharding(*s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    p_spec = to_sh(param_specs_for_tree(ctx, p_axes))
+    c_spec = to_sh(cache_shardings(cfg, ctx, 0, 0))
+    b_spec = to_sh(token_specs(cfg, ctx))
+    logits_spec = ctx.sharding(
+        *logical_to_spec(ctx, ("batch", None) if cfg.n_codebooks == 1 else ("batch", None, None))
+    )
+    return jax.jit(
+        decode_step,
+        in_shardings=(p_spec, c_spec, b_spec, None),
+        out_shardings=(logits_spec, c_spec),
+        donate_argnums=(1,),
+    )

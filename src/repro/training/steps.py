@@ -1,0 +1,158 @@
+"""jit-compiled train / eval steps with explicit shardings.
+
+``make_train_step`` builds the pjit'd update for a (cfg, mesh) pair:
+  * params FSDP+TP sharded per `lm_axes` (ZeRO-3: XLA all-gathers
+    per-layer inside the scan, reduce-scatters grads),
+  * gradient accumulation over microbatches via `lax.scan`,
+  * remat policy on the layer body (none | dots | full),
+  * AdamW / Adafactor update with cosine schedule.
+
+The returned callable is `jax.jit`-wrapped with in/out shardings and is
+what `launch/dryrun.py` lowers for the dry-run matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import MeshCtx, logical_to_spec, param_specs_for_tree
+from .optimizer import OptConfig, init_opt, opt_state_axes, opt_update
+
+__all__ = ["TrainSettings", "batch_specs", "make_train_step", "train_state_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    microbatches: int = 1
+    remat: str = "dots"  # none | dots | full
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    param_mode: str = "fsdp"  # fsdp (ZeRO-3 + TP) | fsdp_all (no TP)
+    pipeline_micro: int = 0  # >0: GPipe over the pod axis
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+
+
+def batch_specs(cfg: ArchConfig, ctx: MeshCtx | None):
+    """PartitionSpecs for a training batch dict."""
+    bspec = logical_to_spec(ctx, ("batch", None))
+    out = {"labels": bspec if cfg.n_codebooks == 1 else logical_to_spec(ctx, ("batch", None, None))}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = bspec
+    else:
+        out["embeds"] = logical_to_spec(ctx, ("batch", None, None))
+    return out
+
+
+def train_state_shapes(cfg: ArchConfig, settings: TrainSettings, tp: int):
+    """abstract (params, opt_state) via eval_shape — no allocation."""
+    p_shape = jax.eval_shape(lambda: lm.init_lm(jax.random.PRNGKey(0), cfg, tp))
+    o_shape = jax.eval_shape(lambda: init_opt(p_shape, settings.opt))
+    return p_shape, o_shape
+
+
+def make_train_step(cfg: ArchConfig, ctx: MeshCtx | None, settings: TrainSettings):
+    """Returns (train_step, in_shardings, out_shardings).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    if settings.pipeline_micro > 0 and ctx is not None and "pod" in ctx.mesh.axis_names:
+        # the pod axis becomes the pipeline-stage axis: batch and FSDP
+        # sharding retreat to the data axis
+        ctx = dataclasses.replace(ctx, dp_axes=tuple(a for a in ctx.dp_axes if a != "pod"))
+    if settings.param_mode == "fsdp_all" and ctx is not None:
+        if cfg.is_moe:
+            raise ValueError("fsdp_all is for dense/ssm archs (MoE needs EP)")
+        # weights shard over the whole mesh when d_model divides it,
+        # else over the data axis only (weights then replicate across
+        # model — plain DP there; batch still covers the full mesh)
+        override = None
+        if cfg.d_model % ctx.mesh.size != 0:
+            override = tuple(a for a in ctx.mesh.axis_names if a != "model")
+        ctx = dataclasses.replace(ctx, fsdp_all=True, fsdp_axes_override=override)
+
+    def loss_fn(params, mb):
+        loss, metrics = lm.forward_train(
+            params, mb, cfg, ctx,
+            remat=settings.remat, q_chunk=settings.q_chunk, kv_chunk=settings.kv_chunk,
+            pipeline_micro=settings.pipeline_micro,
+        )
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        n_mb = settings.microbatches
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            (g_sum, loss_sum), metrics = jax.lax.scan(acc, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, g_sum)
+            loss = loss_sum / n_mb
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        new_params, new_opt, stats = opt_update(grads, opt_state, params, settings.opt)
+        metrics = dict(metrics, loss=loss, **stats)
+        return new_params, new_opt, metrics
+
+    # shardings
+    tp = ctx.tp_size if ctx else 1
+    p_axes = lm.lm_axes(cfg, tp)
+    if settings.pipeline_micro > 0 and ctx is not None and "pod" in ctx.mesh.axis_names:
+        from repro.parallel.pipeline import pipeline_available
+
+        def _pp_axes(stack_axes, kind, n_layers):
+            if not pipeline_available(ctx, kind, n_layers):
+                return stack_axes
+            return jax.tree.map(
+                lambda axes: ("layers_pp",) + tuple(axes)[1:],
+                stack_axes,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(a, (str, type(None))) for a in x),
+            )
+
+        for spec in lm.stacks_for(cfg):
+            key = f"stack_{spec.name}"
+            p_axes[key] = _pp_axes(p_axes[key], spec.kind, spec.n_layers)
+    p_shapes, _ = train_state_shapes(cfg, settings, tp)
+    o_axes = opt_state_axes(p_axes, settings.opt, p_shapes)
+    p_spec = param_specs_for_tree(ctx, p_axes)
+    o_spec = param_specs_for_tree(ctx, o_axes)
+    b_spec = batch_specs(cfg, ctx)
+    from jax.sharding import PartitionSpec as P
+
+    m_spec = None  # metrics replicated
+
+    if ctx is None:
+        return train_step, None, None
+
+    to_sh = lambda tree: jax.tree.map(
+        lambda s: ctx.sharding(*s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    in_sh = (to_sh(p_spec), to_sh(o_spec), to_sh(b_spec))
+    out_sh = (to_sh(p_spec), to_sh(o_spec), None)
+    step = jax.jit(
+        train_step,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        donate_argnums=(0, 1),
+    )
+    return step, in_sh, out_sh

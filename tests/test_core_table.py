@@ -1,0 +1,164 @@
+"""SortedTable + composite keys: unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Eq,
+    KeySchema,
+    Query,
+    Range,
+    SortedTable,
+    pack_columns,
+    pack_tuple,
+    unpack_key,
+)
+
+
+def _table(rng, n=2000, dom=32, layout=("a", "b", "c")):
+    kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in ("a", "b", "c")}
+    vc = {"m": rng.uniform(0, 10, n)}
+    return SortedTable.from_columns(kc, vc, layout)
+
+
+def brute_force(table, query):
+    mask = np.ones(len(table), bool)
+    for col, f in query.filters.items():
+        lo, hi = f.bounds(table.schema, col)
+        v = table.key_cols[col]
+        mask &= (v >= lo) & (v < hi)
+    return mask
+
+
+class TestPackedKeys:
+    def test_pack_roundtrip(self, rng):
+        schema = KeySchema({"a": 7, "b": 5, "c": 9})
+        layout = ("c", "a", "b")
+        vals = (311, 100, 17)
+        packed = pack_tuple(vals, layout, schema)
+        assert unpack_key(packed, layout, schema) == vals
+
+    def test_pack_order_is_lexicographic(self, rng):
+        schema = KeySchema({"a": 8, "b": 8})
+        tuples = [tuple(rng.integers(0, 256, 2)) for _ in range(500)]
+        packed = [pack_tuple(t, ("a", "b"), schema) for t in tuples]
+        assert sorted(range(500), key=lambda i: packed[i]) == sorted(
+            range(500), key=lambda i: tuples[i]
+        )
+
+    def test_overflow_rejected(self):
+        schema = KeySchema({"a": 4})
+        with pytest.raises(ValueError):
+            pack_tuple((16,), ("a",), schema)
+        with pytest.raises(ValueError):
+            KeySchema({"a": 40, "b": 30}).check_layout(("a", "b"))
+
+
+class TestScan:
+    def test_execute_matches_bruteforce(self, rng):
+        t = _table(rng)
+        for _ in range(30):
+            f = {}
+            if rng.random() < 0.7:
+                f["a"] = Eq(int(rng.integers(0, 32)))
+            if rng.random() < 0.7:
+                lo = int(rng.integers(0, 28))
+                f["b"] = Range(lo, lo + int(rng.integers(1, 5)))
+            if not f:
+                f["c"] = Eq(int(rng.integers(0, 32)))
+            q = Query(filters=f, agg="count")
+            res = t.execute(q)
+            assert res.value == brute_force(t, q).sum()
+
+    def test_sum_aggregation(self, rng):
+        t = _table(rng)
+        q = Query(filters={"a": Eq(3)}, agg="sum", value_col="m")
+        res = t.execute(q)
+        expect = t.value_cols["m"][brute_force(t, q)].sum()
+        np.testing.assert_allclose(res.value, expect, rtol=1e-12)
+
+    def test_slab_contains_all_matches(self, rng):
+        """The located slab is a superset of matching rows (Fig 2)."""
+        t = _table(rng)
+        q = Query(filters={"a": Eq(5), "b": Range(3, 9)})
+        lo, hi = t.slab(q)
+        mask = brute_force(t, q)
+        idx = np.nonzero(mask)[0]
+        if len(idx):
+            assert idx.min() >= lo and idx.max() < hi
+
+    def test_prefix_slab_is_tight_for_leading_equality(self, rng):
+        """With an equality on the FIRST layout key, no row outside the
+        slab has that key value."""
+        t = _table(rng, layout=("a", "b", "c"))
+        q = Query(filters={"a": Eq(7)})
+        lo, hi = t.slab(q)
+        assert (t.key_cols["a"][lo:hi] == 7).all()
+        assert hi - lo == (t.key_cols["a"] == 7).sum()
+
+
+class TestReplicaEquivalence:
+    def test_layouts_return_same_results(self, rng):
+        """HR invariant: every serialization answers every query equally."""
+        kc = {c: rng.integers(0, 16, 1500).astype(np.int64) for c in ("a", "b", "c")}
+        vc = {"m": rng.uniform(0, 1, 1500)}
+        import itertools
+
+        tables = [
+            SortedTable.from_columns(kc, vc, lay)
+            for lay in itertools.permutations(("a", "b", "c"))
+        ]
+        fps = {t.dataset_fingerprint() for t in tables}
+        assert len(fps) == 1
+        for _ in range(10):
+            q = Query(
+                filters={"a": Eq(int(rng.integers(0, 16))), "b": Range(2, 9)},
+                agg="sum",
+                value_col="m",
+            )
+            vals = [t.execute(q).value for t in tables]
+            np.testing.assert_allclose(vals, vals[0], rtol=1e-9)
+
+    def test_resorted_preserves_dataset(self, rng):
+        t = _table(rng, layout=("a", "b", "c"))
+        t2 = t.resorted(("c", "b", "a"))
+        assert t.dataset_fingerprint() == t2.dataset_fingerprint()
+        assert t2.layout == ("c", "b", "a")
+
+    def test_merge_insert_keeps_sorted_and_dataset(self, rng):
+        t = _table(rng, n=500)
+        kc2 = {c: rng.integers(0, 32, 100).astype(np.int64) for c in ("a", "b", "c")}
+        vc2 = {"m": rng.uniform(0, 10, 100)}
+        t2 = t.merge_insert(kc2, vc2)
+        assert len(t2) == 600
+        assert (np.diff(t2.packed) >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(10, 300),
+    dom=st.integers(2, 20),
+)
+def test_property_scan_count_matches_bruteforce(data, n, dom):
+    """Property: for any dataset/layout/query, slab-scan == brute force."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    cols = ("x", "y")
+    kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in cols}
+    vc = {"m": rng.uniform(0, 1, n)}
+    layout = data.draw(st.permutations(cols))
+    t = SortedTable.from_columns(kc, vc, tuple(layout))
+    f = {}
+    for c in cols:
+        kind = data.draw(st.sampled_from(["eq", "range", "none"]))
+        if kind == "eq":
+            f[c] = Eq(data.draw(st.integers(0, dom - 1)))
+        elif kind == "range":
+            lo = data.draw(st.integers(0, dom - 1))
+            hi = data.draw(st.integers(lo + 1, dom))
+            f[c] = Range(lo, hi)
+    q = Query(filters=f, agg="count")
+    res = t.execute(q)
+    assert res.value == brute_force(t, q).sum()
+    assert res.rows_scanned >= res.rows_matched

@@ -1,0 +1,126 @@
+"""Cost model (Eq 1–4): estimates vs ground-truth slab sizes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CostModel,
+    Eq,
+    KeySchema,
+    LinearCostFunction,
+    Query,
+    Range,
+    SortedTable,
+    Workload,
+    estimate_rows,
+)
+from repro.core.ecdf import ColumnStats, TableStats
+from repro.core.tpch import generate_simulation
+
+
+class TestColumnStats:
+    def test_exact_counts(self, rng):
+        vals = rng.integers(0, 50, 5000)
+        cs = ColumnStats.from_values(vals, 50)
+        assert cs.bin_width == 1
+        for v in (0, 7, 49):
+            assert cs.pmf(v) == (vals == v).sum() / 5000
+        np.testing.assert_allclose(cs.cdf(50), 1.0)
+        np.testing.assert_allclose(cs.cdf(0), 0.0)
+        np.testing.assert_allclose(
+            cs.range_selectivity(10, 20), ((vals >= 10) & (vals < 20)).sum() / 5000
+        )
+
+    def test_binned_large_domain(self, rng):
+        vals = rng.integers(0, 1_000_000, 20_000)
+        cs = ColumnStats.from_values(vals, 1_000_000, max_bins=1024)
+        assert cs.bin_width > 1
+        sel = cs.range_selectivity(100_000, 500_000)
+        truth = ((vals >= 100_000) & (vals < 500_000)).sum() / 20_000
+        assert abs(sel - truth) < 0.02
+
+    def test_merge_values_streaming(self, rng):
+        a = rng.integers(0, 32, 1000)
+        b = rng.integers(0, 32, 500)
+        cs = ColumnStats.from_values(a, 32)
+        cs.merge_values(b)
+        both = np.concatenate([a, b])
+        ref = ColumnStats.from_values(both, 32)
+        np.testing.assert_allclose(cs.counts, ref.counts)
+
+
+class TestEq1:
+    """Row() estimates track the true slab size (the paper notes a small
+    over-estimate δ vs Fig 2 — we assert within 2× + absolute slack)."""
+
+    @pytest.mark.parametrize("layout", [("k0", "k1", "k2"), ("k2", "k0", "k1")])
+    def test_estimate_vs_true_slab(self, rng, layout):
+        kc, vc, schema = generate_simulation(30_000, 3, seed=1)
+        t = SortedTable.from_columns(kc, vc, layout, schema)
+        stats = TableStats.from_columns(kc, schema)
+        for _ in range(25):
+            f = {
+                "k0": Eq(int(rng.integers(0, 16))),
+                "k1": Range(int(rng.integers(0, 8)), int(rng.integers(8, 32))),
+            }
+            q = Query(filters=f)
+            est = estimate_rows(stats, layout, q)
+            true = t.slab(q)[1] - t.slab(q)[0]
+            assert est <= 2.5 * max(true, 5) + 50
+            assert true <= 2.5 * max(est, 5) + 50
+
+    def test_equality_prefix_cuts_selectivity(self):
+        kc, vc, schema = generate_simulation(10_000, 3, seed=2)
+        stats = TableStats.from_columns(kc, schema)
+        q = Query(filters={"k0": Eq(3), "k1": Eq(5)})
+        # layout with both eq keys leading → much smaller than reversed
+        est_good = estimate_rows(stats, ("k0", "k1", "k2"), q)
+        est_bad = estimate_rows(stats, ("k2", "k0", "k1"), q)
+        assert est_good < est_bad
+
+    def test_range_stops_prefix(self):
+        """Keys after the first range filter do not shrink Row() (Eq 1)."""
+        kc, vc, schema = generate_simulation(10_000, 3, seed=3)
+        stats = TableStats.from_columns(kc, schema)
+        q1 = Query(filters={"k0": Range(0, 4), "k1": Eq(2)})
+        q2 = Query(filters={"k0": Range(0, 4)})
+        a = estimate_rows(stats, ("k0", "k1", "k2"), q1)
+        b = estimate_rows(stats, ("k0", "k1", "k2"), q2)
+        assert a == b  # k1's equality is residual — scanned, not sliced
+
+
+class TestCostFunction:
+    def test_linear_fit_recovers_slope(self, rng):
+        rows = rng.uniform(100, 100_000, 50)
+        times = 3.5e-6 * rows + 0.42 + rng.normal(0, 1e-3, 50)
+        f = LinearCostFunction.fit(rows, times)
+        assert abs(f.slope - 3.5e-6) / 3.5e-6 < 0.05
+        assert f.r2(rows, times) > 0.99
+
+    def test_min_cost_and_workload_cost(self, rng):
+        kc, vc, schema = generate_simulation(20_000, 3, seed=4)
+        stats = TableStats.from_columns(kc, schema)
+        model = CostModel(stats=stats)
+        layouts = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+        q = Query(filters={"k1": Eq(2), "k2": Range(0, 8)})
+        costs = [model.query_cost(a, q) for a in layouts]
+        mc, j = model.min_cost(layouts, q)
+        assert mc == min(costs) and costs[j] == mc
+        wl = Workload([q, Query(filters={"k0": Eq(1)})])
+        wc = model.workload_cost(layouts, wl)
+        assert wc <= max(costs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_min_cost_leq_every_replica(seed):
+    """Eq (3): Cost_min(q) ≤ Cost(r, q) for every replica r."""
+    rng = np.random.default_rng(seed)
+    kc, vc, schema = generate_simulation(3000, 3, seed=seed % 17)
+    stats = TableStats.from_columns(kc, schema)
+    model = CostModel(stats=stats)
+    layouts = [("k0", "k1", "k2"), ("k2", "k1", "k0")]
+    q = Query(filters={"k0": Eq(int(rng.integers(0, 8))), "k2": Range(0, 5)})
+    mc, _ = model.min_cost(layouts, q)
+    assert all(mc <= model.query_cost(a, q) + 1e-12 for a in layouts)

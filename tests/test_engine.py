@@ -1,0 +1,127 @@
+"""HR engine integration: routing, writes, recovery, hedging, TR-vs-HR."""
+
+import numpy as np
+import pytest
+
+from repro.core import Eq, HREngine, Query, Range, random_workload
+from repro.core.tpch import generate_simulation
+from repro.ft.straggler import clear_slowdowns, inject_slowdown, measure_tail
+
+
+@pytest.fixture(scope="module")
+def setup():
+    kc, vc, schema = generate_simulation(60_000, 3, seed=0)
+    rng = np.random.default_rng(1)
+    wl = random_workload(rng, schema, list(kc), 30, value_col="metric")
+    eng = HREngine(n_nodes=5)
+    eng.create_column_family(
+        "hr", kc, vc, replication_factor=3, mechanism="HR", workload=wl,
+        schema=schema, hrca_kwargs={"k_max": 1500, "seed": 0},
+    )
+    eng.create_column_family(
+        "tr", kc, vc, replication_factor=3, mechanism="TR", workload=wl, schema=schema,
+    )
+    return eng, wl, schema
+
+
+class TestRouting:
+    def test_results_identical_across_mechanisms(self, setup):
+        eng, wl, _ = setup
+        for q in wl.queries[:10]:
+            r1, _ = eng.read("hr", q)
+            r2, _ = eng.read("tr", q)
+            assert abs(r1.value - r2.value) <= 1e-6 * max(1.0, abs(r1.value))
+
+    def test_scheduler_picks_cheapest_estimate(self, setup):
+        eng, wl, _ = setup
+        cf = eng.column_families["hr"]
+        q = wl.queries[0]
+        ranked = eng._ranked_replicas(cf, q)
+        _, rep = eng.read("hr", q)
+        assert rep.estimated_cost <= ranked[-1][0] + 1e-9
+
+    def test_hr_scans_fewer_rows_than_tr(self, setup):
+        eng, wl, _ = setup
+        hr = sum(eng.read("hr", q)[1].rows_scanned for q in wl.queries)
+        tr = sum(eng.read("tr", q)[1].rows_scanned for q in wl.queries)
+        assert hr < tr  # the paper's central effect
+
+    def test_tie_breaking_round_robin_spreads_load(self, setup):
+        eng, _, schema = setup
+        # unfiltered query: all replicas equal cost → RR over replicas
+        q = Query(filters={})
+        seen = {eng.read("hr", q)[1].replica_id for _ in range(6)}
+        assert len(seen) > 1
+
+
+class TestWrites:
+    def test_write_fans_out_and_keeps_consistency(self, setup):
+        eng, wl, schema = setup
+        rng = np.random.default_rng(7)
+        dom = 2 ** schema.bits["k0"]
+        kc2 = {c: rng.integers(0, dom, 500).astype(np.int64) for c in ("k0", "k1", "k2")}
+        vc2 = {"metric": rng.uniform(0, 1, 500)}
+        n_before = eng.column_families["hr"].stats.n_rows
+        eng.write("hr", kc2, vc2)
+        cf = eng.column_families["hr"]
+        assert cf.stats.n_rows == n_before + 500
+        fps = {
+            eng._table(cf, r).dataset_fingerprint()
+            for r in cf.replicas
+        }
+        assert len(fps) == 1
+
+
+class TestRecovery:
+    def test_node_failure_and_rebuild(self, setup):
+        eng, wl, _ = setup
+        cf = eng.column_families["hr"]
+        fp = eng._table(cf, cf.replicas[0]).dataset_fingerprint()
+        victim = cf.replicas[0].node_id
+        eng.fail_node(victim)
+        # reads keep working on survivors
+        r, rep = eng.read("hr", wl.queries[0])
+        assert rep.node_id != victim
+        eng.recover_node(victim)
+        assert eng._table(cf, cf.replicas[0]).dataset_fingerprint() == fp
+
+    def test_recovery_preserves_layout(self, setup):
+        eng, _, _ = setup
+        cf = eng.column_families["hr"]
+        lay = cf.replicas[1].layout
+        victim = cf.replicas[1].node_id
+        eng.fail_node(victim)
+        eng.recover_node(victim)
+        assert eng._table(cf, cf.replicas[1]).layout == lay
+
+
+class TestStragglerHedging:
+    def test_hedging_beats_straggler(self, setup):
+        eng, wl, _ = setup
+        cf = eng.column_families["hr"]
+        # slow down the node hosting replica 0 — hard enough that the
+        # slowdown dominates wall-clock jitter on a loaded CI machine
+        victim = cf.replicas[0].node_id
+        inject_slowdown(eng, victim, 1e4)
+        try:
+            unhedged = measure_tail(eng, "hr", wl, hedge=False, repeats=3)
+            hedged = measure_tail(eng, "hr", wl, hedge=True, repeats=3)
+            assert hedged.hedged_fraction > 0
+            # hedged reads duplicate onto a non-straggler, so the tail
+            # must drop by far more than scheduler noise
+            assert hedged.p99 <= unhedged.p99 * 1.05
+        finally:
+            clear_slowdowns(eng)
+
+    def test_hedged_read_lands_off_straggler(self, setup):
+        eng, wl, _ = setup
+        cf = eng.column_families["hr"]
+        victim = cf.replicas[0].node_id
+        inject_slowdown(eng, victim, 1e4)
+        try:
+            for q in wl.queries[:10]:
+                _, rep = eng.read("hr", q, hedge=True)
+                if rep.hedged:
+                    assert rep.node_id != victim
+        finally:
+            clear_slowdowns(eng)

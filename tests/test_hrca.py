@@ -1,0 +1,75 @@
+"""HRCA (Algorithm 1): optimality on small instances + behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    Eq,
+    Query,
+    Range,
+    Workload,
+    exhaustive_search,
+    hrca,
+    initial_state,
+)
+from repro.core.ecdf import TableStats
+from repro.core.tpch import generate_simulation
+
+
+def _setup(n_keys=3, n_rows=20_000, seed=0, n_q=20):
+    kc, vc, schema = generate_simulation(n_rows, n_keys, seed=seed)
+    stats = TableStats.from_columns(kc, schema)
+    model = CostModel(stats=stats)
+    rng = np.random.default_rng(seed + 1)
+    from repro.core import random_workload
+
+    wl = random_workload(rng, schema, list(kc), n_q)
+    return model, wl, tuple(kc)
+
+
+class TestHRCA:
+    def test_matches_exhaustive_on_small_instance(self):
+        model, wl, keys = _setup(n_keys=3, n_q=15)
+        _, best_cost = exhaustive_search(model, wl, keys, 2)
+        res = hrca(model, wl, initial_state(keys, 2), k_max=3000, seed=0,
+                   restarts=2, greedy_descent=True)
+        assert res.cost <= best_cost * 1.001 + 1e-9
+
+    def test_never_worse_than_initial(self):
+        model, wl, keys = _setup(n_keys=4, n_q=25, seed=3)
+        res = hrca(model, wl, initial_state(keys, 3), k_max=1500, seed=1)
+        assert res.cost <= res.initial_cost + 1e-12
+
+    def test_rf1_equals_single_layout_search(self):
+        """With RF=1 heterogeneity cannot help (paper Fig 5b: HR == TR at
+        replication factor 1)."""
+        model, wl, keys = _setup(n_keys=3, n_q=15, seed=5)
+        _, best1 = exhaustive_search(model, wl, keys, 1)
+        res = hrca(model, wl, initial_state(keys, 1), k_max=3000, seed=0,
+                   greedy_descent=True)
+        assert res.cost <= best1 * 1.001 + 1e-9
+        assert res.cost >= best1 * 0.999 - 1e-9
+
+    def test_more_replicas_never_hurt(self):
+        model, wl, keys = _setup(n_keys=3, n_q=20, seed=7)
+        costs = []
+        for rf in (1, 2, 3):
+            res = hrca(model, wl, initial_state(keys, rf), k_max=2500, seed=0,
+                       greedy_descent=True)
+            costs.append(res.cost)
+        assert costs[1] <= costs[0] * 1.001
+        assert costs[2] <= costs[1] * 1.001
+
+    def test_trace_monotone_best(self):
+        model, wl, keys = _setup(seed=9)
+        res = hrca(model, wl, initial_state(keys, 2), k_max=800, seed=2)
+        assert res.n_steps == 800
+        assert min(res.trace) <= res.trace[0]
+
+    def test_converges_fast_wallclock(self):
+        """Paper §3.2: 'generally converges in ten seconds' — our memoized
+        implementation is far under that at paper-scale instances."""
+        model, wl, keys = _setup(n_keys=5, n_q=50, seed=11)
+        res = hrca(model, wl, initial_state(keys, 3), k_max=4000, seed=0)
+        assert res.wall_seconds < 10.0

@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Eq, Query, Range, SortedTable
+from repro.kernels import (
+    ecdf_hist,
+    ecdf_hist_ref,
+    scan_agg,
+    scan_agg_ref,
+    table_scan_device,
+)
+
+
+class TestScanAgg:
+    @pytest.mark.parametrize("K", [1, 2, 3, 5, 8, 11])
+    @pytest.mark.parametrize("N", [1, 100, 2048, 5000])
+    def test_shape_sweep(self, rng, K, N):
+        keys = rng.integers(0, 64, (K, N)).astype(np.int32)
+        vals = rng.uniform(-2, 2, N).astype(np.float32)
+        lo = rng.integers(0, 32, K).astype(np.int32)
+        hi = (lo + rng.integers(1, 32, K)).astype(np.int32)
+        slab = np.sort(rng.integers(0, N + 1, 2)).astype(np.int32)
+        got = np.asarray(scan_agg(keys, vals, lo, hi, slab, block_n=512))
+        want = np.asarray(
+            scan_agg_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
+                         jnp.asarray(hi), jnp.asarray(slab))
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("block_n", [128, 256, 2048])
+    def test_block_size_invariance(self, rng, block_n):
+        keys = rng.integers(0, 16, (3, 3000)).astype(np.int32)
+        vals = rng.uniform(0, 1, 3000).astype(np.float32)
+        lo = np.zeros(3, np.int32)
+        hi = np.full(3, 8, np.int32)
+        slab = np.array([100, 2900], np.int32)
+        a = np.asarray(scan_agg(keys, vals, lo, hi, slab, block_n=block_n))
+        b = np.asarray(scan_agg(keys, vals, lo, hi, slab, block_n=1024))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_value_dtypes(self, rng):
+        keys = rng.integers(0, 8, (2, 1000)).astype(np.int32)
+        lo = np.zeros(2, np.int32); hi = np.full(2, 4, np.int32)
+        slab = np.array([0, 1000], np.int32)
+        for dt in (np.float32, np.float64, np.int32):
+            vals = rng.integers(0, 5, 1000).astype(dt)
+            got = np.asarray(scan_agg(keys, vals, lo, hi, slab))
+            want = np.asarray(
+                scan_agg_ref(jnp.asarray(keys), jnp.asarray(vals, dtype=jnp.float32),
+                             jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(slab))
+            )
+            np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_empty_slab(self, rng):
+        keys = rng.integers(0, 8, (2, 512)).astype(np.int32)
+        vals = rng.uniform(0, 1, 512).astype(np.float32)
+        got = np.asarray(scan_agg(keys, vals, np.zeros(2, np.int32),
+                                  np.full(2, 8, np.int32), np.array([7, 7], np.int32)))
+        assert got[0] == 0 and got[1] == 0
+
+    def test_matches_table_engine(self, rng):
+        kc = {"a": rng.integers(0, 30, 4000), "b": rng.integers(0, 30, 4000)}
+        vc = {"m": rng.uniform(0, 5, 4000)}
+        t = SortedTable.from_columns(kc, vc, ("b", "a"))
+        for _ in range(5):
+            q = Query(
+                filters={"a": Range(int(rng.integers(0, 15)), int(rng.integers(15, 30))),
+                         "b": Eq(int(rng.integers(0, 30)))},
+                agg="sum", value_col="m",
+            )
+            dev_val, dev_cnt = table_scan_device(t, q)
+            res = t.execute(q)
+            assert dev_cnt == res.rows_matched
+            np.testing.assert_allclose(dev_val, res.value, rtol=1e-4, atol=1e-3)
+
+
+class TestEcdfHist:
+    @pytest.mark.parametrize("N,B,W", [(100, 8, 1), (4096, 64, 3), (10_000, 512, 2),
+                                       (3000, 1024, 7), (555, 16, 16)])
+    def test_shape_sweep(self, rng, N, B, W):
+        col = rng.integers(0, B * W, N).astype(np.int32)
+        got = np.asarray(ecdf_hist(col, n_bins=B, bin_width=W, block_n=256))
+        want = np.asarray(ecdf_hist_ref(jnp.asarray(col), n_bins=B, bin_width=W))
+        np.testing.assert_allclose(got, want)
+
+    def test_total_mass(self, rng):
+        col = rng.integers(0, 100, 5000).astype(np.int32)
+        got = np.asarray(ecdf_hist(col, n_bins=100, bin_width=1))
+        assert got.sum() == 5000
+
+    def test_large_bins_fallback_to_ref(self, rng):
+        col = rng.integers(0, 10_000, 2000).astype(np.int32)
+        got = np.asarray(ecdf_hist(col, n_bins=5000, bin_width=2))
+        want = np.asarray(ecdf_hist_ref(jnp.asarray(col), n_bins=5000, bin_width=2))
+        np.testing.assert_allclose(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 6),
+    n=st.integers(1, 700),
+)
+def test_property_scan_agg_matches_ref(seed, k, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 20, (k, n)).astype(np.int32)
+    vals = rng.uniform(-1, 1, n).astype(np.float32)
+    lo = rng.integers(0, 10, k).astype(np.int32)
+    hi = (lo + rng.integers(0, 12, k)).astype(np.int32)
+    slab = np.sort(rng.integers(0, n + 1, 2)).astype(np.int32)
+    got = np.asarray(scan_agg(keys, vals, lo, hi, slab, block_n=128))
+    want = np.asarray(
+        scan_agg_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
+                     jnp.asarray(hi), jnp.asarray(slab))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)

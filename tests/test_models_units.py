@@ -1,0 +1,152 @@
+"""Unit tests for model components: flash attention vs naive, RoPE, SSD."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, flash_attention, rmsnorm
+
+
+def naive_attention(q, k, v, causal=True, window=0, scale=None):
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    sc = scale or 1.0 / math.sqrt(D)
+    qr = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32), k.astype(jnp.float32)) * sc
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, S, H, v.shape[-1])
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,qc,kc", [(16, 4, 4), (33, 8, 16), (64, 64, 64), (17, 5, 3)])
+    @pytest.mark.parametrize("G", [1, 4])
+    def test_matches_naive_causal(self, rng, S, qc, kc, G):
+        B, Hkv, D = 2, 2, 8
+        q = jnp.asarray(rng.normal(0, 1, (B, S, Hkv * G, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        got = flash_attention(q, k, v, pos, pos, causal=True, q_chunk=qc, kv_chunk=kc)
+        want = naive_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [1, 4, 9])
+    def test_sliding_window(self, rng, window):
+        B, S, H, D = 1, 24, 2, 8
+        q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        got = flash_attention(q, k, v, pos, pos, causal=True, window=window,
+                              q_chunk=8, kv_chunk=8)
+        want = naive_attention(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_traced_window_equals_static(self, rng):
+        B, S, H, D = 1, 16, 2, 4
+        q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+        kv = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        a = flash_attention(q, kv, kv, pos, pos, window=5, q_chunk=4, kv_chunk=4)
+        b = flash_attention(q, kv, kv, pos, pos, window=jnp.int32(5), q_chunk=4, kv_chunk=4)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestRoPE:
+    def test_preserves_norm(self, rng):
+        x = jnp.asarray(rng.normal(0, 1, (2, 8, 4, 16)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+        y = apply_rope(x, pos, 10_000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_relative_property(self, rng):
+        """<rope(q,m), rope(k,n)> depends only on m−n."""
+        q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 8)), jnp.float32)
+
+        def dot(m, n):
+            qm = apply_rope(q, jnp.full((1, 1), m, jnp.int32), 100.0)
+            kn = apply_rope(k, jnp.full((1, 1), n, jnp.int32), 100.0)
+            return float(jnp.sum(qm * kn))
+
+        assert abs(dot(3, 1) - dot(7, 5)) < 1e-4
+        assert abs(dot(10, 10) - dot(0, 0)) < 1e-4
+
+    def test_partial_rotary_untouched_dims(self, rng):
+        x = jnp.asarray(rng.normal(0, 1, (1, 4, 2, 16)), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32), (1, 4))
+        y = apply_rope(x, pos, 10_000.0, rotary_pct=0.5)
+        np.testing.assert_array_equal(np.asarray(x[..., 8:]), np.asarray(y[..., 8:]))
+        assert not np.allclose(np.asarray(x[..., :8]), np.asarray(y[..., :8]))
+
+
+class TestSSD:
+    def _cfg(self):
+        return ArchConfig(
+            name="t", family="ssm", n_layers=1, d_model=32, n_heads=0, n_kv_heads=0,
+            d_ff=0, vocab_size=16, attention="none", ssm_state=8, ssm_head_dim=8,
+            ssm_expand=2, ssm_conv=4, ssm_chunk=4, dtype="float32",
+        )
+
+    def test_chunk_size_invariance(self, rng):
+        cfg = self._cfg()
+        p = ssm_mod.init_ssm(jax.random.PRNGKey(0), cfg, 1, jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1, (2, 16, 32)), jnp.float32)
+        y1 = ssm_mod.ssm_forward(p, x, cfg, 1, chunk=1)
+        y4 = ssm_mod.ssm_forward(p, x, cfg, 1, chunk=4)
+        y16 = ssm_mod.ssm_forward(p, x, cfg, 1, chunk=16)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y16), rtol=1e-4, atol=1e-5)
+
+    def test_decode_matches_forward(self, rng):
+        cfg = self._cfg()
+        p = ssm_mod.init_ssm(jax.random.PRNGKey(0), cfg, 1, jnp.float32)
+        B, T = 2, 12
+        x = jnp.asarray(rng.normal(0, 1, (B, T, 32)), jnp.float32)
+        y_full = ssm_mod.ssm_forward(p, x, cfg, 1, chunk=4)
+        st = ssm_mod.init_ssm_state(cfg, 1, B, jnp.float32)
+        ys = []
+        for t in range(T):
+            y, st = ssm_mod.ssm_decode(p, x[:, t : t + 1], st, cfg, 1)
+            ys.append(y)
+        y_dec = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec), rtol=1e-4, atol=1e-5)
+
+    def test_causality(self, rng):
+        """Future tokens cannot change past outputs."""
+        cfg = self._cfg()
+        p = ssm_mod.init_ssm(jax.random.PRNGKey(0), cfg, 1, jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1, (1, 8, 32)), jnp.float32)
+        y1 = ssm_mod.ssm_forward(p, x, cfg, 1, chunk=4)
+        x2 = x.at[0, 6].set(99.0)
+        y2 = ssm_mod.ssm_forward(p, x2, cfg, 1, chunk=4)
+        np.testing.assert_allclose(
+            np.asarray(y1[:, :6]), np.asarray(y2[:, :6]), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_rmsnorm_scale_and_dtype(rng):
+    x = jnp.asarray(rng.normal(0, 3, (4, 16)), jnp.bfloat16)
+    y = rmsnorm(x, jnp.ones(16, jnp.float32))
+    assert y.dtype == jnp.bfloat16
+    norm = np.linalg.norm(np.asarray(y, np.float32), axis=-1) / np.sqrt(16)
+    np.testing.assert_allclose(norm, 1.0, rtol=0.05)
