@@ -19,12 +19,13 @@ def main() -> None:
     ap.add_argument("--json", default=None)
     ap.add_argument(
         "--only", default=None,
-        help="comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,kernels",
+        help="comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,kernels,batched",
     )
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (
+        batched_read,
         fig4_cost_model,
         fig5a_datasize,
         fig5b_repfactor,
@@ -64,6 +65,10 @@ def main() -> None:
         results["hrca"] = hrca_convergence.run(n_rows=1_000_000 if full else 200_000)
     if want("kernels"):
         results["kernels"] = kernel_bench.run()
+    if want("batched"):
+        results["batched"] = batched_read.run(
+            n_rows=1_500_000 if full else 120_000
+        )
 
     import os
 

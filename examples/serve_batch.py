@@ -1,26 +1,34 @@
-"""Batched serving: prefill a prompt batch, decode with a KV cache.
+"""Batched serving: model decode batches AND batched HR reads.
 
-Uses the smoke-size StarCoder2 config on CPU; under a TPU mesh the same
-entry point runs the sequence-parallel decode path (seq-sharded KV with
+Default mode prefills a prompt batch and decodes with a KV cache using
+the smoke-size StarCoder2 config on CPU; under a TPU mesh the same entry
+point runs the sequence-parallel decode path (seq-sharded KV with
 cross-chip flash-decoding). Run:
 
     PYTHONPATH=src python examples/serve_batch.py [--arch hymba-1.5b]
+
+``--hr`` serves a batch of TPC-H-style queries through the HR engine's
+batched read path instead: one ``read_many`` call ranks replicas for
+the whole batch (vectorized cost model), groups queries per chosen
+replica, and answers each group with a single vectorized slab scan —
+compare its queries/sec against the sequential ``read`` loop:
+
+    PYTHONPATH=src python examples/serve_batch.py --hr --batch 64
 """
 
 import argparse
+import itertools
+import time
 
-from repro.configs.registry import ARCHS, get_smoke
-from repro.launch.serve import serve_batch
 
+def run_model(args) -> None:
+    from repro.configs.registry import ARCHS, get_smoke
+    from repro.launch.serve import serve_batch
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="starcoder2-3b", choices=ARCHS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=24)
-    args = ap.parse_args()
-
+    if args.arch not in ARCHS:
+        raise SystemExit(
+            f"unknown --arch {args.arch!r}; choices: {', '.join(sorted(ARCHS))}"
+        )
     cfg = get_smoke(args.arch)
     print(f"serving {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen}")
@@ -30,6 +38,62 @@ def main() -> None:
     print(f"decode:  {out['decode_tok_s']:.1f} tok/s "
           f"({out['decode_s']*1e3:.1f} ms for {args.gen} steps)")
     print(f"sample continuation (greedy): {out['tokens'][0].tolist()}")
+
+
+def run_hr(args) -> None:
+    from repro.core import HREngine
+    from repro.core.tpch import generate_orders, orders_schema, q1_q2_workload
+
+    n_rows = args.rows
+    print(f"HR batched read demo: {n_rows} orders rows, batch={args.batch}")
+    kc, vc = generate_orders(1.0, seed=0, rows_per_sf=n_rows)
+    wl = q1_q2_workload(args.batch, seed=1, n_rows=n_rows)
+    eng = HREngine(n_nodes=6)
+    eng.create_column_family(
+        "orders", kc, vc, replication_factor=3, mechanism="HR", workload=wl,
+        schema=orders_schema(), hrca_kwargs={"k_max": 2500, "seed": 0},
+    )
+    print(f"replica layouts: {[list(a) for a in eng.layouts('orders')]}")
+
+    cf = eng.column_families["orders"]
+    cf.rr_counter = itertools.count()  # same tie-break draws for both paths
+    t0 = time.perf_counter()
+    seq = [eng.read("orders", q) for q in wl.queries]
+    t_seq = time.perf_counter() - t0
+    cf.rr_counter = itertools.count()
+    t0 = time.perf_counter()
+    bat = eng.read_many("orders", wl.queries)
+    t_bat = time.perf_counter() - t0
+
+    assert all(rb.value == rs.value for (rs, _), (rb, _) in zip(seq, bat))
+    total = sum(r.value for r, _ in bat)
+    per_replica: dict[int, int] = {}
+    for _, rep in bat:
+        per_replica[rep.replica_id] = per_replica.get(rep.replica_id, 0) + 1
+    print(f"sequential: {args.batch / t_seq:,.0f} q/s ({t_seq*1e3:.1f} ms)")
+    print(f"read_many:  {args.batch / t_bat:,.0f} q/s ({t_bat*1e3:.1f} ms) "
+          f"— {t_seq / t_bat:.1f}x")
+    print(f"routing: {per_replica} (queries per replica), Σvalue={total:,.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hr", action="store_true",
+                    help="serve a query batch via HREngine.read_many")
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="default: 4 (model mode), 64 (--hr mode)")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--rows", type=int, default=120_000,
+                    help="orders rows for --hr mode")
+    args = ap.parse_args()
+    if args.batch is None:
+        args.batch = 64 if args.hr else 4
+    if args.hr:
+        run_hr(args)
+    else:
+        run_model(args)
 
 
 if __name__ == "__main__":

@@ -4,18 +4,26 @@ Layers: composite keys → SortedTable (SSTable analogue) → ECDF stats →
 cost model (Eq 1–4) → HRCA (Alg 1) → HREngine (paper §4).
 """
 
-from .cost_model import CostModel, LinearCostFunction, estimate_rows
+from .cost_model import (
+    CostModel,
+    LinearCostFunction,
+    estimate_rows,
+    estimate_rows_many,
+    precompute_query_stats,
+)
 from .ecdf import ColumnStats, TableStats
 from .engine import ColumnFamily, HREngine, Node, ReadReport, ReplicaHandle
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema, pack_columns, pack_tuple, unpack_key
-from .table import ScanResult, SortedTable, slab_bounds_for
+from .table import ScanResult, SortedTable, slab_bounds_for, slab_bounds_many
 from .workload import Eq, Query, Range, Workload, random_workload
 
 __all__ = [
     "CostModel",
     "LinearCostFunction",
     "estimate_rows",
+    "estimate_rows_many",
+    "precompute_query_stats",
     "ColumnStats",
     "TableStats",
     "ColumnFamily",
@@ -34,6 +42,7 @@ __all__ = [
     "ScanResult",
     "SortedTable",
     "slab_bounds_for",
+    "slab_bounds_many",
     "Eq",
     "Query",
     "Range",

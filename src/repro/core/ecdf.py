@@ -88,6 +88,42 @@ class ColumnStats:
         mass = self.counts[b] / self.total
         return float(mass if self.bin_width == 1 else mass / self.bin_width)
 
+    # -- vectorized forms (batched read path) ------------------------------
+    #
+    # These evaluate the exact same float64 expressions as the scalar
+    # methods, elementwise, so per-query costs from the batched estimator
+    # are bit-identical to the sequential ones (routing decisions match).
+
+    def cdf_many(self, x: np.ndarray) -> np.ndarray:
+        """Vectorized ``cdf``: float64[...] → float64[...]."""
+        x = np.asarray(x, dtype=np.float64)
+        if self.total == 0:
+            return np.zeros_like(x)
+        x = np.clip(x, 0, self.domain)
+        b = (x // self.bin_width).astype(np.int64)
+        cum = self._cum()
+        below = cum[np.minimum(b, self.n_bins)]
+        interior = b < self.n_bins
+        frac = np.where(interior, (x - b * self.bin_width) / self.bin_width, 0.0)
+        inbin = np.where(interior, self.counts[np.minimum(b, self.n_bins - 1)], 0.0) * frac
+        return (below + inbin) / self.total
+
+    def range_selectivity_many(self, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+        """Vectorized ``range_selectivity`` over [lo, hi) pairs."""
+        return np.maximum(0.0, self.cdf_many(hi) - self.cdf_many(lo))
+
+    def pmf_many(self, v: np.ndarray) -> np.ndarray:
+        """Vectorized ``pmf``: int[...] → float64[...]."""
+        v = np.asarray(v, dtype=np.int64)
+        if self.total == 0:
+            return np.zeros(v.shape, dtype=np.float64)
+        b = v // self.bin_width
+        valid = (b >= 0) & (b < self.n_bins)
+        mass = self.counts[np.where(valid, b, 0)] / self.total
+        if self.bin_width != 1:
+            mass = mass / self.bin_width
+        return np.where(valid, mass, 0.0)
+
     def merge_values(self, values: np.ndarray) -> None:
         """Streaming update on writes (engine Write Scheduler)."""
         idx = np.asarray(values, dtype=np.int64) // self.bin_width

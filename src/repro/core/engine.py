@@ -2,7 +2,8 @@
 
 Five modules, mapped 1:1 onto the paper's Figure 3:
 
-  Request Agency    → ``HREngine.read`` / ``HREngine.write`` (client API)
+  Request Agency    → ``HREngine.read`` / ``read_many`` / ``write``
+                      (client API)
   Replica Generator → ``create_column_family`` (runs HRCA at CREATE, then
                       places replicas on nodes via hash(replica_id, pk))
   Cost Evaluator    → ``CostModel`` over live ``TableStats``
@@ -17,6 +18,30 @@ Five modules, mapped 1:1 onto the paper's Figure 3:
 Nodes are simulated (this container is one host), but every byte of the
 data path is real: tables, scans, sorts and stats are actual arrays, so
 rows_scanned/latency numbers in benchmarks are measurements, not models.
+
+Batched reads (``read_many``)
+-----------------------------
+Production traffic arrives in batches; ``read_many`` amortizes the
+scheduler and the storage scan across a whole batch while preserving the
+sequential semantics exactly:
+
+* **Cost estimation** is vectorized over all (query, replica) pairs
+  (``estimate_rows_many``); the float64 expressions match the scalar
+  path bit-for-bit, so the cost matrix equals Q×R scalar calls.
+* **Tie-break**: per query (in batch order) the cheapest live replicas
+  within the same relative tolerance as ``read`` form the tie set, and
+  one round-robin counter draw is consumed per query — a ``read_many``
+  over a batch picks exactly the replicas a sequential ``read`` loop
+  would.
+* **Execution** groups queries by chosen replica and answers each group
+  with one ``SortedTable.execute_many`` (single vectorized searchsorted
+  over packed slab bounds); per-query results/rows_scanned are identical
+  to ``execute``. Group wall time is attributed evenly across the
+  group's queries (× node slowdown).
+* **Hedging**: with ``hedge=True``, queries whose chosen node is a
+  straggler (slowdown > ``hedge_ratio``) are duplicated — grouped per
+  alternate replica (the next-cheapest on a *different* node, as in
+  ``read``) — and the faster copy wins per query.
 """
 
 from __future__ import annotations
@@ -24,11 +49,18 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+import zlib
 from typing import Mapping, Sequence
 
 import numpy as np
 
-from .cost_model import CostModel, LinearCostFunction, estimate_rows
+from .cost_model import (
+    CostModel,
+    LinearCostFunction,
+    estimate_rows,
+    estimate_rows_many,
+    precompute_query_stats,
+)
 from .ecdf import TableStats
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema
@@ -88,6 +120,16 @@ class ReadReport:
 _Ranked = tuple[float, float, ReplicaHandle]  # (est_cost, est_rows, handle)
 
 
+def _tie_threshold(best_cost: float) -> float:
+    """Cost at or under which a replica counts as tied with the best.
+    Shared by ``read`` and ``read_many`` — batched/sequential routing
+    parity depends on both using the identical float expression. The
+    margin is on |cost| so the threshold is ≥ best_cost even when a
+    fitted cost function goes negative (negative intercept): the tie
+    set always contains the cheapest replica."""
+    return best_cost + abs(best_cost) * 1e-9 + 1e-12
+
+
 class HREngine:
     """Simulated-cluster HR engine (Request Agency facade)."""
 
@@ -101,8 +143,13 @@ class HREngine:
 
     def _place(self, replica_id: int, cf_name: str) -> int:
         """Replica placement hash(replica_id, cf) → node. Successive
-        replicas land on distinct nodes when possible (Cassandra ring)."""
-        h = abs(hash(cf_name)) % len(self.nodes)
+        replicas land on distinct nodes when possible (Cassandra ring).
+
+        Uses crc32, not ``hash``: the builtin is salted per process
+        (PYTHONHASHSEED), which made placement — and every benchmark
+        downstream of it — differ between runs.
+        """
+        h = zlib.crc32(cf_name.encode("utf-8")) % len(self.nodes)
         return (h + replica_id) % len(self.nodes)
 
     def create_column_family(
@@ -238,7 +285,7 @@ class HREngine:
         cf = self.column_families[cf_name]
         ranked = self._ranked_replicas(cf, query)
         best_cost = ranked[0][0]
-        ties = [t for t in ranked if t[0] <= best_cost * (1 + 1e-9) + 1e-12]
+        ties = [t for t in ranked if t[0] <= _tie_threshold(best_cost)]
         pick = ties[next(cf.rr_counter) % len(ties)]
 
         result, report = self._execute_on(cf, pick, query, hedged=False)
@@ -251,6 +298,133 @@ class HREngine:
                 if rep2.wall_seconds < report.wall_seconds:
                     return r2, rep2
         return result, report
+
+    def read_many(
+        self,
+        cf_name: str,
+        queries: Sequence[Query],
+        *,
+        hedge: bool = False,
+        hedge_ratio: float = 2.0,
+    ) -> list[tuple[ScanResult, ReadReport]]:
+        """Batched ``read``: one scheduler pass and one grouped storage
+        scan for the whole batch (see module docstring for semantics).
+
+        Returns per-query ``(ScanResult, ReadReport)`` in batch order;
+        results and routing decisions are identical to calling ``read``
+        on each query in sequence.
+        """
+        cf = self.column_families[cf_name]
+        queries = list(queries)
+        if not queries:
+            return []
+        live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
+        if not live:
+            raise RuntimeError(f"no live replica for {cf_name!r}")
+        n_q = len(queries)
+
+        # vectorized Cost Evaluator: Eq (1)-(2) over all (replica, query);
+        # per-column selectivities are extracted once and shared by all
+        # replica layouts
+        pre = precompute_query_stats(cf.stats, queries, cf.key_names)
+        rows_mat = np.stack(
+            [estimate_rows_many(cf.stats, r.layout, queries, pre) for r in live]
+        )
+        cost_mat = np.stack(
+            [
+                cf.cost_model.cost_fn(len(r.layout)).many(rows_mat[k])
+                for k, r in enumerate(live)
+            ]
+        )
+
+        # Request Scheduler: per-query cheapest replica, RR tie-break.
+        # Sorted ascending, the within-tolerance ties are exactly the
+        # first tie_count entries of each column's stable order — the
+        # same tie list ``read`` builds. One rr_counter draw per query,
+        # in batch order, so a batch matches a sequential read loop.
+        order_mat = np.argsort(cost_mat, axis=0, kind="stable")  # (R, Q)
+        sorted_costs = np.take_along_axis(cost_mat, order_mat, axis=0)
+        thresh = _tie_threshold(sorted_costs[0])  # elementwise over queries
+        tie_counts = (sorted_costs <= thresh[None, :]).sum(axis=0)
+        draws = np.fromiter(
+            (next(cf.rr_counter) for _ in range(n_q)), dtype=np.int64, count=n_q
+        )
+        picks = order_mat[draws % tie_counts, np.arange(n_q)]
+
+        # group queries by chosen replica; one batched scan per group
+        groups: dict[int, list[int]] = {}
+        for qi in range(n_q):
+            groups.setdefault(int(picks[qi]), []).append(qi)
+        results: list[ScanResult | None] = [None] * n_q
+        reports: list[ReadReport | None] = [None] * n_q
+        for k, qidx in groups.items():
+            self._execute_group(
+                cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
+                results, reports, hedged=False,
+            )
+
+        if hedge and len(live) > 1:
+            # duplicate straggler-bound queries onto the next-cheapest
+            # replica on a different node (same alternate ``read`` picks)
+            hedge_groups: dict[int, list[int]] = {}
+            for qi in range(n_q):
+                pick_node = live[int(picks[qi])].node_id
+                if self.nodes[pick_node].slowdown <= hedge_ratio:
+                    continue
+                alt = next(
+                    (
+                        int(k)
+                        for k in order_mat[:, qi]
+                        if live[int(k)].node_id != pick_node
+                    ),
+                    -1,
+                )
+                if alt >= 0:
+                    hedge_groups.setdefault(alt, []).append(qi)
+            for k, qidx in hedge_groups.items():
+                self._execute_group(
+                    cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
+                    results, reports, hedged=True,
+                )
+
+        return list(zip(results, reports))  # type: ignore[arg-type]
+
+    def _execute_group(
+        self,
+        cf: ColumnFamily,
+        r: ReplicaHandle,
+        qidx: list[int],
+        queries: list[Query],
+        est_rows: np.ndarray,
+        est_costs: np.ndarray,
+        results: list,
+        reports: list,
+        *,
+        hedged: bool,
+    ) -> None:
+        """Run one replica's query group via ``execute_many``; group wall
+        time (× node slowdown) is split evenly across the group. Hedged
+        runs only replace a query's primary result when faster."""
+        table = self._table(cf, r)
+        t0 = time.perf_counter()
+        scans = table.execute_many([queries[i] for i in qidx])
+        wall = (time.perf_counter() - t0) * self.nodes[r.node_id].slowdown
+        per_q_wall = wall / len(qidx)
+        for i, sr in zip(qidx, scans):
+            if hedged and not (
+                reports[i] is None or per_q_wall < reports[i].wall_seconds
+            ):
+                continue
+            results[i] = sr
+            reports[i] = ReadReport(
+                replica_id=r.replica_id,
+                node_id=r.node_id,
+                estimated_rows=float(est_rows[i]),
+                estimated_cost=float(est_costs[i]),
+                wall_seconds=per_q_wall,
+                rows_scanned=sr.rows_scanned,
+                hedged=hedged,
+            )
 
     # -- Write Scheduler -------------------------------------------------------
 

@@ -19,10 +19,10 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from .keys import KeySchema, pack_columns, pack_tuple
+from .keys import KeySchema, _field_shifts, pack_columns, pack_tuple
 from .workload import Query
 
-__all__ = ["SortedTable", "ScanResult", "slab_bounds_for"]
+__all__ = ["SortedTable", "ScanResult", "slab_bounds_for", "slab_bounds_many"]
 
 
 @dataclasses.dataclass
@@ -53,6 +53,11 @@ def slab_bounds_for(
             lo_c, hi_c = 0, schema.max_value(col) + 1
         else:
             lo_c, hi_c = query.filter_bounds(schema, col)
+            if hi_c <= lo_c:
+                # degenerate (empty) filter range: the query matches no
+                # row — return an empty slab instead of packing hi_c - 1
+                # (< lo_c), which would raise.
+                return 0, 0
             if not query.is_equality_on(col):
                 open_range = True
         los.append(lo_c)
@@ -60,6 +65,67 @@ def slab_bounds_for(
     lo = pack_tuple(los, layout, schema)
     hi = pack_tuple(his, layout, schema) + 1  # exclusive
     return lo, hi
+
+
+def slab_bounds_many(
+    queries: Sequence[Query], layout: Sequence[str], schema: KeySchema
+) -> np.ndarray:
+    """Packed-key [lo, hi] slab bounds for a query batch: int64[Q, 2].
+
+    Same walk as :func:`slab_bounds_for` but with the per-column bounds
+    gathered into ``int64[Q, K]`` arrays and packed with one vectorized
+    shift-or per column. Unlike the scalar function the upper bound is
+    returned *inclusive* — a 63-bit schema packs its maximum key to
+    ``2**63 − 1``, and the scalar ``+ 1`` would wrap int64 (``slab_many``
+    compensates with ``side="right"``, an exact equivalent). Queries
+    with a degenerate (empty) filter range get ``lo = 0, hi = −1``.
+    """
+    schema.check_layout(layout)
+    n_q, n_k = len(queries), len(layout)
+    los = np.zeros((n_q, n_k), dtype=np.int64)
+    his = np.zeros((n_q, n_k), dtype=np.int64)
+    nonempty = np.ones(n_q, dtype=bool)
+    open_range = np.zeros(n_q, dtype=bool)
+    for j, col in enumerate(layout):
+        full_lo, full_hi = 0, schema.max_value(col) + 1
+        for i, q in enumerate(queries):
+            if open_range[i] or not nonempty[i]:
+                # open prefix — or a query already known empty, whose
+                # remaining filters must not be evaluated (the scalar
+                # walk returns before reaching them)
+                lo_c, hi_c = full_lo, full_hi
+            else:
+                f = q.filters.get(col)
+                if f is None:  # global range filter opens the prefix
+                    lo_c, hi_c = full_lo, full_hi
+                    open_range[i] = True
+                elif f.is_equality:
+                    lo_c = f.value
+                    hi_c = lo_c + 1
+                else:
+                    lo_c, hi_c = f.start, f.end
+                    if hi_c <= lo_c:
+                        nonempty[i] = False
+                        lo_c, hi_c = full_lo, full_hi  # placeholder; masked below
+                    else:
+                        open_range[i] = True
+            los[i, j] = lo_c
+            his[i, j] = hi_c - 1  # inclusive upper value per field
+    # validation is deferred and masked: the scalar walk returns (empty
+    # slab) on a degenerate range before pack_tuple ever checks the
+    # other columns, so only nonempty queries may raise here
+    for j, col in enumerate(layout):
+        bad = nonempty & ((los[:, j] < 0) | (his[:, j] > schema.max_value(col)))
+        if bad.any():
+            raise ValueError(
+                f"query {int(np.argmax(bad))} bounds out of range for column {col!r}"
+            )
+    # MSB-first packing, same field shifts as keys.pack_tuple
+    sh = np.asarray(_field_shifts(schema, layout), dtype=np.int64)
+    out = np.empty((n_q, 2), dtype=np.int64)
+    out[:, 0] = ((los << sh).sum(axis=1)) * nonempty
+    out[:, 1] = np.where(nonempty, (his << sh).sum(axis=1), -1)
+    return out
 
 
 @dataclasses.dataclass
@@ -138,8 +204,25 @@ class SortedTable:
         """Row index range [lo_idx, hi_idx) the query must stream."""
         lo_key, hi_key = slab_bounds_for(query, self.layout, self.schema)
         lo = int(np.searchsorted(self.packed, lo_key, side="left"))
-        hi = int(np.searchsorted(self.packed, hi_key, side="left"))
+        # search for the inclusive upper key with side="right": a 63-bit
+        # schema's exclusive bound is 2**63, which does not fit int64 and
+        # would be float-cast (losing low bits) by searchsorted
+        hi = int(np.searchsorted(self.packed, hi_key - 1, side="right"))
         return lo, hi
+
+    def slab_many(self, queries: Sequence[Query]) -> np.ndarray:
+        """Row index slabs ``int64[Q, 2]`` for a query batch.
+
+        One vectorized ``np.searchsorted`` over the packed bound array
+        replaces 2·Q per-query binary searches (the batched read path's
+        slab location step).
+        """
+        bounds = slab_bounds_many(queries, self.layout, self.schema)
+        lo = np.searchsorted(self.packed, bounds[:, 0], side="left")
+        # inclusive upper key + side="right" ≡ scalar (hi + 1, side="left")
+        # without the int64 wrap at 63-bit schemas
+        hi = np.searchsorted(self.packed, bounds[:, 1], side="right")
+        return np.stack([lo, hi], axis=1).astype(np.int64)
 
     def execute(self, query: Query) -> ScanResult:
         """Stream the slab, apply residual predicates, aggregate.
@@ -149,6 +232,24 @@ class SortedTable:
         is tested against this method.
         """
         lo, hi = self.slab(query)
+        return self._scan_slab(query, lo, hi)
+
+    def execute_many(self, queries: Sequence[Query]) -> list[ScanResult]:
+        """Batched ``execute``: locate all slabs with one vectorized
+        searchsorted (``slab_many``), then run the residual scan per
+        query. Result ``i`` is identical to ``execute(queries[i])`` by
+        construction (same residual-scan code over the same slab).
+
+        The device-side batched path (one Pallas kernel invocation for
+        the whole batch) is ``repro.kernels.table_scan_device_many``.
+        """
+        slabs = self.slab_many(queries)
+        return [
+            self._scan_slab(q, int(slabs[i, 0]), int(slabs[i, 1]))
+            for i, q in enumerate(queries)
+        ]
+
+    def _scan_slab(self, query: Query, lo: int, hi: int) -> ScanResult:
         n = hi - lo
         if n <= 0:
             return ScanResult(0.0, 0, 0, np.empty(0, np.int64) if query.agg == "select" else None)

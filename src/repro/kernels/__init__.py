@@ -1,12 +1,33 @@
 """Pallas TPU kernels for the HR hot paths.
 
-scan_agg  — predicated slab scan + aggregate (the paper's query loop)
-ecdf_hist — histogram/ECDF build for the Cost Evaluator
+scan_agg         — predicated slab scan + aggregate (the paper's query loop)
+scan_agg_batched — one launch over a (queries × row blocks) grid: a
+                   whole query batch shares a replica's device-resident
+                   columns (the ``read_many`` device path)
+ecdf_hist        — histogram/ECDF build for the Cost Evaluator
 
 Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
 jit'd public API with CPU interpret-mode fallback.
 """
 
-from .ops import ecdf_hist, ecdf_hist_ref, scan_agg, scan_agg_ref, table_scan_device
+from .ops import (
+    ecdf_hist,
+    ecdf_hist_ref,
+    scan_agg,
+    scan_agg_batched,
+    scan_agg_batched_ref,
+    scan_agg_ref,
+    table_scan_device,
+    table_scan_device_many,
+)
 
-__all__ = ["ecdf_hist", "ecdf_hist_ref", "scan_agg", "scan_agg_ref", "table_scan_device"]
+__all__ = [
+    "ecdf_hist",
+    "ecdf_hist_ref",
+    "scan_agg",
+    "scan_agg_batched",
+    "scan_agg_batched_ref",
+    "scan_agg_ref",
+    "table_scan_device",
+    "table_scan_device_many",
+]

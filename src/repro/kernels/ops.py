@@ -14,11 +14,21 @@ import numpy as np
 
 from . import ref
 from .ecdf_hist import ecdf_hist_pallas
-from .scan_agg import scan_agg_pallas
+from .scan_agg import scan_agg_batched_pallas, scan_agg_pallas
 
-__all__ = ["scan_agg", "ecdf_hist", "scan_agg_ref", "ecdf_hist_ref", "table_scan_device"]
+__all__ = [
+    "scan_agg",
+    "scan_agg_batched",
+    "ecdf_hist",
+    "scan_agg_ref",
+    "scan_agg_batched_ref",
+    "ecdf_hist_ref",
+    "table_scan_device",
+    "table_scan_device_many",
+]
 
 scan_agg_ref = ref.scan_agg_ref
+scan_agg_batched_ref = ref.scan_agg_batched_ref
 ecdf_hist_ref = ref.ecdf_hist_ref
 
 
@@ -42,10 +52,40 @@ def ecdf_hist(col, *, n_bins: int, bin_width: int, block_n: int = 512, use_palla
     return ecdf_hist_pallas(col, n_bins=n_bins, bin_width=bin_width, block_n=block_n)
 
 
+def scan_agg_batched(
+    keys, values, col_lo, col_hi, slabs, *, block_n: int = 2048, use_pallas: bool = True
+):
+    """Per-query (sum, count) for a query batch sharing one replica's
+    columns: one grid of (queries × row blocks) instead of Q kernel
+    launches. Arrays may be numpy or jax; returns float32[Q, 2]."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.float32)
+    col_lo = jnp.asarray(col_lo, jnp.int32)
+    col_hi = jnp.asarray(col_hi, jnp.int32)
+    slabs = jnp.asarray(slabs, jnp.int32)
+    if not use_pallas:
+        return ref.scan_agg_batched_ref(keys, values, col_lo, col_hi, slabs)
+    return scan_agg_batched_pallas(keys, values, col_lo, col_hi, slabs, block_n=block_n)
+
+
+def _check_device_width(table) -> None:
+    """The device path stores keys and filter bounds as int32; a column
+    needs bits ≤ 30 so that max_value + 1 (the exclusive global upper
+    bound, 2**bits) still fits. Wider schemas are served by the numpy
+    engine."""
+    wide = [c for c in table.layout if table.schema.bits[c] > 30]
+    if wide:
+        raise ValueError(
+            f"device scan path requires ≤30-bit key columns, got {wide}; "
+            "use SortedTable.execute/execute_many for wider schemas"
+        )
+
+
 def table_scan_device(table, query, *, use_pallas: bool = True) -> tuple[float, float]:
     """Device-side execution of ``SortedTable.execute`` (sum/count aggs):
     slab via packed-key searchsorted, then the scan_agg kernel. Used by
     the serving/data layers when tables are resident as jax arrays."""
+    _check_device_width(table)
     lo_idx, hi_idx = table.slab(query)
     names = list(table.layout)
     keys = np.stack([table.key_cols[c] for c in names]).astype(np.int32)
@@ -58,3 +98,43 @@ def table_scan_device(table, query, *, use_pallas: bool = True) -> tuple[float, 
     out = scan_agg(keys, vals, lo, hi, np.array([lo_idx, hi_idx]), use_pallas=use_pallas)
     s, c = float(out[0]), float(out[1])
     return (s if query.agg == "sum" else c), c
+
+
+def table_scan_device_many(
+    table, queries, *, block_n: int = 2048, use_pallas: bool = True
+) -> list[tuple[float, float]]:
+    """Batched ``table_scan_device``: all queries against one replica in
+    a single ``scan_agg_batched`` invocation. Queries must share the
+    aggregation kind (all "count", or all "sum" over one value column —
+    the batch shares a single values array on device)."""
+    queries = list(queries)
+    if not queries:
+        return []
+    aggs = {q.agg for q in queries}
+    if not aggs <= {"sum", "count"}:
+        raise ValueError(f"device path supports sum/count aggs, got {aggs}")
+    vcols = {q.value_col for q in queries if q.agg == "sum"}
+    if len(aggs) > 1 or len(vcols) > 1:
+        raise ValueError("batch must share one aggregation and value column")
+    _check_device_width(table)
+    names = list(table.layout)
+    slabs = table.slab_many(queries)
+    keys = np.stack([table.key_cols[c] for c in names]).astype(np.int32)
+    if vcols:
+        vals = np.asarray(table.value_cols[next(iter(vcols))], np.float32)
+    else:
+        vals = np.ones(len(table), np.float32)
+    bounds = np.array(
+        [[q.filter_bounds(table.schema, c) for c in names] for q in queries],
+        np.int32,
+    )  # (Q, K, 2)
+    out = np.asarray(
+        scan_agg_batched(
+            keys, vals, bounds[:, :, 0], bounds[:, :, 1],
+            slabs.astype(np.int32), block_n=block_n, use_pallas=use_pallas,
+        )
+    )
+    want_sum = "sum" in aggs
+    return [
+        ((float(s) if want_sum else float(c)), float(c)) for s, c in out
+    ]

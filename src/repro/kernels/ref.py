@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["scan_agg_ref", "ecdf_hist_ref"]
+__all__ = ["scan_agg_ref", "scan_agg_batched_ref", "ecdf_hist_ref"]
 
 
 def scan_agg_ref(
@@ -23,6 +23,28 @@ def scan_agg_ref(
     mask = (ok & in_slab).astype(jnp.float32)
     return jnp.stack(
         [jnp.sum(values.astype(jnp.float32) * mask), jnp.sum(mask)]
+    )
+
+
+def scan_agg_batched_ref(
+    keys: jax.Array,  # int32[K, N]
+    values: jax.Array,  # float32[N]
+    col_lo: jax.Array,  # int32[Q, K]
+    col_hi: jax.Array,  # int32[Q, K]
+    slabs: jax.Array,  # int32[Q, 2]
+) -> jax.Array:
+    """float32[Q, 2]: per query, (masked sum, matched count) over its slab."""
+    K, N = keys.shape
+    ridx = jnp.arange(N, dtype=jnp.int32)
+    in_slab = (ridx[None, :] >= slabs[:, 0:1]) & (ridx[None, :] < slabs[:, 1:2])  # (Q, N)
+    ok = jnp.all(
+        (keys[None, :, :] >= col_lo[:, :, None]) & (keys[None, :, :] < col_hi[:, :, None]),
+        axis=1,
+    )  # (Q, N)
+    mask = (ok & in_slab).astype(jnp.float32)
+    vals = values.astype(jnp.float32)
+    return jnp.stack(
+        [jnp.sum(vals[None, :] * mask, axis=1), jnp.sum(mask, axis=1)], axis=1
     )
 
 

@@ -11,11 +11,15 @@ in the output block across grid steps.
 HBM→VMEM traffic is exactly rows × row_bytes, which is what Eq (1) of the
 paper counts — the kernel makes Row() the literal unit of memory cost.
 
-Grid: 1-D over row blocks. Block shapes:
-  keys   (K_pad, block_n)  — K_pad a multiple of 8 sublanes
-  values (1, block_n)
-  bounds (K_pad, 1) ×2     — broadcast against the row axis
-  slab   (1, 2)            — [lo, hi) row-index slab from searchsorted
+The batched form serves a whole query batch with one kernel launch over
+a replica's device-resident columns (the ``read_many`` device path); the
+single-query form is its Q = 1 special case. Grid: (queries, row
+blocks), row axis fastest. Block shapes:
+  keys   (K_pad, block_n)  — K_pad a multiple of 8 sublanes, shared by
+                             every query in the batch
+  values (1, block_n)      — shared likewise
+  bounds (K_pad, 1) ×2     — this query's column, broadcast against rows
+  slabs  (1, 2)            — this query's [lo, hi) row slab
   out    (1, 128)          — lane 0: Σ value·mask, lane 1: Σ mask
 """
 
@@ -27,11 +31,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["scan_agg_kernel", "scan_agg_pallas"]
+__all__ = [
+    "scan_agg_pallas",
+    "scan_agg_batched_kernel",
+    "scan_agg_batched_pallas",
+]
 
 
-def scan_agg_kernel(slab_ref, keys_ref, vals_ref, lo_ref, hi_ref, out_ref):
-    i = pl.program_id(0)
+def scan_agg_batched_kernel(slabs_ref, keys_ref, vals_ref, lo_ref, hi_ref, out_ref):
+    """One (query, row block) grid step. A query's (1, 128) output block
+    stays resident across its row blocks (row axis iterates fastest).
+    Bounds arrive pre-transposed as (K_pad, Q) so the per-query column is
+    a (K_pad, 1) slice that broadcasts against the keys tile."""
+    i = pl.program_id(1)
 
     @pl.when(i == 0)
     def _init():
@@ -39,14 +51,14 @@ def scan_agg_kernel(slab_ref, keys_ref, vals_ref, lo_ref, hi_ref, out_ref):
 
     keys = keys_ref[...]  # (K_pad, block_n) int32
     vals = vals_ref[...]  # (1, block_n) float32
-    lo = lo_ref[...]  # (K_pad, 1) int32, inclusive
+    lo = lo_ref[...]  # (K_pad, 1) int32, inclusive — this query's column
     hi = hi_ref[...]  # (K_pad, 1) int32, exclusive
 
     block_n = keys.shape[1]
     row0 = i * block_n
     ridx = row0 + jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
-    slab_lo = slab_ref[0, 0]
-    slab_hi = slab_ref[0, 1]
+    slab_lo = slabs_ref[0, 0]
+    slab_hi = slabs_ref[0, 1]
     in_slab = (ridx >= slab_lo) & (ridx < slab_hi)  # (1, block_n)
 
     col_ok = (keys >= lo) & (keys < hi)  # (K_pad, block_n)
@@ -73,8 +85,63 @@ def _pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def scan_agg_pallas(
+def scan_agg_batched_pallas(
     keys: jax.Array,  # int32[K, N] — columnar clustering keys, replica order
+    values: jax.Array,  # float32[N]
+    col_lo: jax.Array,  # int32[Q, K] inclusive per-query/column lower bounds
+    col_hi: jax.Array,  # int32[Q, K] exclusive per-query/column upper bounds
+    slabs: jax.Array,  # int32[Q, 2] — per-query [lo, hi) row slabs
+    *,
+    block_n: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Returns float32[Q, 2]: per query, (masked sum of values, count).
+
+    One kernel launch serves the whole batch: queries share the same
+    device-resident key/value arrays and ship their bounds/slabs
+    together, versus Q separate dispatches on the sequential path. Note
+    the row axis is the *inner* grid dimension (so each query's output
+    block stays resident while it scans), which means key tiles are
+    re-fetched per query — HBM key traffic still scales with Q. A
+    keys-resident ordering (row blocks outer, accumulators revisited)
+    would amortize that too and is left as a follow-up.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    K, N = keys.shape
+    Q = col_lo.shape[0]
+    K_pad = max(8, -(-K // 8) * 8)
+    N_pad = -(-max(N, 1) // block_n) * block_n
+
+    keys_p = _pad_to(_pad_to(keys.astype(jnp.int32), N_pad, 1, 0), K_pad, 0, 0)
+    vals_p = _pad_to(values.astype(jnp.float32)[None, :], N_pad, 1, 0.0)
+    # transpose bounds to (K_pad, Q): per-query column slices broadcast
+    # against the keys tile. Padded K rows get always-true bounds; padded
+    # N rows are killed by the slab mask (row index ≥ N ≥ slab hi).
+    lo_p = _pad_to(col_lo.astype(jnp.int32).T, K_pad, 0, jnp.iinfo(jnp.int32).min)
+    hi_p = _pad_to(col_hi.astype(jnp.int32).T, K_pad, 0, jnp.iinfo(jnp.int32).max)
+    slabs_p = slabs.astype(jnp.int32)
+
+    grid = (Q, N_pad // block_n)
+    out = pl.pallas_call(
+        scan_agg_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda q, i: (q, 0)),
+            pl.BlockSpec((K_pad, block_n), lambda q, i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda q, i: (0, i)),
+            pl.BlockSpec((K_pad, 1), lambda q, i: (0, q)),
+            pl.BlockSpec((K_pad, 1), lambda q, i: (0, q)),
+        ],
+        out_specs=pl.BlockSpec((1, 128), lambda q, i: (q, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, 128), jnp.float32),
+        interpret=interpret,
+    )(slabs_p, keys_p, vals_p, lo_p, hi_p)
+    return out[:, :2]
+
+
+def scan_agg_pallas(
+    keys: jax.Array,  # int32[K, N]
     values: jax.Array,  # float32[N]
     col_lo: jax.Array,  # int32[K] inclusive per-column lower bounds
     col_hi: jax.Array,  # int32[K] exclusive per-column upper bounds
@@ -83,34 +150,12 @@ def scan_agg_pallas(
     block_n: int = 2048,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns float32[2] = (masked sum of values, matched row count)."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    K, N = keys.shape
-    K_pad = max(8, -(-K // 8) * 8)
-    N_pad = -(-max(N, 1) // block_n) * block_n
+    """Returns float32[2] = (masked sum of values, matched row count).
 
-    keys_p = _pad_to(_pad_to(keys.astype(jnp.int32), N_pad, 1, 0), K_pad, 0, 0)
-    vals_p = _pad_to(values.astype(jnp.float32)[None, :], N_pad, 1, 0.0)
-    # padded K rows get always-true bounds; padded N rows are killed by the
-    # slab mask (row index ≥ N ≥ slab hi).
-    lo_p = _pad_to(col_lo.astype(jnp.int32)[:, None], K_pad, 0, jnp.iinfo(jnp.int32).min)
-    hi_p = _pad_to(col_hi.astype(jnp.int32)[:, None], K_pad, 0, jnp.iinfo(jnp.int32).max)
-    slab_p = slab.astype(jnp.int32)[None, :]  # (1, 2)
-
-    grid = (N_pad // block_n,)
-    out = pl.pallas_call(
-        scan_agg_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((K_pad, block_n), lambda i: (0, i)),
-            pl.BlockSpec((1, block_n), lambda i: (0, i)),
-            pl.BlockSpec((K_pad, 1), lambda i: (0, 0)),
-            pl.BlockSpec((K_pad, 1), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 128), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 128), jnp.float32),
-        interpret=interpret,
-    )(slab_p, keys_p, vals_p, lo_p, hi_p)
-    return out[0, :2]
+    The Q = 1 case of :func:`scan_agg_batched_pallas`.
+    """
+    out = scan_agg_batched_pallas(
+        keys, values, col_lo[None, :], col_hi[None, :], slab[None, :],
+        block_n=block_n, interpret=interpret,
+    )
+    return out[0]

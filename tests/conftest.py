@@ -5,3 +5,13 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def brute_force(table, query):
+    """Filter-evaluation oracle shared by the unit and property tests."""
+    mask = np.ones(len(table), bool)
+    for col, f in query.filters.items():
+        lo, hi = f.bounds(table.schema, col)
+        v = table.key_cols[col]
+        mask &= (v >= lo) & (v < hi)
+    return mask

@@ -1,8 +1,11 @@
-"""SortedTable + composite keys: unit + property tests."""
+"""SortedTable + composite keys: unit tests.
+
+Property tests live in test_properties.py (they need hypothesis and
+skip cleanly when it is absent).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     Eq,
@@ -16,19 +19,13 @@ from repro.core import (
 )
 
 
+from conftest import brute_force
+
+
 def _table(rng, n=2000, dom=32, layout=("a", "b", "c")):
     kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in ("a", "b", "c")}
     vc = {"m": rng.uniform(0, 10, n)}
     return SortedTable.from_columns(kc, vc, layout)
-
-
-def brute_force(table, query):
-    mask = np.ones(len(table), bool)
-    for col, f in query.filters.items():
-        lo, hi = f.bounds(table.schema, col)
-        v = table.key_cols[col]
-        mask &= (v >= lo) & (v < hi)
-    return mask
 
 
 class TestPackedKeys:
@@ -133,32 +130,3 @@ class TestReplicaEquivalence:
         t2 = t.merge_insert(kc2, vc2)
         assert len(t2) == 600
         assert (np.diff(t2.packed) >= 0).all()
-
-
-@settings(max_examples=30, deadline=None)
-@given(
-    data=st.data(),
-    n=st.integers(10, 300),
-    dom=st.integers(2, 20),
-)
-def test_property_scan_count_matches_bruteforce(data, n, dom):
-    """Property: for any dataset/layout/query, slab-scan == brute force."""
-    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
-    cols = ("x", "y")
-    kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in cols}
-    vc = {"m": rng.uniform(0, 1, n)}
-    layout = data.draw(st.permutations(cols))
-    t = SortedTable.from_columns(kc, vc, tuple(layout))
-    f = {}
-    for c in cols:
-        kind = data.draw(st.sampled_from(["eq", "range", "none"]))
-        if kind == "eq":
-            f[c] = Eq(data.draw(st.integers(0, dom - 1)))
-        elif kind == "range":
-            lo = data.draw(st.integers(0, dom - 1))
-            hi = data.draw(st.integers(lo + 1, dom))
-            f[c] = Range(lo, hi)
-    q = Query(filters=f, agg="count")
-    res = t.execute(q)
-    assert res.value == brute_force(t, q).sum()
-    assert res.rows_scanned >= res.rows_matched

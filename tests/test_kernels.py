@@ -1,17 +1,23 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Property tests live in test_properties.py (they need hypothesis and
+skip cleanly when it is absent).
+"""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import Eq, Query, Range, SortedTable
 from repro.kernels import (
     ecdf_hist,
     ecdf_hist_ref,
     scan_agg,
+    scan_agg_batched,
+    scan_agg_batched_ref,
     scan_agg_ref,
     table_scan_device,
+    table_scan_device_many,
 )
 
 
@@ -78,6 +84,106 @@ class TestScanAgg:
             np.testing.assert_allclose(dev_val, res.value, rtol=1e-4, atol=1e-3)
 
 
+class TestScanAggBatched:
+    @pytest.mark.parametrize("K", [1, 3, 8])
+    @pytest.mark.parametrize("Q", [1, 5, 17])
+    @pytest.mark.parametrize("N", [1, 100, 2048, 5000])
+    def test_shape_sweep_vs_ref(self, rng, K, Q, N):
+        keys = rng.integers(0, 64, (K, N)).astype(np.int32)
+        vals = rng.uniform(-2, 2, N).astype(np.float32)
+        lo = rng.integers(0, 32, (Q, K)).astype(np.int32)
+        hi = (lo + rng.integers(1, 32, (Q, K))).astype(np.int32)
+        slabs = np.sort(rng.integers(0, N + 1, (Q, 2)), axis=1).astype(np.int32)
+        got = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, block_n=512))
+        want = np.asarray(
+            scan_agg_batched_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
+                                 jnp.asarray(hi), jnp.asarray(slabs))
+        )
+        assert got.shape == (Q, 2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("block_n", [128, 256, 2048])
+    def test_block_size_invariance(self, rng, block_n):
+        keys = rng.integers(0, 16, (3, 3000)).astype(np.int32)
+        vals = rng.uniform(0, 1, 3000).astype(np.float32)
+        lo = rng.integers(0, 8, (9, 3)).astype(np.int32)
+        hi = (lo + rng.integers(1, 8, (9, 3))).astype(np.int32)
+        slabs = np.sort(rng.integers(0, 3001, (9, 2)), axis=1).astype(np.int32)
+        a = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, block_n=block_n))
+        b = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, block_n=1024))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_matches_unbatched_kernel_per_query(self, rng):
+        keys = rng.integers(0, 32, (4, 2500)).astype(np.int32)
+        vals = rng.uniform(-1, 1, 2500).astype(np.float32)
+        lo = rng.integers(0, 16, (6, 4)).astype(np.int32)
+        hi = (lo + rng.integers(1, 16, (6, 4))).astype(np.int32)
+        slabs = np.sort(rng.integers(0, 2501, (6, 2)), axis=1).astype(np.int32)
+        batched = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, block_n=512))
+        for q in range(6):
+            single = np.asarray(
+                scan_agg(keys, vals, lo[q], hi[q], slabs[q], block_n=512)
+            )
+            np.testing.assert_allclose(batched[q], single, rtol=1e-5, atol=1e-3)
+
+    def test_empty_slabs(self, rng):
+        keys = rng.integers(0, 8, (2, 512)).astype(np.int32)
+        vals = rng.uniform(0, 1, 512).astype(np.float32)
+        lo = np.zeros((3, 2), np.int32)
+        hi = np.full((3, 2), 8, np.int32)
+        slabs = np.array([[7, 7], [0, 0], [512, 512]], np.int32)
+        got = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs))
+        np.testing.assert_array_equal(got, 0.0)
+
+    def test_table_scan_device_many_matches_engine(self, rng):
+        kc = {"a": rng.integers(0, 30, 4000), "b": rng.integers(0, 30, 4000)}
+        vc = {"m": rng.uniform(0, 5, 4000)}
+        t = SortedTable.from_columns(kc, vc, ("b", "a"))
+        queries = [
+            Query(
+                filters={"a": Range(int(rng.integers(0, 15)), int(rng.integers(15, 30))),
+                         "b": Eq(int(rng.integers(0, 30)))},
+                agg="sum", value_col="m",
+            )
+            for _ in range(8)
+        ]
+        dev = table_scan_device_many(t, queries)
+        for q, (dev_val, dev_cnt) in zip(queries, dev):
+            res = t.execute(q)
+            assert dev_cnt == res.rows_matched
+            np.testing.assert_allclose(dev_val, res.value, rtol=1e-4, atol=1e-3)
+
+    def test_mixed_agg_batch_rejected(self, rng):
+        kc = {"a": rng.integers(0, 8, 100)}
+        vc = {"m": rng.uniform(0, 1, 100)}
+        t = SortedTable.from_columns(kc, vc, ("a",))
+        qs = [Query(filters={"a": Eq(1)}, agg="count"),
+              Query(filters={"a": Eq(2)}, agg="sum", value_col="m")]
+        with pytest.raises(ValueError):
+            table_scan_device_many(t, qs)
+
+    @pytest.mark.parametrize("bits", [31, 32])
+    def test_wide_schema_rejected_clearly(self, rng, bits):
+        """Keys/bounds live in int32 on device: a column whose exclusive
+        global bound 2**bits exceeds int32 (bits > 30) must raise a
+        clear error, not wrap or overflow — 31 bits is the off-by-one
+        case (keys fit int32 but the unfiltered bound does not)."""
+        from repro.core import KeySchema
+
+        schema = KeySchema({"a": bits})
+        top = 2**bits
+        kc = {"a": rng.integers(top - 8, top, 100).astype(np.int64)}
+        vc = {"m": rng.uniform(0, 1, 100)}
+        t = SortedTable.from_columns(kc, vc, ("a",), schema)
+        q = Query(filters={}, agg="count")
+        with pytest.raises(ValueError, match="30-bit"):
+            table_scan_device(t, q)
+        with pytest.raises(ValueError, match="30-bit"):
+            table_scan_device_many(t, [q])
+        # the numpy engine still serves the wide schema
+        assert t.execute_many([q])[0].rows_scanned == 100
+
+
 class TestEcdfHist:
     @pytest.mark.parametrize("N,B,W", [(100, 8, 1), (4096, 64, 3), (10_000, 512, 2),
                                        (3000, 1024, 7), (555, 16, 16)])
@@ -97,24 +203,3 @@ class TestEcdfHist:
         got = np.asarray(ecdf_hist(col, n_bins=5000, bin_width=2))
         want = np.asarray(ecdf_hist_ref(jnp.asarray(col), n_bins=5000, bin_width=2))
         np.testing.assert_allclose(got, want)
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    seed=st.integers(0, 2**31 - 1),
-    k=st.integers(1, 6),
-    n=st.integers(1, 700),
-)
-def test_property_scan_agg_matches_ref(seed, k, n):
-    rng = np.random.default_rng(seed)
-    keys = rng.integers(0, 20, (k, n)).astype(np.int32)
-    vals = rng.uniform(-1, 1, n).astype(np.float32)
-    lo = rng.integers(0, 10, k).astype(np.int32)
-    hi = (lo + rng.integers(0, 12, k)).astype(np.int32)
-    slab = np.sort(rng.integers(0, n + 1, 2)).astype(np.int32)
-    got = np.asarray(scan_agg(keys, vals, lo, hi, slab, block_n=128))
-    want = np.asarray(
-        scan_agg_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
-                     jnp.asarray(hi), jnp.asarray(slab))
-    )
-    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)

@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the core + kernels.
+
+Collected into one module behind ``pytest.importorskip`` so the suite
+collects (and the unit tests in the sibling modules run) even when
+hypothesis is not installed — the seed image ships without it.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CostModel, Eq, Query, Range, SortedTable
+from repro.core.ecdf import TableStats
+from repro.core.tpch import generate_simulation
+from repro.kernels import scan_agg, scan_agg_batched, scan_agg_batched_ref, scan_agg_ref
+
+from conftest import brute_force
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(10, 300),
+    dom=st.integers(2, 20),
+)
+def test_property_scan_count_matches_bruteforce(data, n, dom):
+    """Property: for any dataset/layout/query, slab-scan == brute force."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    cols = ("x", "y")
+    kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in cols}
+    vc = {"m": rng.uniform(0, 1, n)}
+    layout = data.draw(st.permutations(cols))
+    t = SortedTable.from_columns(kc, vc, tuple(layout))
+    f = {}
+    for c in cols:
+        kind = data.draw(st.sampled_from(["eq", "range", "none"]))
+        if kind == "eq":
+            f[c] = Eq(data.draw(st.integers(0, dom - 1)))
+        elif kind == "range":
+            lo = data.draw(st.integers(0, dom - 1))
+            hi = data.draw(st.integers(lo + 1, dom))
+            f[c] = Range(lo, hi)
+    q = Query(filters=f, agg="count")
+    res = t.execute(q)
+    assert res.value == brute_force(t, q).sum()
+    assert res.rows_scanned >= res.rows_matched
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_min_cost_leq_every_replica(seed):
+    """Eq (3): Cost_min(q) ≤ Cost(r, q) for every replica r."""
+    rng = np.random.default_rng(seed)
+    kc, vc, schema = generate_simulation(3000, 3, seed=seed % 17)
+    stats = TableStats.from_columns(kc, schema)
+    model = CostModel(stats=stats)
+    layouts = [("k0", "k1", "k2"), ("k2", "k1", "k0")]
+    q = Query(filters={"k0": Eq(int(rng.integers(0, 8))), "k2": Range(0, 5)})
+    mc, _ = model.min_cost(layouts, q)
+    assert all(mc <= model.query_cost(a, q) + 1e-12 for a in layouts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 6),
+    n=st.integers(1, 700),
+)
+def test_property_scan_agg_matches_ref(seed, k, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 20, (k, n)).astype(np.int32)
+    vals = rng.uniform(-1, 1, n).astype(np.float32)
+    lo = rng.integers(0, 10, k).astype(np.int32)
+    hi = (lo + rng.integers(0, 12, k)).astype(np.int32)
+    slab = np.sort(rng.integers(0, n + 1, 2)).astype(np.int32)
+    got = np.asarray(scan_agg(keys, vals, lo, hi, slab, block_n=128))
+    want = np.asarray(
+        scan_agg_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
+                     jnp.asarray(hi), jnp.asarray(slab))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 5),
+    q=st.integers(1, 9),
+    n=st.integers(1, 600),
+)
+def test_property_scan_agg_batched_matches_ref(seed, k, q, n):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 20, (k, n)).astype(np.int32)
+    vals = rng.uniform(-1, 1, n).astype(np.float32)
+    lo = rng.integers(0, 10, (q, k)).astype(np.int32)
+    hi = (lo + rng.integers(0, 12, (q, k))).astype(np.int32)
+    slabs = np.sort(rng.integers(0, n + 1, (q, 2)), axis=1).astype(np.int32)
+    got = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, block_n=128))
+    want = np.asarray(
+        scan_agg_batched_ref(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
+                             jnp.asarray(hi), jnp.asarray(slabs))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)

@@ -1,0 +1,305 @@
+"""Batched read path: read_many/execute_many/slab_many equivalence with
+the sequential path, plus regressions for the empty-range crash and the
+nondeterministic replica placement."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Eq,
+    HREngine,
+    Query,
+    Range,
+    SortedTable,
+    random_workload,
+    slab_bounds_for,
+)
+from repro.core.tpch import generate_simulation
+from repro.ft.straggler import clear_slowdowns, inject_slowdown
+
+
+@pytest.fixture(scope="module")
+def setup():
+    kc, vc, schema = generate_simulation(50_000, 3, seed=0)
+    rng = np.random.default_rng(1)
+    wl = random_workload(rng, schema, list(kc), 40, value_col="metric")
+    eng = HREngine(n_nodes=5)
+    eng.create_column_family(
+        "hr", kc, vc, replication_factor=3, mechanism="HR", workload=wl,
+        schema=schema, hrca_kwargs={"k_max": 1200, "seed": 0},
+    )
+    eng.create_column_family(
+        "tr", kc, vc, replication_factor=3, mechanism="TR", workload=wl, schema=schema,
+    )
+    return eng, wl, schema
+
+
+def _sequential(eng, cf_name, queries, **kw):
+    return [eng.read(cf_name, q, **kw) for q in queries]
+
+
+class TestReadManyEquivalence:
+    @pytest.mark.parametrize("cf_name", ["hr", "tr"])
+    def test_matches_sequential_loop(self, setup, cf_name):
+        """Results, rows_scanned and routing match a loop of read().
+
+        Both paths consume the column family's round-robin counter, so
+        the comparison runs on two engines deep-copied from the same
+        state — each starts from the identical counter position.
+        """
+        eng, wl, _ = setup
+        eng_a, eng_b = copy.deepcopy(eng), copy.deepcopy(eng)
+        seq = _sequential(eng_a, cf_name, wl.queries)
+        bat = eng_b.read_many(cf_name, wl.queries)
+        assert len(bat) == len(wl.queries)
+        for (rs, rep_s), (rb, rep_b) in zip(seq, bat):
+            assert rb.value == rs.value
+            assert rb.rows_scanned == rs.rows_scanned
+            assert rb.rows_matched == rs.rows_matched
+            assert rep_b.replica_id == rep_s.replica_id
+            assert rep_b.node_id == rep_s.node_id
+            assert rep_b.estimated_rows == rep_s.estimated_rows
+            assert rep_b.estimated_cost == rep_s.estimated_cost
+
+    def test_random_workloads_equivalence(self, setup):
+        eng, _, schema = setup
+        for seed in range(3):
+            rng = np.random.default_rng(100 + seed)
+            wl = random_workload(rng, schema, ["k0", "k1", "k2"], 25,
+                                 agg="sum", value_col="metric")
+            eng_a, eng_b = copy.deepcopy(eng), copy.deepcopy(eng)
+            seq = _sequential(eng_a, "hr", wl.queries)
+            bat = eng_b.read_many("hr", wl.queries)
+            for (rs, _), (rb, _) in zip(seq, bat):
+                assert rb.value == rs.value
+                assert rb.rows_scanned == rs.rows_scanned
+
+    def test_round_robin_continues_across_batches(self, setup):
+        """read_many draws the same rr counter as read: an unfiltered
+        query batch spreads across replicas."""
+        eng, _, _ = setup
+        qs = [Query(filters={}) for _ in range(6)]
+        out = eng.read_many("hr", qs)
+        assert len({rep.replica_id for _, rep in out}) > 1
+
+    def test_empty_batch(self, setup):
+        eng, _, _ = setup
+        assert eng.read_many("hr", []) == []
+
+    def test_dead_node_routed_around(self, setup):
+        eng, wl, _ = setup
+        eng2 = copy.deepcopy(eng)
+        victim = eng2.column_families["hr"].replicas[0].node_id
+        eng2.fail_node(victim)
+        out = eng2.read_many("hr", wl.queries[:10])
+        assert all(rep.node_id != victim for _, rep in out)
+
+    def test_hedged_batch_lands_off_straggler(self, setup):
+        eng, wl, _ = setup
+        eng2 = copy.deepcopy(eng)
+        cf = eng2.column_families["hr"]
+        victim = cf.replicas[0].node_id
+        inject_slowdown(eng2, victim, 1e4)
+        try:
+            out = eng2.read_many("hr", wl.queries[:15], hedge=True)
+            hedged = [rep for _, rep in out if rep.hedged]
+            assert all(rep.node_id != victim for rep in hedged)
+            # hedged results still answer the query correctly
+            eng3 = copy.deepcopy(eng)
+            seq = _sequential(eng3, "hr", wl.queries[:15])
+            for (rs, _), (rb, _) in zip(seq, out):
+                assert rb.value == rs.value
+        finally:
+            clear_slowdowns(eng2)
+
+
+class TestSlabExecuteMany:
+    def _table(self, rng, n=3000, dom=32, layout=("a", "b", "c")):
+        kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in ("a", "b", "c")}
+        vc = {"m": rng.uniform(0, 10, n)}
+        return SortedTable.from_columns(kc, vc, layout)
+
+    def _queries(self, rng, n=30, dom=32):
+        qs = []
+        for _ in range(n):
+            f = {}
+            if rng.random() < 0.7:
+                f["a"] = Eq(int(rng.integers(0, dom)))
+            if rng.random() < 0.7:
+                lo = int(rng.integers(0, dom - 4))
+                f["b"] = Range(lo, lo + int(rng.integers(0, 5)))  # may be empty
+            if not f:
+                f["c"] = Eq(int(rng.integers(0, dom)))
+            qs.append(Query(filters=f, agg="count"))
+        return qs
+
+    def test_slab_many_matches_slab_loop(self, rng):
+        t = self._table(rng)
+        qs = self._queries(rng)
+        slabs = t.slab_many(qs)
+        for i, q in enumerate(qs):
+            assert tuple(slabs[i]) == t.slab(q)
+
+    def test_execute_many_matches_execute_loop(self, rng):
+        t = self._table(rng)
+        qs = self._queries(rng)
+        batched = t.execute_many(qs)
+        for q, rb in zip(qs, batched):
+            rs = t.execute(q)
+            assert rb.value == rs.value
+            assert rb.rows_scanned == rs.rows_scanned
+            assert rb.rows_matched == rs.rows_matched
+
+    def test_execute_many_select_agg(self, rng):
+        t = self._table(rng)
+        qs = [Query(filters={"a": Eq(int(rng.integers(0, 32)))}, agg="select")
+              for _ in range(5)]
+        for q, rb in zip(qs, t.execute_many(qs)):
+            rs = t.execute(q)
+            np.testing.assert_array_equal(rb.selected, rs.selected)
+
+
+class TestEmptyRangeRegression:
+    """slab_bounds_for used to raise ValueError from pack_tuple when a
+    filter range was empty (lo == hi); it must yield zero rows instead."""
+
+    def test_empty_range_returns_zero_rows(self, rng):
+        kc = {"a": rng.integers(0, 16, 1000), "b": rng.integers(0, 16, 1000)}
+        vc = {"m": rng.uniform(0, 1, 1000)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"))
+        q = Query(filters={"a": Range(5, 5)}, agg="count")
+        lo, hi = slab_bounds_for(q, t.layout, t.schema)
+        assert hi <= lo
+        res = t.execute(q)
+        assert res.value == 0.0 and res.rows_scanned == 0 and res.rows_matched == 0
+
+    def test_empty_range_on_residual_key(self, rng):
+        kc = {"a": rng.integers(0, 16, 1000), "b": rng.integers(0, 16, 1000)}
+        vc = {"m": rng.uniform(0, 1, 1000)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"))
+        # empty range on the *second* layout key, behind a leading range:
+        # the slab is nonempty but no row matches
+        q = Query(filters={"a": Range(0, 16), "b": Range(7, 7)}, agg="count")
+        res = t.execute(q)
+        assert res.value == 0.0 and res.rows_matched == 0
+
+    def test_empty_range_through_engine(self, setup):
+        eng, _, _ = setup
+        q = Query(filters={"k0": Range(3, 3)}, agg="count")
+        res, rep = eng.read("hr", q)
+        assert res.value == 0.0 and rep.rows_scanned == 0
+        (res_b, _), = eng.read_many("hr", [q])
+        assert res_b.value == 0.0
+
+    def test_empty_range_then_out_of_domain_filter(self, rng):
+        """Once a query is empty, its remaining filters must not be
+        evaluated in the batched walk — the scalar path returns before
+        reaching them, so e.g. an out-of-domain Eq after an empty Range
+        must not raise (it used to poison the whole batch)."""
+        kc = {"a": rng.integers(0, 16, 500), "b": rng.integers(0, 16, 500)}
+        vc = {"m": rng.uniform(0, 1, 500)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"))
+        q_bad = Query(filters={"a": Range(5, 5), "b": Eq(99)}, agg="count")
+        q_ok = Query(filters={"a": Eq(3)}, agg="count")
+        assert t.execute(q_bad).rows_scanned == 0
+        batched = t.execute_many([q_bad, q_ok])
+        assert batched[0].rows_scanned == 0 and batched[0].value == 0.0
+        assert batched[1].value == t.execute(q_ok).value
+
+    def test_out_of_domain_before_empty_range(self, rng):
+        """Layout order ('a','b') with Eq out-of-domain on 'a' and an
+        empty range on 'b': the scalar walk returns empty before any
+        validation, so the batched walk must not raise either."""
+        kc = {"a": rng.integers(0, 16, 500), "b": rng.integers(0, 16, 500)}
+        vc = {"m": rng.uniform(0, 1, 500)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"))
+        q = Query(filters={"a": Eq(99), "b": Range(5, 5)}, agg="count")
+        assert t.execute(q).rows_scanned == 0
+        (res,) = t.execute_many([q])
+        assert res.rows_scanned == 0 and res.value == 0.0
+        # without the empty range the out-of-domain Eq raises on BOTH paths
+        q_bad = Query(filters={"a": Eq(99)}, agg="count")
+        with pytest.raises(ValueError):
+            t.execute(q_bad)
+        with pytest.raises(ValueError):
+            t.execute_many([q_bad])
+
+    def test_63_bit_schema_no_overflow(self, rng):
+        """total_bits == 63 packs the max key to 2**63 − 1; the batched
+        path's exclusive upper bound used to wrap int64 and silently
+        return empty slabs where execute() returned rows."""
+        from repro.core import KeySchema
+
+        schema = KeySchema({"a": 31, "b": 32})
+        kc = {
+            "a": rng.integers(2**31 - 4, 2**31, 50).astype(np.int64),
+            "b": rng.integers(2**32 - 4, 2**32, 50).astype(np.int64),
+        }
+        vc = {"m": rng.uniform(0, 1, 50)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"), schema)
+        qs = [Query(filters={}), Query(filters={"a": Eq(int(kc["a"][0]))})]
+        batched = t.execute_many(qs)
+        for q, rb in zip(qs, batched):
+            rs = t.execute(q)
+            assert rb.rows_scanned == rs.rows_scanned
+            assert rb.value == rs.value
+
+    def test_empty_range_in_batch_mixed(self, setup):
+        eng, wl, _ = setup
+        eng_a, eng_b = copy.deepcopy(eng), copy.deepcopy(eng)
+        qs = [wl.queries[0], Query(filters={"k1": Range(2, 2)}), wl.queries[1]]
+        seq = _sequential(eng_a, "hr", qs)
+        bat = eng_b.read_many("hr", qs)
+        for (rs, _), (rb, _) in zip(seq, bat):
+            assert rb.value == rs.value and rb.rows_scanned == rs.rows_scanned
+
+
+class TestNegativeCostTies:
+    def test_negative_costs_still_route(self, rng):
+        """A fitted cost function with a negative intercept can make
+        every replica's cost negative; the tie threshold must still
+        include the cheapest replica (it used to exclude everything:
+        read raised ZeroDivisionError, read_many silently mod-by-zeroed)."""
+        import warnings
+
+        from repro.core import LinearCostFunction
+
+        kc, vc, schema = generate_simulation(5_000, 3, seed=0)
+        eng = HREngine(n_nodes=3)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3,
+            layouts=[("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")],
+            schema=schema,
+            cost_fns={3: LinearCostFunction(slope=1.0, intercept=-5.0)},
+        )
+        # zero-selectivity equality on every key: whatever leads a
+        # layout, the rows estimate is 0 → cost = intercept < 0
+        dom = schema.max_value("k0") + 1
+        q = Query(filters={c: Eq(dom - 1) for c in ("k0", "k1", "k2")})
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # numpy mod-by-zero would raise
+            picks = {eng.read("cf", q)[1].replica_id for _ in range(3)}
+            out = eng.read_many("cf", [q] * 3)
+        assert picks == {0, 1, 2}  # all tied at the intercept → RR spreads
+        assert {rep.replica_id for _, rep in out} == {0, 1, 2}
+
+
+class TestPlacementDeterminism:
+    """_place used the salted builtin hash(); placement must be a pure
+    function of (cf name, replica id, cluster size)."""
+
+    def test_placement_is_stable_function(self):
+        import zlib
+
+        eng = HREngine(n_nodes=7)
+        for name in ("orders", "hr", "tr", "??"):
+            h = zlib.crc32(name.encode("utf-8")) % 7
+            for rid in range(3):
+                assert eng._place(rid, name) == (h + rid) % 7
+
+    def test_successive_replicas_distinct_nodes(self):
+        eng = HREngine(n_nodes=5)
+        nodes = {eng._place(rid, "cf") for rid in range(3)}
+        assert len(nodes) == 3
