@@ -1,4 +1,5 @@
-"""Batched read throughput — ``read_many`` vs a sequential ``read`` loop.
+"""Batched read throughput — ``read_many`` vs a sequential ``read`` loop,
+plus the device-kernel perf trajectory (``--device``).
 
 The paper's speedup is per-query (route to the replica minimizing
 Row(r, q)); at production traffic queries arrive in batches, and the
@@ -14,21 +15,93 @@ on the TPC-H-style Q1/Q2 workload, per batch size. Per-query results
 are asserted identical between the two HR paths (same values, same
 rows_scanned) — the batch is a scheduling optimization, not an
 approximation.
+
+``--device`` additionally benchmarks one replica's storage scan across
+the three batched engines and records queries/sec per batch size in
+``BENCH_batched_read.json`` (machine-readable perf trajectory):
+
+  * ``numpy``   — ``SortedTable.execute_many`` residual scan (reference)
+  * ``qgrid``   — PR 1 Pallas grid (queries outer, row blocks inner:
+                  key tiles re-fetched per query)
+  * ``rowgrid`` — PR 2 row-streaming grid (row blocks outer, per-query
+                  accumulators revisited: columns stream once per batch)
 """
 
 from __future__ import annotations
 
 import itertools
+import json
 
-from repro.core import HREngine
+import numpy as np
+
+from repro.core import HREngine, Query, SortedTable
 from repro.core.tpch import generate_orders, orders_schema, q1_q2_workload
+from repro.kernels import table_scan_device_many
+
 from .common import record, time_fn
+
+
+def run_device(
+    n_rows: int = 120_000,
+    batch_sizes=(16, 64, 256),
+    seed: int = 0,
+) -> dict:
+    """numpy vs queries-outer grid vs row-streaming grid, one replica.
+
+    All three answer the identical sum-aggregation batch (the legacy
+    grid cannot mix aggregation kinds); results are cross-checked before
+    timing. Returns {batch_size: {engine: queries/sec, ...}}.
+    """
+    kc, vc = generate_orders(1.0, seed=seed, rows_per_sf=n_rows)
+    wl = q1_q2_workload(max(batch_sizes), seed=seed + 1, n_rows=n_rows)
+    queries_all = [
+        Query(filters=q.filters, agg="sum", value_col="totalprice")
+        for q in wl.queries
+    ]
+    dev = SortedTable.from_columns(
+        kc, vc, ("custkey", "orderdate", "clerk"), orders_schema()
+    ).place_on_device()
+    # host-path twin sharing the same column arrays (no device cache)
+    host = SortedTable(dev.layout, dev.schema, dev.key_cols, dev.value_cols, dev.packed)
+
+    out: dict = {}
+    for bs in batch_sizes:
+        queries = queries_all[:bs]
+        # warm up both kernel variants (jit compile outside the timing)
+        row = table_scan_device_many(dev, queries, grid="rows_outer")
+        qgr = table_scan_device_many(dev, queries, grid="queries_outer")
+        ref = host.execute_many(queries)
+        for r, (s_row, c_row), (s_q, c_q) in zip(ref, row, qgr):
+            assert c_row == c_q == r.rows_matched, "device scan diverged"
+            np.testing.assert_allclose(s_row, r.value, rtol=1e-5)
+            np.testing.assert_allclose(s_q, r.value, rtol=1e-5)
+
+        t_np, _ = time_fn(lambda: host.execute_many(queries))
+        t_qg, _ = time_fn(lambda: table_scan_device_many(dev, queries, grid="queries_outer"))
+        t_rg, _ = time_fn(lambda: table_scan_device_many(dev, queries, grid="rows_outer"))
+        res = {
+            "numpy_qps": bs / max(t_np, 1e-12),
+            "qgrid_qps": bs / max(t_qg, 1e-12),
+            "rowgrid_qps": bs / max(t_rg, 1e-12),
+        }
+        res["rowgrid_over_qgrid"] = res["rowgrid_qps"] / res["qgrid_qps"]
+        res["rowgrid_over_numpy"] = res["rowgrid_qps"] / res["numpy_qps"]
+        out[bs] = res
+        record(f"batched/device_bs{bs}_numpy", t_np / bs * 1e6, f"qps={res['numpy_qps']:.0f}")
+        record(f"batched/device_bs{bs}_qgrid", t_qg / bs * 1e6, f"qps={res['qgrid_qps']:.0f}")
+        record(
+            f"batched/device_bs{bs}_rowgrid", t_rg / bs * 1e6,
+            f"qps={res['rowgrid_qps']:.0f};vs_qgrid={res['rowgrid_over_qgrid']:.2f}x",
+        )
+    return out
 
 
 def run(
     n_rows: int = 120_000,
     batch_sizes=(16, 64, 256),
     seed: int = 0,
+    device: bool = False,
+    json_path: str | None = None,
 ) -> dict:
     sf = 1.0
     kc, vc = generate_orders(sf, seed=seed, rows_per_sf=n_rows)
@@ -77,9 +150,31 @@ def run(
             "tr_batch_qps": res["tr"][1],
             "tr_speedup": res["tr"][1] / res["tr"][0],
         }
+
+    if device:
+        out["device"] = run_device(n_rows=n_rows, batch_sizes=batch_sizes, seed=seed)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, default=str)
     return out
 
 
 if __name__ == "__main__":
-    for k, v in run().items():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=120_000)
+    ap.add_argument(
+        "--device", action="store_true",
+        help="also benchmark numpy vs queries-outer vs row-streaming device scans",
+    )
+    ap.add_argument(
+        "--json", default="BENCH_batched_read.json",
+        help="where to record queries/sec (written when --device is set)",
+    )
+    args = ap.parse_args()
+    for k, v in run(
+        n_rows=args.rows, device=args.device,
+        json_path=args.json if args.device else None,
+    ).items():
         print(k, v)

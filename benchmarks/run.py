@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (and optionally writes them
 to --csv). Default sizes finish on CPU in a few minutes; --full uses
-paper-scale row counts.
+paper-scale row counts; --smoke runs every registered benchmark at toy
+scale (the pre-merge gate, see scripts/ci.sh).
 """
 
 from __future__ import annotations
@@ -15,6 +16,10 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="toy-scale pass over every registered benchmark (CI gate)",
+    )
     ap.add_argument("--csv", default=None)
     ap.add_argument("--json", default=None)
     ap.add_argument(
@@ -22,6 +27,8 @@ def main() -> None:
         help="comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,kernels,batched",
     )
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     only = set(args.only.split(",")) if args.only else None
 
     from . import (
@@ -37,37 +44,47 @@ def main() -> None:
     )
     from .common import ROWS, flush_csv
 
-    full = args.full
+    full, smoke = args.full, args.smoke
     results = {}
     print("name,us_per_call,derived")
 
     def want(k):
         return only is None or k in only
 
+    def size(full_size, default_size, smoke_size):
+        return full_size if full else (smoke_size if smoke else default_size)
+
     if want("fig4"):
-        results["fig4"] = fig4_cost_model.run(n_rows=1_000_000 if full else 200_000)
+        results["fig4"] = fig4_cost_model.run(n_rows=size(1_000_000, 200_000, 20_000))
     if want("fig5a"):
         results["fig5a"] = fig5a_datasize.run(
-            rows_per_sf=1_500_000 if full else 40_000,
-            n_queries=500 if full else 60,
+            rows_per_sf=size(1_500_000, 40_000, 5_000),
+            n_queries=size(500, 60, 10),
         )
     if want("fig5b"):
-        results["fig5b"] = fig5b_repfactor.run(n_rows=10_000_000 if full else 200_000)
+        results["fig5b"] = fig5b_repfactor.run(n_rows=size(10_000_000, 200_000, 20_000))
     if want("fig5c"):
-        results["fig5c"] = fig5c_clustering.run(n_rows=10_000_000 if full else 200_000)
+        results["fig5c"] = fig5c_clustering.run(n_rows=size(10_000_000, 200_000, 20_000))
     if want("table1"):
         results["table1"] = table1_write.run(
-            total_rows=(40_000_000, 80_000_000, 120_000_000) if full else (40_000, 80_000, 120_000)
+            total_rows=size(
+                (40_000_000, 80_000_000, 120_000_000),
+                (40_000, 80_000, 120_000),
+                (5_000, 10_000),
+            )
         )
     if want("recovery"):
-        results["recovery"] = recovery_bench.run(n_rows=18_000_000 if full else 300_000)
+        results["recovery"] = recovery_bench.run(n_rows=size(18_000_000, 300_000, 30_000))
     if want("hrca"):
-        results["hrca"] = hrca_convergence.run(n_rows=1_000_000 if full else 200_000)
+        results["hrca"] = hrca_convergence.run(n_rows=size(1_000_000, 200_000, 20_000))
     if want("kernels"):
         results["kernels"] = kernel_bench.run()
     if want("batched"):
+        # smoke exercises the device kernels too (tiny batches, no JSON)
         results["batched"] = batched_read.run(
-            n_rows=1_500_000 if full else 120_000
+            n_rows=size(1_500_000, 120_000, 20_000),
+            batch_sizes=(8, 16) if smoke else (16, 64, 256),
+            device=smoke,
         )
 
     import os

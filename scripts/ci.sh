@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Pre-merge gate: tier-1 tests + a toy-scale pass over every registered
+# benchmark (catches import/shape breakage in paths the unit tests stub).
+#
+#   scripts/ci.sh              # full gate
+#   scripts/ci.sh -m kernel    # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

@@ -37,7 +37,15 @@ sequential semantics exactly:
   with one ``SortedTable.execute_many`` (single vectorized searchsorted
   over packed slab bounds); per-query results/rows_scanned are identical
   to ``execute``. Group wall time is attributed evenly across the
-  group's queries (× node slowdown).
+  group's queries (× node slowdown). For a *device-resident* column
+  family (``create_column_family(device_resident=True)``) each group is
+  answered by one row-streaming Pallas launch
+  (``repro.kernels.table_scan_device_many``): the replica's columns
+  stream through VMEM once per group regardless of group size, and
+  mixed sum/count groups share the launch. The scalar ``read`` path
+  routes through the same kernel at Q = 1, so batched and sequential
+  results stay identical; numpy remains the reference engine and the
+  fallback for host tables and non-sum/count aggregations.
 * **Hedging**: with ``hedge=True``, queries whose chosen node is a
   straggler (slowdown > ``hedge_ratio``) are duplicated — grouped per
   alternate replica (the next-cheapest on a *different* node, as in
@@ -103,6 +111,10 @@ class ColumnFamily:
     stats: TableStats
     cost_model: CostModel
     hrca_result: HRCAResult | None = None
+    # replica tables held as device-resident jax arrays: reads route
+    # through the batched Pallas scan, and every table produced by the
+    # write/recovery paths is re-placed on device
+    device_resident: bool = False
     rr_counter: "itertools.count" = dataclasses.field(default_factory=itertools.count)
 
 
@@ -165,6 +177,7 @@ class HREngine:
         cost_fns: dict[int, LinearCostFunction] | None = None,
         hrca_kwargs: dict | None = None,
         layouts: Sequence[Sequence[str]] | None = None,
+        device_resident: bool = False,
     ) -> ColumnFamily:
         """CREATE COLUMN FAMILY: choose replica structures, build tables.
 
@@ -175,6 +188,12 @@ class HREngine:
                  that an expert can give"); exhaustive for ≤5 keys, else
                  single-replica annealing + greedy polish.
         Explicit ``layouts`` override both (tests / ablations).
+
+        With ``device_resident=True`` every replica table is placed on
+        device at creation (and re-placed after writes/recovery):
+        ``read``/``read_many`` then answer sum/count queries with the
+        batched Pallas scan instead of the numpy engine. Raises if the
+        schema exceeds the device path's per-column two-lane budget.
         """
         if name in self.column_families:
             raise ValueError(f"column family {name!r} exists")
@@ -208,6 +227,8 @@ class HREngine:
         replicas = []
         for rid, layout in enumerate(chosen):
             table = SortedTable.from_columns(key_cols, value_cols, layout, schema)
+            if device_resident:
+                table.place_on_device()
             node_id = self._place(rid, name)
             self.nodes[node_id].tables[(name, rid)] = table
             replicas.append(ReplicaHandle(rid, tuple(layout), node_id))
@@ -221,6 +242,7 @@ class HREngine:
             stats=stats,
             cost_model=model,
             hrca_result=hrca_result,
+            device_resident=device_resident,
         )
         self.column_families[name] = cf
         return cf
@@ -444,9 +466,12 @@ class HREngine:
             node = self.nodes[r.node_id]
             if not node.alive:
                 continue  # missed writes are repaired by Recovery
-            node.tables[(cf.name, r.replica_id)] = node.tables[
-                (cf.name, r.replica_id)
-            ].merge_insert(key_cols, value_cols)
+            merged = node.tables[(cf.name, r.replica_id)].merge_insert(
+                key_cols, value_cols
+            )
+            if cf.device_resident:
+                merged.place_on_device()
+            node.tables[(cf.name, r.replica_id)] = merged
         cf.stats.merge_rows(key_cols)
         return time.perf_counter() - t0
 
@@ -484,7 +509,10 @@ class HREngine:
                         f"data loss: no survivor for {cf.name!r} replica {r.replica_id}"
                     )
                 src = self.nodes[survivor.node_id].tables[(cf.name, survivor.replica_id)]
-                node.tables[(cf.name, r.replica_id)] = src.resorted(r.layout)
+                rebuilt = src.resorted(r.layout)
+                if cf.device_resident:
+                    rebuilt.place_on_device()
+                node.tables[(cf.name, r.replica_id)] = rebuilt
         return time.perf_counter() - t0
 
     # -- introspection -------------------------------------------------------------

@@ -135,6 +135,9 @@ class SortedTable:
     key_cols: dict[str, np.ndarray]  # sorted, int64
     value_cols: dict[str, np.ndarray]  # sorted alongside
     packed: np.ndarray  # int64, ascending
+    # device-resident column cache (repro.kernels.build_device_state) —
+    # populated by place_on_device(); never part of table identity
+    _device: dict | None = dataclasses.field(default=None, repr=False, compare=False)
 
     # -- construction ------------------------------------------------------
 
@@ -170,6 +173,39 @@ class SortedTable:
         """Same dataset, different serialization — the HR recovery path
         (rebuild a lost replica by re-sorting a survivor, paper §4)."""
         return SortedTable.from_columns(self.key_cols, self.value_cols, layout, self.schema)
+
+    # -- device residency ----------------------------------------------------
+
+    def place_on_device(self) -> "SortedTable":
+        """Materialize the columns as device-resident jax arrays (int32
+        key lanes — wide columns split into two — plus float32 value
+        rows). Afterwards ``execute``/``execute_many`` route sum/count
+        queries through the batched Pallas scan; other aggregations keep
+        the numpy path. Raises ``ValueError`` naming the offending column
+        if a key column exceeds the device path's two-lane 60-bit budget.
+        Returns ``self`` for chaining."""
+        from repro.kernels import build_device_state
+
+        self._device = build_device_state(self)
+        return self
+
+    def evict_from_device(self) -> None:
+        """Drop the device-resident cache; reads fall back to numpy."""
+        self._device = None
+
+    @property
+    def device_resident(self) -> bool:
+        return self._device is not None
+
+    def _device_eligible(self, query: Query) -> bool:
+        """Queries the device path answers: sum/count aggregations (a
+        "select" needs row indices, which the kernel does not emit) over
+        a known value column."""
+        return (
+            self._device is not None
+            and query.agg in ("sum", "count")
+            and (query.agg != "sum" or query.value_col in self.value_cols)
+        )
 
     # -- writes (LSM-style bulk merge) --------------------------------------
 
@@ -227,26 +263,53 @@ class SortedTable:
     def execute(self, query: Query) -> ScanResult:
         """Stream the slab, apply residual predicates, aggregate.
 
-        This is the numpy reference engine; the Pallas `scan_agg` kernel
-        (repro.kernels) implements the same slab scan for the TPU path and
-        is tested against this method.
+        Device-resident tables route eligible queries through the Pallas
+        scan (the Q = 1 case of the batched launch, so a scalar loop and
+        ``execute_many`` compute per-query results identically); numpy is
+        the reference engine and the fallback for host tables.
         """
         lo, hi = self.slab(query)
+        if self._device_eligible(query):
+            from repro.kernels import table_scan_device_many
+
+            ((value, count),) = table_scan_device_many(
+                self, [query], slabs=np.array([[lo, hi]], np.int64)
+            )
+            return ScanResult(value, hi - lo, int(count))
         return self._scan_slab(query, lo, hi)
 
     def execute_many(self, queries: Sequence[Query]) -> list[ScanResult]:
         """Batched ``execute``: locate all slabs with one vectorized
-        searchsorted (``slab_many``), then run the residual scan per
-        query. Result ``i`` is identical to ``execute(queries[i])`` by
-        construction (same residual-scan code over the same slab).
+        searchsorted (``slab_many``), then answer the batch.
 
-        The device-side batched path (one Pallas kernel invocation for
-        the whole batch) is ``repro.kernels.table_scan_device_many``.
+        On a device-resident table every eligible query (sum/count) is
+        served by one ``repro.kernels.table_scan_device_many`` launch —
+        the row-streaming kernel scans the columns once for the whole
+        group, mixing aggregation kinds and value columns. Ineligible
+        queries (e.g. agg == "select") and host tables run the numpy
+        residual scan. Either way result ``i`` equals
+        ``execute(queries[i])``, which routes per query the same way.
         """
+        queries = list(queries)
+        if not queries:
+            return []
         slabs = self.slab_many(queries)
+        results: list[ScanResult | None] = [None] * len(queries)
+        dev_idx = [i for i, q in enumerate(queries) if self._device_eligible(q)]
+        if dev_idx:
+            from repro.kernels import table_scan_device_many
+
+            out = table_scan_device_many(
+                self, [queries[i] for i in dev_idx], slabs=slabs[dev_idx]
+            )
+            for i, (value, count) in zip(dev_idx, out):
+                lo, hi = int(slabs[i, 0]), int(slabs[i, 1])
+                results[i] = ScanResult(value, hi - lo, int(count))
         return [
-            self._scan_slab(q, int(slabs[i, 0]), int(slabs[i, 1]))
-            for i, q in enumerate(queries)
+            r
+            if r is not None
+            else self._scan_slab(queries[i], int(slabs[i, 0]), int(slabs[i, 1]))
+            for i, r in enumerate(results)
         ]
 
     def _scan_slab(self, query: Query, lo: int, hi: int) -> ScanResult:

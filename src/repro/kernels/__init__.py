@@ -1,16 +1,22 @@
 """Pallas TPU kernels for the HR hot paths.
 
 scan_agg         — predicated slab scan + aggregate (the paper's query loop)
-scan_agg_batched — one launch over a (queries × row blocks) grid: a
-                   whole query batch shares a replica's device-resident
-                   columns (the ``read_many`` device path)
+scan_agg_batched — one row-streaming launch over a replica's
+                   device-resident columns: row blocks are the outer grid
+                   axis, per-query accumulators are revisited every step,
+                   mixed sum/count batches share multi-row value tiles
+                   (the ``read_many`` device path)
 ecdf_hist        — histogram/ECDF build for the Cost Evaluator
 
 Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
-jit'd public API with CPU interpret-mode fallback.
+jit'd public API with CPU interpret-mode fallback. ``build_device_state``
+materializes a SortedTable's device-resident arrays (wide key columns
+packed into two int32 lanes per ``device_key_plan``).
 """
 
 from .ops import (
+    build_device_state,
+    device_key_plan,
     ecdf_hist,
     ecdf_hist_ref,
     scan_agg,
@@ -22,6 +28,8 @@ from .ops import (
 )
 
 __all__ = [
+    "build_device_state",
+    "device_key_plan",
     "ecdf_hist",
     "ecdf_hist_ref",
     "scan_agg",

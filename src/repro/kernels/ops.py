@@ -4,17 +4,28 @@
 device); ``ecdf_hist`` refreshes Cost-Evaluator statistics. Both take the
 same arguments as their ``ref.py`` oracles and dispatch to Pallas
 (interpret-mode on CPU, compiled on TPU).
+
+``table_scan_device_many`` is the batched read fast path: one
+row-streaming launch answers a whole query group against a replica's
+device-resident columns, mixing sum and count aggregations over any set
+of value columns in the same batch (multi-row value tiles + a per-query
+selector). Key columns up to 60 bits are packed into two int32 lanes;
+wider columns raise a precise error naming the column.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import ref
 from .ecdf_hist import ecdf_hist_pallas
-from .scan_agg import scan_agg_batched_pallas, scan_agg_pallas
+from .scan_agg import (
+    WIDE_LANE_BITS,
+    scan_agg_batched_pallas,
+    scan_agg_batched_qgrid_pallas,
+    scan_agg_pallas,
+)
 
 __all__ = [
     "scan_agg",
@@ -23,6 +34,8 @@ __all__ = [
     "scan_agg_ref",
     "scan_agg_batched_ref",
     "ecdf_hist_ref",
+    "device_key_plan",
+    "build_device_state",
     "table_scan_device",
     "table_scan_device_many",
 ]
@@ -30,6 +43,12 @@ __all__ = [
 scan_agg_ref = ref.scan_agg_ref
 scan_agg_batched_ref = ref.scan_agg_batched_ref
 ecdf_hist_ref = ref.ecdf_hist_ref
+
+# Keys and filter bounds live in int32 lanes on device; one lane holds a
+# ≤30-bit column (its exclusive global bound 2**bits must still fit), a
+# lane *pair* holds up to 60 bits split as (value >> 30, value & mask).
+MAX_DEVICE_COL_BITS = 2 * WIDE_LANE_BITS
+_LANE_MASK = (1 << WIDE_LANE_BITS) - 1
 
 
 def scan_agg(keys, values, col_lo, col_hi, slab, *, block_n: int = 2048, use_pallas: bool = True):
@@ -53,88 +72,283 @@ def ecdf_hist(col, *, n_bins: int, bin_width: int, block_n: int = 512, use_palla
 
 
 def scan_agg_batched(
-    keys, values, col_lo, col_hi, slabs, *, block_n: int = 2048, use_pallas: bool = True
+    keys,
+    values,
+    col_lo,
+    col_hi,
+    slabs,
+    value_sel=None,
+    *,
+    col_parts: tuple[int, ...] | None = None,
+    block_n: int = 2048,
+    use_pallas: bool = True,
+    grid: str = "rows_outer",
 ):
     """Per-query (sum, count) for a query batch sharing one replica's
-    columns: one grid of (queries × row blocks) instead of Q kernel
-    launches. Arrays may be numpy or jax; returns float32[Q, 2]."""
+    columns. Arrays may be numpy or jax; returns float32[Q, 2].
+
+    ``grid="rows_outer"`` (default) is the row-streaming launch: key and
+    value tiles are fetched from HBM once per batch, per-query
+    accumulators are revisited at every row step. ``values`` may be a
+    (V, N) tile with ``value_sel`` routing each query to its row, and
+    ``col_parts`` marks wide (two-lane) key columns.
+
+    ``grid="queries_outer"`` dispatches the legacy PR 1 grid (queries ×
+    row blocks, row axis fastest; key traffic scales with Q). It only
+    supports a single value row and narrow columns — kept as the
+    benchmark baseline for the perf trajectory.
+    """
     keys = jnp.asarray(keys, jnp.int32)
     values = jnp.asarray(values, jnp.float32)
     col_lo = jnp.asarray(col_lo, jnp.int32)
     col_hi = jnp.asarray(col_hi, jnp.int32)
     slabs = jnp.asarray(slabs, jnp.int32)
-    if not use_pallas:
-        return ref.scan_agg_batched_ref(keys, values, col_lo, col_hi, slabs)
-    return scan_agg_batched_pallas(keys, values, col_lo, col_hi, slabs, block_n=block_n)
-
-
-def _check_device_width(table) -> None:
-    """The device path stores keys and filter bounds as int32; a column
-    needs bits ≤ 30 so that max_value + 1 (the exclusive global upper
-    bound, 2**bits) still fits. Wider schemas are served by the numpy
-    engine."""
-    wide = [c for c in table.layout if table.schema.bits[c] > 30]
-    if wide:
-        raise ValueError(
-            f"device scan path requires ≤30-bit key columns, got {wide}; "
-            "use SortedTable.execute/execute_many for wider schemas"
+    if grid == "queries_outer":
+        if values.ndim != 1:
+            raise ValueError("queries_outer grid supports a single value row")
+        if value_sel is not None or (col_parts and any(p != 1 for p in col_parts)):
+            raise ValueError(
+                "queries_outer grid supports neither value selectors nor wide columns"
+            )
+        if not use_pallas:
+            return ref.scan_agg_batched_ref(keys, values, col_lo, col_hi, slabs)
+        return scan_agg_batched_qgrid_pallas(
+            keys, values, col_lo, col_hi, slabs, block_n=block_n
         )
+    if grid != "rows_outer":
+        raise ValueError(f"unknown grid {grid!r}")
+    if value_sel is not None:
+        value_sel = jnp.asarray(value_sel, jnp.int32)
+    if not use_pallas:
+        return ref.scan_agg_batched_ref(
+            keys, values, col_lo, col_hi, slabs, value_sel=value_sel, col_parts=col_parts
+        )
+    return scan_agg_batched_pallas(
+        keys, values, col_lo, col_hi, slabs, value_sel,
+        col_parts=col_parts, block_n=block_n,
+    )
+
+
+# -- device-resident table scans ---------------------------------------------
+
+
+def device_key_plan(table) -> tuple[int, ...]:
+    """Lane count (1 or 2) per layout column for the device scan path.
+
+    Raises a precise ``ValueError`` naming the offending column when a
+    key column exceeds the two-lane budget (> 60 bits) — wider schemas
+    are served by the numpy engine.
+    """
+    parts = []
+    for c in table.layout:
+        bits = table.schema.bits[c]
+        if bits <= WIDE_LANE_BITS:
+            parts.append(1)
+        elif bits <= MAX_DEVICE_COL_BITS:
+            parts.append(2)
+        else:
+            raise ValueError(
+                f"device scan path: key column {c!r} needs {bits} bits, more "
+                f"than the {MAX_DEVICE_COL_BITS}-bit two-lane budget "
+                f"(2 × {WIDE_LANE_BITS}-bit int32 lanes); use "
+                "SortedTable.execute/execute_many (numpy) for this schema"
+            )
+    return tuple(parts)
+
+
+def _expand_key_planes(table, col_parts: tuple[int, ...]) -> np.ndarray:
+    """int32[K_ex, N] key lanes in layout order: narrow columns as one
+    lane, wide columns as (value >> 30, value & mask) pairs whose
+    lexicographic order equals the numeric order."""
+    rows: list[np.ndarray] = []
+    for c, parts in zip(table.layout, col_parts):
+        v = np.asarray(table.key_cols[c], np.int64)
+        if parts == 1:
+            rows.append(v.astype(np.int32))
+        else:
+            rows.append((v >> WIDE_LANE_BITS).astype(np.int32))
+            rows.append((v & _LANE_MASK).astype(np.int32))
+    return np.stack(rows) if rows else np.zeros((0, len(table)), np.int32)
+
+
+def _expand_bounds(
+    bounds: np.ndarray, col_parts: tuple[int, ...]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Split int64[Q, K, 2] per-column bounds into int32[Q, K_ex] lane
+    bounds. An exclusive upper bound splits the same way — comparing the
+    lane pair lexicographically against (hi >> 30, hi & mask) is exactly
+    ``value < hi``."""
+    los: list[np.ndarray] = []
+    his: list[np.ndarray] = []
+    for j, parts in enumerate(col_parts):
+        lo, hi = bounds[:, j, 0], bounds[:, j, 1]
+        if parts == 1:
+            los.append(lo.astype(np.int32))
+            his.append(hi.astype(np.int32))
+        else:
+            los.append((lo >> WIDE_LANE_BITS).astype(np.int32))
+            los.append((lo & _LANE_MASK).astype(np.int32))
+            his.append((hi >> WIDE_LANE_BITS).astype(np.int32))
+            his.append((hi & _LANE_MASK).astype(np.int32))
+    return np.stack(los, axis=1), np.stack(his, axis=1)
+
+
+# Row-axis padding granularity of the resident arrays. Matches the
+# default kernel block so the jit-time pads become no-ops for every
+# block_n that divides it — the per-batch work is then O(Q), not O(N).
+DEVICE_BLOCK_N = 2048
+
+
+# The kernel accumulates the matched count in a float32 lane: exact up
+# to 2**24, beyond which additions round. Tables that could exceed it
+# stay on the numpy engine (exact integer counts) until the kernel
+# grows a two-lane carry accumulator.
+MAX_DEVICE_ROWS = 1 << 24
+
+
+def build_device_state(table, value_cols=None) -> dict:
+    """Materialize a table's device-resident arrays: expanded int32 key
+    lanes and a float32 value tile (one row per value column + a ones
+    row for counts), both pre-padded to the kernel's sublane/block
+    granularity so repeated batches ship only O(Q) bounds/slabs/selector
+    data — no per-call stack or pad of the N-sized columns.
+    ``SortedTable.place_on_device`` stores the result; host-only tables
+    build it ephemerally per call, passing ``value_cols`` to materialize
+    only the batch's columns."""
+    col_parts = device_key_plan(table)
+    n = len(table)
+    if n >= MAX_DEVICE_ROWS:
+        raise ValueError(
+            f"device scan path: {n} rows exceeds the float32 count "
+            f"accumulator's exact range ({MAX_DEVICE_ROWS}); use the "
+            "numpy engine for tables this large"
+        )
+    n_pad = -(-max(n, 1) // DEVICE_BLOCK_N) * DEVICE_BLOCK_N
+    keys = _expand_key_planes(table, col_parts)
+    k_ex = keys.shape[0]
+    k_pad = max(8, -(-k_ex // 8) * 8)
+    keys_p = np.zeros((k_pad, n_pad), np.int32)
+    keys_p[:k_ex, :n] = keys
+    if value_cols is None:
+        vnames = list(table.value_cols)
+    else:
+        wanted = set(value_cols)
+        vnames = [c for c in table.value_cols if c in wanted]
+    n_value_rows = len(vnames) + 1  # + ones row
+    v_pad = max(8, -(-n_value_rows // 8) * 8)
+    tile = np.zeros((v_pad, n_pad), np.float32)
+    for i, c in enumerate(vnames):
+        tile[i, :n] = np.asarray(table.value_cols[c], np.float32)
+    tile[len(vnames), :n] = 1.0  # padded rows stay 0 and are slab-masked
+    return {
+        "col_parts": col_parts,
+        "keys": jnp.asarray(keys_p),
+        "values_tile": jnp.asarray(tile),
+        "value_rows": {c: i for i, c in enumerate(vnames)},
+        "ones_row": len(vnames),
+        "n_value_rows": n_value_rows,
+    }
 
 
 def table_scan_device(table, query, *, use_pallas: bool = True) -> tuple[float, float]:
     """Device-side execution of ``SortedTable.execute`` (sum/count aggs):
-    slab via packed-key searchsorted, then the scan_agg kernel. Used by
-    the serving/data layers when tables are resident as jax arrays."""
-    _check_device_width(table)
-    lo_idx, hi_idx = table.slab(query)
-    names = list(table.layout)
-    keys = np.stack([table.key_cols[c] for c in names]).astype(np.int32)
-    if query.agg == "sum":
-        vals = np.asarray(table.value_cols[query.value_col], np.float32)
-    else:
-        vals = np.ones(len(table), np.float32)
-    lo = np.array([query.filter_bounds(table.schema, c)[0] for c in names], np.int32)
-    hi = np.array([query.filter_bounds(table.schema, c)[1] for c in names], np.int32)
-    out = scan_agg(keys, vals, lo, hi, np.array([lo_idx, hi_idx]), use_pallas=use_pallas)
-    s, c = float(out[0]), float(out[1])
-    return (s if query.agg == "sum" else c), c
+    slab via packed-key searchsorted, then the batched scan kernel at
+    Q = 1. Used by the serving/data layers when tables are resident as
+    jax arrays."""
+    (out,) = table_scan_device_many(table, [query], use_pallas=use_pallas)
+    return out
 
 
 def table_scan_device_many(
-    table, queries, *, block_n: int = 2048, use_pallas: bool = True
+    table,
+    queries,
+    *,
+    slabs: np.ndarray | None = None,
+    block_n: int = 2048,
+    use_pallas: bool = True,
+    grid: str = "rows_outer",
 ) -> list[tuple[float, float]]:
     """Batched ``table_scan_device``: all queries against one replica in
-    a single ``scan_agg_batched`` invocation. Queries must share the
-    aggregation kind (all "count", or all "sum" over one value column —
-    the batch shares a single values array on device)."""
+    a single row-streaming launch. Returns ``[(value, count)]`` per query
+    in batch order.
+
+    Heterogeneous groups ride together: "sum" queries over any mix of
+    value columns and "count" queries share the launch — each distinct
+    value column becomes one row of the value tile, counts select a ones
+    row, and a per-query selector routes the aggregation. ``slabs``
+    accepts precomputed ``slab_many`` output so callers that already
+    located the slabs (``SortedTable.execute_many``) skip the second
+    searchsorted. ``grid="queries_outer"`` dispatches the legacy PR 1
+    grid (uniform-agg, narrow-key batches only) for benchmarking.
+    """
     queries = list(queries)
     if not queries:
         return []
-    aggs = {q.agg for q in queries}
-    if not aggs <= {"sum", "count"}:
-        raise ValueError(f"device path supports sum/count aggs, got {aggs}")
-    vcols = {q.value_col for q in queries if q.agg == "sum"}
-    if len(aggs) > 1 or len(vcols) > 1:
-        raise ValueError("batch must share one aggregation and value column")
-    _check_device_width(table)
+    for q in queries:
+        if q.agg not in ("sum", "count"):
+            raise ValueError(f"device path supports sum/count aggs, got {q.agg!r}")
+        if q.agg == "sum" and q.value_col is None:
+            raise ValueError("sum aggregation requires value_col")
+    state = getattr(table, "_device", None)
+    if state is None:  # host table: materialize only this batch's columns
+        state = build_device_state(
+            table, value_cols={q.value_col for q in queries if q.agg == "sum"}
+        )
+    col_parts: tuple[int, ...] = state["col_parts"]
+    if slabs is None:
+        slabs = table.slab_many(queries)
+
+    # the resident value tile already holds every value column + the
+    # ones row; the per-query selector routes each aggregation to its row
+    value_rows: dict[str, int] = state["value_rows"]
+    values = state["values_tile"]
+    sel = np.array(
+        [
+            value_rows[q.value_col] if q.agg == "sum" else state["ones_row"]
+            for q in queries
+        ],
+        np.int32,
+    )
+
     names = list(table.layout)
-    slabs = table.slab_many(queries)
-    keys = np.stack([table.key_cols[c] for c in names]).astype(np.int32)
-    if vcols:
-        vals = np.asarray(table.value_cols[next(iter(vcols))], np.float32)
-    else:
-        vals = np.ones(len(table), np.float32)
     bounds = np.array(
         [[q.filter_bounds(table.schema, c) for c in names] for q in queries],
-        np.int32,
-    )  # (Q, K, 2)
-    out = np.asarray(
-        scan_agg_batched(
-            keys, vals, bounds[:, :, 0], bounds[:, :, 1],
-            slabs.astype(np.int32), block_n=block_n, use_pallas=use_pallas,
+        np.int64,
+    )  # (Q, K, 2) — lo inclusive, hi exclusive
+    lo, hi = _expand_bounds(bounds, col_parts)
+    slabs32 = np.asarray(slabs, np.int64).astype(np.int32)
+
+    if grid == "queries_outer":
+        if len(set(sel)) > 1 or any(p != 1 for p in col_parts):
+            raise ValueError(
+                "queries_outer grid requires a uniform-agg, narrow-key batch"
+            )
+    elif grid != "rows_outer":
+        raise ValueError(f"unknown grid {grid!r}")
+    if not use_pallas:  # one oracle covers both grids
+        out = np.asarray(
+            ref.scan_agg_batched_ref(
+                state["keys"], jnp.asarray(values), jnp.asarray(lo, jnp.int32),
+                jnp.asarray(hi, jnp.int32), jnp.asarray(slabs32),
+                jnp.asarray(sel), col_parts=col_parts,
+            )
         )
-    )
-    want_sum = "sum" in aggs
+    elif grid == "queries_outer":
+        out = np.asarray(
+            scan_agg_batched_qgrid_pallas(
+                state["keys"], values[int(sel[0])], lo, hi, slabs32,
+                block_n=block_n,
+            )
+        )
+    else:
+        out = np.asarray(
+            scan_agg_batched_pallas(
+                state["keys"], values, lo, hi, slabs32, sel,
+                col_parts=col_parts, block_n=block_n,
+                n_vals=state["n_value_rows"],
+            )
+        )
     return [
-        ((float(s) if want_sum else float(c)), float(c)) for s, c in out
+        (float(s) if q.agg == "sum" else float(c), float(c))
+        for q, (s, c) in zip(queries, out)
     ]

@@ -27,25 +27,50 @@ def scan_agg_ref(
 
 
 def scan_agg_batched_ref(
-    keys: jax.Array,  # int32[K, N]
-    values: jax.Array,  # float32[N]
-    col_lo: jax.Array,  # int32[Q, K]
-    col_hi: jax.Array,  # int32[Q, K]
+    keys: jax.Array,  # int32[K_ex, N] — key lanes (wide columns use two)
+    values: jax.Array,  # float32[N] or float32[V, N] — value rows
+    col_lo: jax.Array,  # int32[Q, K_ex] inclusive per-query/lane bounds
+    col_hi: jax.Array,  # int32[Q, K_ex] exclusive per-query/lane bounds
     slabs: jax.Array,  # int32[Q, 2]
+    value_sel: jax.Array | None = None,  # int32[Q] value-row selector
+    col_parts: tuple[int, ...] | None = None,  # lanes per logical column
 ) -> jax.Array:
-    """float32[Q, 2]: per query, (masked sum, matched count) over its slab."""
-    K, N = keys.shape
+    """float32[Q, 2]: per query, (masked sum, matched count) over its slab.
+
+    Oracle for the row-streaming batched kernel: multi-row value tiles
+    with a per-query selector (mixed sum/count batches) and wide key
+    columns split into (hi, lo) int32 lane pairs compared
+    lexicographically (``col_parts`` gives each logical column's lane
+    count). Defaults reproduce the PR 1 signature: one value row, all
+    columns narrow.
+    """
+    K_ex, N = keys.shape
+    Q = col_lo.shape[0]
+    values = values.astype(jnp.float32)
+    if values.ndim == 1:
+        values = values[None, :]
+    if value_sel is None:
+        value_sel = jnp.zeros(Q, jnp.int32)
+    if col_parts is None:
+        col_parts = (1,) * K_ex
     ridx = jnp.arange(N, dtype=jnp.int32)
-    in_slab = (ridx[None, :] >= slabs[:, 0:1]) & (ridx[None, :] < slabs[:, 1:2])  # (Q, N)
-    ok = jnp.all(
-        (keys[None, :, :] >= col_lo[:, :, None]) & (keys[None, :, :] < col_hi[:, :, None]),
-        axis=1,
-    )  # (Q, N)
-    mask = (ok & in_slab).astype(jnp.float32)
-    vals = values.astype(jnp.float32)
-    return jnp.stack(
-        [jnp.sum(vals[None, :] * mask, axis=1), jnp.sum(mask, axis=1)], axis=1
-    )
+    ok = (ridx[None, :] >= slabs[:, 0:1]) & (ridx[None, :] < slabs[:, 1:2])  # (Q, N)
+    lane = 0
+    for parts in col_parts:
+        if parts == 1:
+            k = keys[lane][None, :]  # (1, N)
+            ok &= (k >= col_lo[:, lane : lane + 1]) & (k < col_hi[:, lane : lane + 1])
+        else:  # wide column: lexicographic [lo, hi) on the lane pair
+            kh = keys[lane][None, :]
+            kl = keys[lane + 1][None, :]
+            bh, bl = col_lo[:, lane : lane + 1], col_lo[:, lane + 1 : lane + 2]
+            ok &= (kh > bh) | ((kh == bh) & (kl >= bl))
+            bh, bl = col_hi[:, lane : lane + 1], col_hi[:, lane + 1 : lane + 2]
+            ok &= (kh < bh) | ((kh == bh) & (kl < bl))
+        lane += parts
+    mask = ok.astype(jnp.float32)
+    vq = values[value_sel]  # (Q, N) — each query's value row
+    return jnp.stack([jnp.sum(vq * mask, axis=1), jnp.sum(mask, axis=1)], axis=1)
 
 
 def ecdf_hist_ref(col: jax.Array, *, n_bins: int, bin_width: int) -> jax.Array:

@@ -1,0 +1,185 @@
+"""Device-resident batched read path: engine/table routing through the
+row-streaming Pallas kernel.
+
+The acceptance bar for the device path is *identity* with the sequential
+scalar path: ``read_many`` on a device-resident column family must return
+per-query results equal to a loop of ``read`` (both route through the
+same kernel — the scalar path is the Q = 1 launch), and equal to the
+numpy engine up to float32 accumulation for sums (exactly, for counts
+and rows_scanned).
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import Eq, HREngine, KeySchema, Query, Range, SortedTable, random_workload
+from repro.core.tpch import generate_simulation
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    kc, vc, schema = generate_simulation(30_000, 3, seed=0)
+    rng = np.random.default_rng(1)
+    wl = random_workload(rng, schema, list(kc), 30, agg="sum", value_col="metric")
+    # mixed agg kinds in one batch: sums + counts
+    queries = list(wl.queries[:20]) + [
+        Query(filters=q.filters, agg="count") for q in wl.queries[20:]
+    ]
+    dev = HREngine(n_nodes=5)
+    dev.create_column_family(
+        "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        device_resident=True,
+    )
+    host = HREngine(n_nodes=5)
+    host.create_column_family(
+        "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+    )
+    return dev, host, queries, schema, kc
+
+
+class TestDeviceReadMany:
+    def test_tables_resident(self, setup):
+        dev, _, _, _, _ = setup
+        tables = [t for n in dev.nodes for t in n.tables.values()]
+        assert tables and all(t.device_resident for t in tables)
+
+    def test_read_many_identical_to_sequential_read(self, setup):
+        """The acceptance criterion: per-query results (values included)
+        identical between read_many and a sequential read loop."""
+        dev, _, queries, _, _ = setup
+        eng_a, eng_b = copy.deepcopy(dev), copy.deepcopy(dev)
+        seq = [eng_a.read("cf", q) for q in queries]
+        bat = eng_b.read_many("cf", queries)
+        for (rs, rep_s), (rb, rep_b) in zip(seq, bat):
+            assert rb.value == rs.value
+            assert rb.rows_scanned == rs.rows_scanned
+            assert rb.rows_matched == rs.rows_matched
+            assert rep_b.replica_id == rep_s.replica_id
+            assert rep_b.node_id == rep_s.node_id
+
+    def test_matches_numpy_engine(self, setup):
+        """Counts and rows_scanned exact vs the numpy reference engine;
+        sums within float32 accumulation tolerance."""
+        dev, host, queries, _, _ = setup
+        bat = copy.deepcopy(dev).read_many("cf", queries)
+        ref = copy.deepcopy(host).read_many("cf", queries)
+        for (rd, _), (rh, _) in zip(bat, ref):
+            assert rd.rows_scanned == rh.rows_scanned
+            assert rd.rows_matched == rh.rows_matched
+            np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5)
+
+    def test_select_agg_falls_back_in_mixed_batch(self, setup):
+        """A "select" query needs row indices the kernel does not emit:
+        it takes the numpy path while the rest of the batch stays on
+        device, and the partition is invisible in the results."""
+        dev, host, queries, _, _ = setup
+        qsel = Query(filters={"k0": Eq(1)}, agg="select")
+        batch = [queries[0], qsel, queries[1]]
+        out = copy.deepcopy(dev).read_many("cf", batch)
+        ref = copy.deepcopy(host).read_many("cf", batch)
+        assert out[1][0].selected is not None
+        np.testing.assert_array_equal(out[1][0].selected, ref[1][0].selected)
+        for (rd, _), (rh, _) in zip(out, ref):
+            assert rd.rows_matched == rh.rows_matched
+
+    def test_empty_range_on_device(self, setup):
+        dev, _, _, _, _ = setup
+        q = Query(filters={"k1": Range(2, 2)}, agg="count")
+        ((res, rep),) = copy.deepcopy(dev).read_many("cf", [q])
+        assert res.value == 0.0 and res.rows_scanned == 0 and res.rows_matched == 0
+
+    def test_write_then_read_stays_on_device_and_correct(self, setup):
+        dev, host, queries, schema, kc = setup
+        dev2, host2 = copy.deepcopy(dev), copy.deepcopy(host)
+        rng = np.random.default_rng(7)
+        kc2 = {c: rng.integers(0, schema.max_value(c) + 1, 400) for c in kc}
+        vc2 = {"metric": rng.uniform(0, 1, 400)}
+        dev2.write("cf", kc2, vc2)
+        host2.write("cf", kc2, vc2)
+        assert all(
+            t.device_resident for n in dev2.nodes for t in n.tables.values()
+        )
+        bat = dev2.read_many("cf", queries[:8])
+        ref = host2.read_many("cf", queries[:8])
+        for (rd, _), (rh, _) in zip(bat, ref):
+            assert rd.rows_matched == rh.rows_matched
+            np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5)
+
+    def test_recovery_replaces_on_device(self, setup):
+        dev, _, queries, _, _ = setup
+        dev2 = copy.deepcopy(dev)
+        victim = dev2.column_families["cf"].replicas[0].node_id
+        dev2.fail_node(victim)
+        dev2.recover_node(victim)
+        assert dev2.nodes[victim].tables
+        assert all(t.device_resident for t in dev2.nodes[victim].tables.values())
+        out = dev2.read_many("cf", queries[:5])
+        assert all(r is not None for r, _ in out)
+
+
+class TestTableResidency:
+    def _table(self, rng, n=2000):
+        kc = {"a": rng.integers(0, 16, n), "b": rng.integers(0, 16, n)}
+        vc = {"m": rng.uniform(0, 1, n)}
+        return SortedTable.from_columns(kc, vc, ("a", "b"))
+
+    def test_place_and_evict(self, rng):
+        t = self._table(rng)
+        assert not t.device_resident
+        assert t.place_on_device() is t and t.device_resident
+        q = Query(filters={"a": Eq(3)}, agg="count")
+        on_dev = t.execute(q)
+        t.evict_from_device()
+        assert not t.device_resident
+        off_dev = t.execute(q)
+        assert on_dev.value == off_dev.value
+        assert on_dev.rows_scanned == off_dev.rows_scanned
+
+    def test_scalar_equals_batched_on_device(self, rng):
+        """execute (Q = 1 launch) and execute_many (grouped launch)
+        agree exactly — both sides of the engine's identity contract."""
+        t = self._table(rng).place_on_device()
+        qs = [
+            Query(filters={"a": Eq(int(rng.integers(0, 16)))}, agg="sum", value_col="m")
+            for _ in range(9)
+        ] + [Query(filters={"b": Range(2, 9)}, agg="count")]
+        many = t.execute_many(qs)
+        for q, rb in zip(qs, many):
+            rs = t.execute(q)
+            assert rb.value == rs.value
+            assert rb.rows_scanned == rs.rows_scanned
+            assert rb.rows_matched == rs.rows_matched
+
+    def test_wide_schema_resident(self, rng):
+        """A 40-bit key column rides two int32 lanes on device."""
+        schema = KeySchema({"a": 40, "b": 8})
+        kc = {"a": rng.integers(0, 2**40, 1500).astype(np.int64),
+              "b": rng.integers(0, 256, 1500).astype(np.int64)}
+        vc = {"m": rng.uniform(0, 5, 1500)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"), schema).place_on_device()
+        host = SortedTable.from_columns(kc, vc, ("a", "b"), schema)
+        lo = int(rng.integers(0, 2**39))
+        qs = [Query(filters={"a": Range(lo, lo + 2**36)}, agg="sum", value_col="m"),
+              Query(filters={"b": Eq(7)}, agg="count"),
+              Query(filters={}, agg="count")]
+        for q, rd in zip(qs, t.execute_many(qs)):
+            rh = host.execute(q)
+            assert rd.rows_scanned == rh.rows_scanned
+            assert rd.rows_matched == rh.rows_matched
+            np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5)
+
+    def test_merge_insert_drops_stale_cache(self, rng):
+        """merge_insert returns a fresh table without the old device
+        cache — stale device columns must never serve reads."""
+        t = self._table(rng).place_on_device()
+        merged = t.merge_insert(
+            {"a": np.array([1, 2]), "b": np.array([3, 4])},
+            {"m": np.array([0.5, 0.25])},
+        )
+        assert not merged.device_resident
+        q = Query(filters={"a": Eq(1)}, agg="count")
+        assert merged.execute(q).value == merged.place_on_device().execute(q).value

@@ -10,6 +10,7 @@ import pytest
 
 from repro.core import Eq, Query, Range, SortedTable
 from repro.kernels import (
+    device_key_plan,
     ecdf_hist,
     ecdf_hist_ref,
     scan_agg,
@@ -19,6 +20,8 @@ from repro.kernels import (
     table_scan_device,
     table_scan_device_many,
 )
+
+pytestmark = pytest.mark.kernel
 
 
 class TestScanAgg:
@@ -153,21 +156,38 @@ class TestScanAggBatched:
             assert dev_cnt == res.rows_matched
             np.testing.assert_allclose(dev_val, res.value, rtol=1e-4, atol=1e-3)
 
-    def test_mixed_agg_batch_rejected(self, rng):
+    def test_mixed_agg_batch_one_launch(self, rng):
+        """Sum queries over different value columns and count queries
+        ride one launch (multi-row value tile + per-query selector)."""
+        kc = {"a": rng.integers(0, 8, 3000), "b": rng.integers(0, 8, 3000)}
+        vc = {"m": rng.uniform(0, 1, 3000), "w": rng.uniform(-2, 2, 3000)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"))
+        qs = [Query(filters={"a": Eq(1)}, agg="count"),
+              Query(filters={"a": Eq(2)}, agg="sum", value_col="m"),
+              Query(filters={"b": Range(1, 6)}, agg="sum", value_col="w"),
+              Query(filters={"b": Eq(3)}, agg="sum", value_col="m"),
+              Query(filters={}, agg="count")]
+        dev = table_scan_device_many(t, qs)
+        for q, (dev_val, dev_cnt) in zip(qs, dev):
+            res = t.execute(q)
+            assert dev_cnt == res.rows_matched
+            np.testing.assert_allclose(dev_val, res.value, rtol=1e-4, atol=1e-3)
+
+    def test_select_agg_rejected(self, rng):
         kc = {"a": rng.integers(0, 8, 100)}
         vc = {"m": rng.uniform(0, 1, 100)}
         t = SortedTable.from_columns(kc, vc, ("a",))
-        qs = [Query(filters={"a": Eq(1)}, agg="count"),
-              Query(filters={"a": Eq(2)}, agg="sum", value_col="m")]
-        with pytest.raises(ValueError):
-            table_scan_device_many(t, qs)
+        with pytest.raises(ValueError, match="sum/count"):
+            table_scan_device_many(t, [Query(filters={"a": Eq(1)}, agg="select")])
+        with pytest.raises(ValueError, match="value_col"):
+            table_scan_device_many(t, [Query(filters={"a": Eq(1)}, agg="sum")])
 
-    @pytest.mark.parametrize("bits", [31, 32])
-    def test_wide_schema_rejected_clearly(self, rng, bits):
-        """Keys/bounds live in int32 on device: a column whose exclusive
-        global bound 2**bits exceeds int32 (bits > 30) must raise a
-        clear error, not wrap or overflow — 31 bits is the off-by-one
-        case (keys fit int32 but the unfiltered bound does not)."""
+    @pytest.mark.parametrize("bits", [31, 32, 45, 60])
+    def test_wide_schema_two_lane_packing(self, rng, bits):
+        """Columns wider than one int32 lane (> 30 bits) are split into
+        (hi, lo) lane pairs and served on device; 31 bits is the old
+        off-by-one rejection case (keys fit int32, the unfiltered
+        exclusive bound 2**31 does not)."""
         from repro.core import KeySchema
 
         schema = KeySchema({"a": bits})
@@ -175,13 +195,113 @@ class TestScanAggBatched:
         kc = {"a": rng.integers(top - 8, top, 100).astype(np.int64)}
         vc = {"m": rng.uniform(0, 1, 100)}
         t = SortedTable.from_columns(kc, vc, ("a",), schema)
+        assert device_key_plan(t) == (2,)
+        qs = [Query(filters={}, agg="count"),
+              Query(filters={"a": Eq(int(kc["a"][0]))}, agg="sum", value_col="m"),
+              Query(filters={"a": Range(top - 6, top - 2)}, agg="count")]
+        dev = table_scan_device_many(t, qs)
+        for q, (dev_val, dev_cnt) in zip(qs, dev):
+            res = t.execute(q)
+            assert dev_cnt == res.rows_matched
+            np.testing.assert_allclose(dev_val, res.value, rtol=1e-4, atol=1e-3)
+
+    def test_too_wide_column_rejected_by_name(self, rng):
+        """> 60 bits exceeds the two-lane budget: the error names the
+        offending column so schema owners know what to shrink."""
+        from repro.core import KeySchema
+
+        schema = KeySchema({"ok": 2, "huge": 61})  # 63 bits total
+        kc = {"ok": rng.integers(0, 4, 50).astype(np.int64),
+              "huge": rng.integers(0, 2**61, 50).astype(np.int64)}
+        vc = {"m": rng.uniform(0, 1, 50)}
+        t = SortedTable.from_columns(kc, vc, ("ok", "huge"), schema)
         q = Query(filters={}, agg="count")
-        with pytest.raises(ValueError, match="30-bit"):
+        with pytest.raises(ValueError, match="'huge'"):
             table_scan_device(t, q)
-        with pytest.raises(ValueError, match="30-bit"):
+        with pytest.raises(ValueError, match="60-bit"):
             table_scan_device_many(t, [q])
+        with pytest.raises(ValueError, match="'huge'"):
+            t.place_on_device()
         # the numpy engine still serves the wide schema
-        assert t.execute_many([q])[0].rows_scanned == 100
+        assert t.execute_many([q])[0].rows_scanned == 50
+
+    @pytest.mark.parametrize("grid", ["rows_outer", "queries_outer"])
+    def test_table_scan_ref_fallback_both_grids(self, rng, grid):
+        """use_pallas=False must serve either grid via the shared oracle
+        (the queries_outer fallback used to crash on the resident keys'
+        padded sublanes)."""
+        kc = {"a": rng.integers(0, 16, 500)}
+        vc = {"m": rng.uniform(0, 1, 500)}
+        t = SortedTable.from_columns(kc, vc, ("a",))
+        qs = [Query(filters={"a": Eq(int(rng.integers(0, 16)))},
+                    agg="sum", value_col="m") for _ in range(4)]
+        got = table_scan_device_many(t, qs, use_pallas=False, grid=grid)
+        for q, (val, cnt) in zip(qs, got):
+            res = t.execute(q)
+            assert cnt == res.rows_matched
+            np.testing.assert_allclose(val, res.value, rtol=1e-5)
+
+    def test_row_count_cap_guards_float32_counts(self, rng, monkeypatch):
+        """Counts accumulate in a float32 lane (exact to 2**24): larger
+        tables must refuse device placement instead of silently rounding."""
+        from repro.kernels import ops
+
+        kc = {"a": rng.integers(0, 16, 100)}
+        vc = {"m": rng.uniform(0, 1, 100)}
+        t = SortedTable.from_columns(kc, vc, ("a",))
+        monkeypatch.setattr(ops, "MAX_DEVICE_ROWS", 64)
+        with pytest.raises(ValueError, match="float32 count"):
+            t.place_on_device()
+        with pytest.raises(ValueError, match="numpy engine"):
+            table_scan_device_many(t, [Query(filters={}, agg="count")])
+        # the numpy engine still serves it
+        assert t.execute(Query(filters={}, agg="count")).value == 100.0
+
+    def test_rowstream_matches_qgrid(self, rng):
+        """The row-streaming grid and the legacy queries-outer grid are
+        the same computation with different HBM traffic."""
+        keys = rng.integers(0, 32, (4, 3000)).astype(np.int32)
+        vals = rng.uniform(-1, 1, 3000).astype(np.float32)
+        lo = rng.integers(0, 16, (9, 4)).astype(np.int32)
+        hi = (lo + rng.integers(1, 16, (9, 4))).astype(np.int32)
+        slabs = np.sort(rng.integers(0, 3001, (9, 2)), axis=1).astype(np.int32)
+        new = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, block_n=512))
+        old = np.asarray(
+            scan_agg_batched(keys, vals, lo, hi, slabs, block_n=512, grid="queries_outer")
+        )
+        np.testing.assert_allclose(new, old, rtol=1e-5, atol=1e-3)
+
+    def test_value_selector_vs_ref(self, rng):
+        """(V, N) value tiles with a per-query row selector."""
+        keys = rng.integers(0, 16, (2, 2000)).astype(np.int32)
+        vals = rng.uniform(-1, 1, (3, 2000)).astype(np.float32)
+        lo = rng.integers(0, 8, (7, 2)).astype(np.int32)
+        hi = (lo + rng.integers(1, 8, (7, 2))).astype(np.int32)
+        slabs = np.sort(rng.integers(0, 2001, (7, 2)), axis=1).astype(np.int32)
+        sel = rng.integers(0, 3, 7).astype(np.int32)
+        got = np.asarray(scan_agg_batched(keys, vals, lo, hi, slabs, sel, block_n=256))
+        want = np.asarray(
+            scan_agg_batched_ref(
+                jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(lo),
+                jnp.asarray(hi), jnp.asarray(slabs), jnp.asarray(sel),
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    def test_batch_chunking_matches_single_launch(self, rng):
+        """Batches beyond max_q are chunked; results are unchanged."""
+        from repro.kernels.scan_agg import scan_agg_batched_pallas
+
+        keys = rng.integers(0, 16, (2, 1000)).astype(np.int32)
+        vals = rng.uniform(0, 1, 1000).astype(np.float32)
+        lo = rng.integers(0, 8, (21, 2)).astype(np.int32)
+        hi = (lo + rng.integers(1, 8, (21, 2))).astype(np.int32)
+        slabs = np.sort(rng.integers(0, 1001, (21, 2)), axis=1).astype(np.int32)
+        whole = np.asarray(scan_agg_batched_pallas(keys, vals, lo, hi, slabs, block_n=256))
+        chunked = np.asarray(
+            scan_agg_batched_pallas(keys, vals, lo, hi, slabs, block_n=256, max_q=8)
+        )
+        np.testing.assert_allclose(whole, chunked, rtol=1e-6)
 
 
 class TestEcdfHist:
