@@ -14,14 +14,22 @@ def record(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
-def time_fn(fn, *args, repeats: int = 3, **kwargs) -> tuple[float, object]:
-    """Median wall seconds + last result."""
+def time_fn(
+    fn, *args, repeats: int = 3, best: bool = False, **kwargs
+) -> tuple[float, object]:
+    """Median wall seconds (or best-of-N with ``best=True``) + last result.
+
+    ``best=True`` is for the CI regression gate: at smoke scale a single
+    call is sub-millisecond, and the *minimum* over N repeats is far less
+    sensitive to scheduler jitter than the median, which is what lets the
+    gate hold a 30% tolerance on a shared machine.
+    """
     ts, out = [], None
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args, **kwargs)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)), out
+    return float(min(ts) if best else np.median(ts)), out
 
 
 def flush_csv(path: str | None = None) -> None:

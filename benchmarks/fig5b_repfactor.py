@@ -20,7 +20,9 @@ def run(n_rows: int = 300_000, n_keys: int = 3, rfs=(1, 2, 3, 4, 5),
     wl = random_workload(rng, schema, list(kc), n_queries, value_col="metric")
     out = {}
     for rf in rfs:
-        eng = HREngine(n_nodes=max(6, rf))
+        # no result cache: duplicate workload queries must pay the scan,
+        # or the paper's latency figures deflate
+        eng = HREngine(n_nodes=max(6, rf), result_cache=False)
         eng.create_column_family("tr", kc, vc, replication_factor=rf,
                                  mechanism="TR", workload=wl, schema=schema)
         eng.create_column_family("hr", kc, vc, replication_factor=rf,

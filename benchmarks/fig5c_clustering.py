@@ -21,7 +21,9 @@ def run(n_rows: int = 300_000, key_counts=(2, 3, 4, 5, 6), rf: int = 3,
         kc, vc, schema = generate_simulation(n_rows, nk, seed=seed + nk)
         rng = np.random.default_rng(seed + 100 + nk)
         wl = random_workload(rng, schema, list(kc), n_queries, value_col="metric")
-        eng = HREngine(n_nodes=6)
+        # no result cache: duplicate workload queries must pay the scan,
+        # or the paper's latency figures deflate
+        eng = HREngine(n_nodes=6, result_cache=False)
         eng.create_column_family("tr", kc, vc, replication_factor=rf,
                                  mechanism="TR", workload=wl, schema=schema)
         eng.create_column_family("hr", kc, vc, replication_factor=rf,

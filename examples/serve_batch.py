@@ -48,7 +48,9 @@ def run_hr(args) -> None:
     print(f"HR batched read demo: {n_rows} orders rows, batch={args.batch}")
     kc, vc = generate_orders(1.0, seed=0, rows_per_sf=n_rows)
     wl = q1_q2_workload(args.batch, seed=1, n_rows=n_rows)
-    eng = HREngine(n_nodes=6)
+    # no result cache: the demo times the scheduling+scan paths, and the
+    # sequential loop would otherwise pre-warm the batch's cache entries
+    eng = HREngine(n_nodes=6, result_cache=False)
     eng.create_column_family(
         "orders", kc, vc, replication_factor=3, mechanism="HR", workload=wl,
         schema=orders_schema(), hrca_kwargs={"k_max": 2500, "seed": 0},

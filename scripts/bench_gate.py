@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Benchmark regression gate (invoked by scripts/ci.sh).
+
+Compares the queries/sec numbers of a fresh ``benchmarks.run --smoke
+--json`` pass against the committed baseline — the ``smoke_baseline``
+section of ``BENCH_batched_read.json`` — and fails (exit 1) when any
+engine regresses by more than ``--tol`` (default 0.30 per the PR 3
+gate; override with ``--tol`` or the ``BENCH_GATE_TOL`` env var, e.g.
+on noisy shared machines).
+
+    python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json
+    python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json --update
+
+``--update`` records the smoke run's numbers as the new baseline
+instead of gating (run it on the reference machine after a deliberate
+perf change).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def flatten_qps(d: dict, prefix: str = "") -> dict[str, float]:
+    """Flat {'64/hr_batch_qps': v, 'device/16/fused_qps': v, ...} from
+    the nested benchmark result; only *_qps / *_rows_per_sec leaves are
+    gated (ratios and row counts are descriptive)."""
+    out: dict[str, float] = {}
+    for k, v in d.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_qps(v, key))
+        elif isinstance(v, (int, float)) and (
+            str(k).endswith("_qps") or str(k).endswith("_rows_per_sec")
+        ):
+            out[key] = float(v)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("smoke_json", help="output of benchmarks.run --smoke --json")
+    ap.add_argument("baseline_json", help="committed BENCH_batched_read.json")
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=float(os.environ.get("BENCH_GATE_TOL", 0.30)),
+        help="max allowed fractional regression (default 0.30)",
+    )
+    ap.add_argument(
+        "--update", action="store_true",
+        help="write the smoke numbers into the baseline instead of gating",
+    )
+    args = ap.parse_args()
+
+    with open(args.smoke_json) as f:
+        smoke = json.load(f)
+    # gate the batched-read queries/sec only: the write_queue numbers at
+    # smoke scale are dominated by fixed thread/merge overheads and would
+    # make the gate flaky without adding signal
+    flat = flatten_qps(smoke.get("batched", {}), "batched")
+
+    baseline_doc = {}
+    if os.path.exists(args.baseline_json):
+        with open(args.baseline_json) as f:
+            baseline_doc = json.load(f)
+
+    if args.update:
+        baseline_doc["smoke_baseline"] = flat
+        with open(args.baseline_json, "w") as f:
+            json.dump(baseline_doc, f, indent=1)
+            f.write("\n")
+        print(f"[bench-gate] baseline updated: {len(flat)} throughput keys")
+        return 0
+
+    baseline = baseline_doc.get("smoke_baseline")
+    if not baseline:
+        print(
+            "[bench-gate] no smoke_baseline committed in "
+            f"{args.baseline_json}; run with --update to record one"
+        )
+        return 0
+
+    failures, checked, skipped = [], 0, 0
+    for key, base in sorted(baseline.items()):
+        if key not in flat:
+            skipped += 1
+            continue
+        checked += 1
+        if flat[key] < base * (1.0 - args.tol):
+            failures.append(
+                f"  {key}: {flat[key]:,.0f} < baseline {base:,.0f} "
+                f"(-{(1.0 - flat[key] / base) * 100.0:.0f}% > {args.tol * 100:.0f}%)"
+            )
+    print(
+        f"[bench-gate] {checked} throughput keys checked against baseline "
+        f"(tol {args.tol * 100:.0f}%), {skipped} baseline keys absent from this run"
+    )
+    if failures:
+        print("[bench-gate] REGRESSIONS:")
+        print("\n".join(failures))
+        return 1
+    print("[bench-gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

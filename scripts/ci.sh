@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # Pre-merge gate: tier-1 tests + a toy-scale pass over every registered
-# benchmark (catches import/shape breakage in paths the unit tests stub).
+# benchmark (catches import/shape breakage in paths the unit tests stub)
+# + the benchmark regression gate (smoke queries/sec vs the committed
+# BENCH_batched_read.json smoke_baseline; >30% drop fails — tune with
+# BENCH_GATE_TOL on noisy machines).
 #
 #   scripts/ci.sh              # full gate
 #   scripts/ci.sh -m kernel    # extra pytest args pass through
@@ -9,4 +12,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q "$@"
-python -m benchmarks.run --smoke
+
+smoke_json="$(mktemp)"
+trap 'rm -f "$smoke_json"' EXIT
+python -m benchmarks.run --smoke --json "$smoke_json"
+python scripts/bench_gate.py "$smoke_json" BENCH_batched_read.json

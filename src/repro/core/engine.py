@@ -37,15 +37,23 @@ sequential semantics exactly:
   with one ``SortedTable.execute_many`` (single vectorized searchsorted
   over packed slab bounds); per-query results/rows_scanned are identical
   to ``execute``. Group wall time is attributed evenly across the
-  group's queries (× node slowdown). For a *device-resident* column
-  family (``create_column_family(device_resident=True)``) each group is
-  answered by one row-streaming Pallas launch
-  (``repro.kernels.table_scan_device_many``): the replica's columns
-  stream through VMEM once per group regardless of group size, and
-  mixed sum/count groups share the launch. The scalar ``read`` path
-  routes through the same kernel at Q = 1, so batched and sequential
-  results stay identical; numpy remains the reference engine and the
-  fallback for host tables and non-sum/count aggregations.
+  group's executed queries (× node slowdown). For a *device-resident*
+  column family (``create_column_family(device_resident=True)``) each
+  group is answered by one FUSED locate+scan Pallas launch
+  (``repro.kernels.table_execute_device_many``): slab location happens
+  inside the scan predicate (zero host ``searchsorted`` calls, no host
+  sync between locate and scan), the replica's columns stream through
+  VMEM once per group regardless of group size, and mixed
+  sum/count/select groups share the launch ("select" row indices come
+  from a second prefix-sum compaction launch sized by the first's
+  int32 match counts). The scalar ``read`` path routes through the
+  same kernel at Q = 1, so batched and sequential results stay
+  identical; numpy remains the reference engine and the path for host
+  tables.
+* **Result cache**: each replica keeps a ``(packed slab bounds, agg,
+  value col, filters) → ScanResult`` cache shared by both paths,
+  invalidated by ``write``/``fail_node``/``recover_node``; hit/miss
+  counters live on ``HREngine.stats``.
 * **Hedging**: with ``hedge=True``, queries whose chosen node is a
   straggler (slowdown > ``hedge_ratio``) are duplicated — grouped per
   alternate replica (the next-cheapest on a *different* node, as in
@@ -58,6 +66,7 @@ import dataclasses
 import itertools
 import time
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -143,13 +152,113 @@ def _tie_threshold(best_cost: float) -> float:
 
 
 class HREngine:
-    """Simulated-cluster HR engine (Request Agency facade)."""
+    """Simulated-cluster HR engine (Request Agency facade).
 
-    def __init__(self, n_nodes: int = 6) -> None:
+    ``result_cache`` (default on) keeps a per-replica map
+    ``(agg, value col, filter signature) → ScanResult`` fed by both
+    ``read`` and ``read_many``. The packed slab bounds are a pure
+    function of (filters, layout, schema) and each replica has its own
+    map, so the filter signature alone identifies the slab — keying on
+    it avoids re-running the ``slab_bounds_many`` walk just to build
+    keys. Writes and node recovery invalidate the affected replicas'
+    entries, each per-replica map is bounded in entries
+    (``result_cache_max_entries``, FIFO eviction) and in retained
+    select-index bytes, and hit/miss counters are exposed on
+    :attr:`stats`.
+    """
+
+    def __init__(
+        self,
+        n_nodes: int = 6,
+        *,
+        result_cache: bool = True,
+        result_cache_max_entries: int = 4096,
+        parallel_writes: bool = False,
+    ) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
+        if result_cache and result_cache_max_entries < 1:
+            raise ValueError(
+                "result_cache_max_entries must be >= 1; pass "
+                "result_cache=False to disable caching"
+            )
         self.nodes = [Node(node_id=i) for i in range(n_nodes)]
         self.column_families: dict[str, ColumnFamily] = {}
+        self._cache_enabled = result_cache
+        self._cache_max = result_cache_max_entries
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._result_cache: dict[tuple[str, int], dict] = {}
+        # running total of selected-array bytes per replica map, so the
+        # byte budget doesn't rescan the map on every store
+        self._cache_sel_bytes: dict[tuple[str, int], int] = {}
+        self.parallel_writes = parallel_writes
+
+    # -- result cache --------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """Operational counters (per-replica read result cache)."""
+        return {
+            "result_cache_hits": self._cache_hits,
+            "result_cache_misses": self._cache_misses,
+            "result_cache_entries": sum(
+                len(c) for c in self._result_cache.values()
+            ),
+            "result_cache_select_bytes": sum(self._cache_sel_bytes.values()),
+        }
+
+    @staticmethod
+    def _cache_keys(queries: list[Query]) -> list:
+        """One key per query: aggregation + value column + filter
+        signature. The cache is per-replica, so layout (and with it the
+        packed slab bounds, a pure function of the filters) is implicit
+        — no bounds walk on the hot path just to build keys."""
+        return [
+            (q.agg, q.value_col, tuple(sorted(q.filters.items())))
+            for q in queries
+        ]
+
+    # a select's cached index array may be arbitrarily large; entries
+    # past the per-entry byte size are served but never cached, and each
+    # replica map evicts FIFO until its retained selected-array bytes
+    # fit the map budget — so worst-case memory is bounded per replica
+    # by min(max_entries × entry cap, map budget), not by table size
+    _CACHE_MAX_SELECT_BYTES = 1 << 20
+    _CACHE_MAX_MAP_BYTES = 64 << 20
+
+    def _cache_store(self, map_key, cache: dict, key, result: ScanResult) -> None:
+        """Cache hits hand out the same ScanResult object, so a select's
+        index array is frozen on the way in — a caller mutating it would
+        otherwise corrupt every later hit. Each per-replica map is
+        bounded in entries (``result_cache_max_entries``, FIFO) and in
+        selected-array bytes: workloads of all-distinct (select)
+        queries must not grow memory without bound."""
+        nb = 0 if result.selected is None else int(result.selected.nbytes)
+        if nb > self._CACHE_MAX_SELECT_BYTES:
+            return
+        if result.selected is not None:
+            result.selected.setflags(write=False)
+        total = self._cache_sel_bytes.get(map_key, 0)
+        old = cache.pop(key, None)
+        if old is not None and old.selected is not None:
+            total -= old.selected.nbytes
+        while cache and (
+            len(cache) >= self._cache_max
+            or total + nb > self._CACHE_MAX_MAP_BYTES
+        ):
+            evicted = cache.pop(next(iter(cache)))
+            if evicted.selected is not None:
+                total -= evicted.selected.nbytes
+        cache[key] = result
+        self._cache_sel_bytes[map_key] = total + nb
+
+    def _invalidate_result_cache(self, cf_name: str, node_id: int | None = None) -> None:
+        cf = self.column_families[cf_name]
+        for r in cf.replicas:
+            if node_id is None or r.node_id == node_id:
+                self._result_cache.pop((cf_name, r.replica_id), None)
+                self._cache_sel_bytes.pop((cf_name, r.replica_id), None)
 
     # -- Replica Generator ---------------------------------------------------
 
@@ -190,10 +299,12 @@ class HREngine:
         Explicit ``layouts`` override both (tests / ablations).
 
         With ``device_resident=True`` every replica table is placed on
-        device at creation (and re-placed after writes/recovery):
-        ``read``/``read_many`` then answer sum/count queries with the
-        batched Pallas scan instead of the numpy engine. Raises if the
-        schema exceeds the device path's per-column two-lane budget.
+        device at creation: ``read``/``read_many`` then answer sum,
+        count and select queries with the fused locate+scan Pallas
+        launch instead of the numpy engine, writes *append* to the
+        resident arrays (incremental placement — no re-upload), and
+        recovery re-places rebuilt tables. Raises if the schema exceeds
+        the device path's per-column two-lane budget.
         """
         if name in self.column_families:
             raise ValueError(f"column family {name!r} exists")
@@ -282,8 +393,19 @@ class HREngine:
     ) -> tuple[ScanResult, ReadReport]:
         est_cost, est_rows, r = entry
         table = self._table(cf, r)
+        cache = ckey = None
+        if self._cache_enabled:
+            cache = self._result_cache.setdefault((cf.name, r.replica_id), {})
+            (ckey,) = self._cache_keys([query])
         t0 = time.perf_counter()
-        result = table.execute(query)
+        if cache is not None and ckey in cache:
+            result = cache[ckey]
+            self._cache_hits += 1
+        else:
+            result = table.execute(query)
+            if cache is not None:
+                self._cache_store((cf.name, r.replica_id), cache, ckey, result)
+                self._cache_misses += 1
         wall = (time.perf_counter() - t0) * self.nodes[r.node_id].slowdown
         report = ReadReport(
             replica_id=r.replica_id,
@@ -424,17 +546,41 @@ class HREngine:
         *,
         hedged: bool,
     ) -> None:
-        """Run one replica's query group via ``execute_many``; group wall
-        time (× node slowdown) is split evenly across the group. Hedged
-        runs only replace a query's primary result when faster."""
+        """Run one replica's query group via ``execute_many``; measured
+        wall time (× node slowdown) is split evenly across the queries
+        that actually executed — result-cache hits are served at zero
+        attributed wall. Hedged runs only replace a query's primary
+        result when faster."""
         table = self._table(cf, r)
+        group = [queries[i] for i in qidx]
+        cache = ckeys = None
+        if self._cache_enabled:
+            cache = self._result_cache.setdefault((cf.name, r.replica_id), {})
+            ckeys = self._cache_keys(group)
+        hit_j = set() if cache is None else {j for j, k in enumerate(ckeys) if k in cache}
+        miss_j = [j for j in range(len(group)) if j not in hit_j]
         t0 = time.perf_counter()
-        scans = table.execute_many([queries[i] for i in qidx])
+        miss_scans = table.execute_many([group[j] for j in miss_j]) if miss_j else []
         wall = (time.perf_counter() - t0) * self.nodes[r.node_id].slowdown
-        per_q_wall = wall / len(qidx)
-        for i, sr in zip(qidx, scans):
+        per_q_wall = wall / len(miss_j) if miss_j else 0.0
+        scans: list[ScanResult | None] = [None] * len(group)
+        walls = [0.0] * len(group)
+        # read the hits out BEFORE storing misses: a store can FIFO-evict
+        # a key that was a hit when hit_j was computed
+        for j in hit_j:
+            scans[j] = cache[ckeys[j]]
+        for j, sr in zip(miss_j, miss_scans):
+            scans[j] = sr
+            walls[j] = per_q_wall
+            if cache is not None:
+                self._cache_store((cf.name, r.replica_id), cache, ckeys[j], sr)
+        if cache is not None:
+            self._cache_hits += len(hit_j)
+            self._cache_misses += len(miss_j)
+        for j, i in enumerate(qidx):
+            sr = scans[j]
             if hedged and not (
-                reports[i] is None or per_q_wall < reports[i].wall_seconds
+                reports[i] is None or walls[j] < reports[i].wall_seconds
             ):
                 continue
             results[i] = sr
@@ -443,7 +589,7 @@ class HREngine:
                 node_id=r.node_id,
                 estimated_rows=float(est_rows[i]),
                 estimated_cost=float(est_costs[i]),
-                wall_seconds=per_q_wall,
+                wall_seconds=walls[j],
                 rows_scanned=sr.rows_scanned,
                 hedged=hedged,
             )
@@ -455,23 +601,51 @@ class HREngine:
         cf_name: str,
         key_cols: Mapping[str, np.ndarray],
         value_cols: Mapping[str, np.ndarray],
+        *,
+        parallel: bool | None = None,
     ) -> float:
         """Fan a batch write to all replicas (each sorts by its own layout
         through the merge path) and refresh stats. Returns wall seconds.
         Matches §5.3: per-replica cost is one sort regardless of layout.
+
+        The per-replica merge sorts are independent (every replica sorts
+        its own copy), and ``parallel=True`` (default: the engine's
+        ``parallel_writes`` flag) overlaps them on a thread pool.
+        Measured caveat, recorded by ``benchmarks/write_queue.py``: on
+        CPython the merge path is dominated by ``np.argsort``/
+        ``np.insert``, which hold the GIL (only ``np.sort`` releases
+        it), so thread overlap is roughly break-even at large batches
+        and a loss at small ones — hence opt-in. *Group commit* (queue
+        pending batches, write them as one merged batch) is the
+        amortization that actually pays, and the same benchmark gates
+        it.
+
+        On a device-resident column family each merge *appends* its run
+        to the replica's resident arrays (``merge_insert`` is
+        placement-incremental); nothing is re-uploaded. Cached read
+        results for the column family are invalidated first.
         """
         cf = self.column_families[cf_name]
+        self._invalidate_result_cache(cf_name)
+        if parallel is None:
+            parallel = self.parallel_writes
         t0 = time.perf_counter()
-        for r in cf.replicas:
-            node = self.nodes[r.node_id]
-            if not node.alive:
-                continue  # missed writes are repaired by Recovery
-            merged = node.tables[(cf.name, r.replica_id)].merge_insert(
-                key_cols, value_cols
-            )
-            if cf.device_resident:
+        # missed writes on dead nodes are repaired by Recovery
+        live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
+
+        def _merge(r: ReplicaHandle) -> tuple[ReplicaHandle, SortedTable]:
+            table = self.nodes[r.node_id].tables[(cf.name, r.replica_id)]
+            return r, table.merge_insert(key_cols, value_cols)
+
+        if parallel and len(live) > 1:
+            with ThreadPoolExecutor(max_workers=min(len(live), 8)) as pool:
+                merged_tables = list(pool.map(_merge, live))
+        else:
+            merged_tables = [_merge(r) for r in live]
+        for r, merged in merged_tables:
+            if cf.device_resident and not merged.device_resident:
                 merged.place_on_device()
-            node.tables[(cf.name, r.replica_id)] = merged
+            self.nodes[r.node_id].tables[(cf.name, r.replica_id)] = merged
         cf.stats.merge_rows(key_cols)
         return time.perf_counter() - t0
 
@@ -481,6 +655,8 @@ class HREngine:
         node = self.nodes[node_id]
         node.alive = False
         node.tables = {}  # disk lost
+        for cf_name in self.column_families:
+            self._invalidate_result_cache(cf_name, node_id=node_id)
 
     def recover_node(self, node_id: int) -> float:
         """Rebuild every replica the node hosted from a surviving replica
@@ -491,6 +667,8 @@ class HREngine:
         node = self.nodes[node_id]
         t0 = time.perf_counter()
         node.alive = True
+        for cf_name in self.column_families:
+            self._invalidate_result_cache(cf_name, node_id=node_id)
         for cf in self.column_families.values():
             for r in cf.replicas:
                 if r.node_id != node_id:

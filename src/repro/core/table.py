@@ -25,9 +25,13 @@ from .workload import Query
 __all__ = ["SortedTable", "ScanResult", "slab_bounds_for", "slab_bounds_many"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ScanResult:
-    """Result of executing a query on one replica's table."""
+    """Result of executing a query on one replica's table.
+
+    Frozen: the engine's result cache hands the same object to every
+    hit, so field mutation would corrupt later reads (the ``selected``
+    array's *buffer* is additionally write-protected when cached)."""
 
     value: float  # aggregate value ("select" reports match count here too)
     rows_scanned: int  # slab size — rows streamed from storage (paper Row())
@@ -67,18 +71,19 @@ def slab_bounds_for(
     return lo, hi
 
 
-def slab_bounds_many(
+def _slab_col_bounds(
     queries: Sequence[Query], layout: Sequence[str], schema: KeySchema
-) -> np.ndarray:
-    """Packed-key [lo, hi] slab bounds for a query batch: int64[Q, 2].
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-column slab bounds for a query batch: ``(los, his, nonempty)``
+    with ``los``/``his`` int64[Q, K] (his *inclusive*) and ``nonempty``
+    a bool[Q] mask of queries whose filter ranges are all non-degenerate.
 
-    Same walk as :func:`slab_bounds_for` but with the per-column bounds
-    gathered into ``int64[Q, K]`` arrays and packed with one vectorized
-    shift-or per column. Unlike the scalar function the upper bound is
-    returned *inclusive* — a 63-bit schema packs its maximum key to
-    ``2**63 − 1``, and the scalar ``+ 1`` would wrap int64 (``slab_many``
-    compensates with ``side="right"``, an exact equivalent). Queries
-    with a degenerate (empty) filter range get ``lo = 0, hi = −1``.
+    This is the layout walk shared by :func:`slab_bounds_many` (which
+    packs the columns into composite keys for the host searchsorted) and
+    the device locate path (which ships them as int32 key lanes to the
+    Pallas kernels — ``repro.kernels``). Validation is deferred and
+    masked exactly like the scalar walk: only nonempty queries may raise
+    on out-of-domain bounds.
     """
     schema.check_layout(layout)
     n_q, n_k = len(queries), len(layout)
@@ -120,6 +125,25 @@ def slab_bounds_many(
             raise ValueError(
                 f"query {int(np.argmax(bad))} bounds out of range for column {col!r}"
             )
+    return los, his, nonempty
+
+
+def slab_bounds_many(
+    queries: Sequence[Query], layout: Sequence[str], schema: KeySchema
+) -> np.ndarray:
+    """Packed-key [lo, hi] slab bounds for a query batch: int64[Q, 2].
+
+    Same walk as :func:`slab_bounds_for` but with the per-column bounds
+    gathered into ``int64[Q, K]`` arrays (:func:`_slab_col_bounds`) and
+    packed with one vectorized shift-or per column. Unlike the scalar
+    function the upper bound is returned *inclusive* — a 63-bit schema
+    packs its maximum key to ``2**63 − 1``, and the scalar ``+ 1`` would
+    wrap int64 (``slab_many`` compensates with ``side="right"``, an
+    exact equivalent). Queries with a degenerate (empty) filter range
+    get ``lo = 0, hi = −1``.
+    """
+    los, his, nonempty = _slab_col_bounds(queries, layout, schema)
+    n_q = len(queries)
     # MSB-first packing, same field shifts as keys.pack_tuple
     sh = np.asarray(_field_shifts(schema, layout), dtype=np.int64)
     out = np.empty((n_q, 2), dtype=np.int64)
@@ -176,17 +200,27 @@ class SortedTable:
 
     # -- device residency ----------------------------------------------------
 
-    def place_on_device(self) -> "SortedTable":
+    def place_on_device(self, *, rebuild: bool = False) -> "SortedTable":
         """Materialize the columns as device-resident jax arrays (int32
         key lanes — wide columns split into two — plus float32 value
-        rows). Afterwards ``execute``/``execute_many`` route sum/count
-        queries through the batched Pallas scan; other aggregations keep
-        the numpy path. Raises ``ValueError`` naming the offending column
+        rows). Afterwards ``execute``/``execute_many`` answer sum, count
+        AND select queries entirely on device (fused locate+scan, plus
+        index compaction for selects) and ``slab_many`` locates slabs
+        with the Pallas binary-search kernel instead of host
+        searchsorted. Raises ``ValueError`` naming the offending column
         if a key column exceeds the device path's two-lane 60-bit budget.
-        Returns ``self`` for chaining."""
+
+        Placement is *incremental*: ``merge_insert`` appends each merged
+        write run to the already-resident arrays, so a resident table is
+        NOT re-uploaded after writes. Calling ``place_on_device()`` on a
+        table that is already resident is a no-op; pass ``rebuild=True``
+        to force a fresh, fully-sorted re-upload (collapses appended
+        runs and restores device row order == host row order). Returns
+        ``self`` for chaining."""
         from repro.kernels import build_device_state
 
-        self._device = build_device_state(self)
+        if self._device is None or rebuild:
+            self._device = build_device_state(self)
         return self
 
     def evict_from_device(self) -> None:
@@ -198,12 +232,14 @@ class SortedTable:
         return self._device is not None
 
     def _device_eligible(self, query: Query) -> bool:
-        """Queries the device path answers: sum/count aggregations (a
-        "select" needs row indices, which the kernel does not emit) over
-        a known value column."""
+        """Queries the device path answers end-to-end: sum/count
+        aggregations and "select" row emission (fused locate+scan plus
+        prefix-sum index compaction). Sums need their value column
+        resident; unknown aggregations keep the numpy path (which
+        raises, same as a host table)."""
         return (
             self._device is not None
-            and query.agg in ("sum", "count")
+            and query.agg in ("sum", "count", "select")
             and (query.agg != "sum" or query.value_col in self.value_cols)
         )
 
@@ -217,6 +253,14 @@ class SortedTable:
         The per-replica sort order is this table's own layout, mirroring
         Cassandra's per-replica LSM write path: HR costs the same writes
         as TR because every replica sorts exactly one copy (Table 1).
+
+        If this table is device-resident, the merged run is *appended*
+        to the resident arrays (``repro.kernels.device_state_append``)
+        instead of re-uploading the whole table: the returned table is
+        immediately resident, with a ``row_map`` translating device row
+        order (base rows then appended runs) back to the merged host
+        order for "select". ``place_on_device(rebuild=True)`` collapses
+        the runs back into one sorted upload.
         """
         new_packed = pack_columns(key_cols, self.layout, self.schema)
         order = np.argsort(new_packed, kind="stable")
@@ -224,15 +268,18 @@ class SortedTable:
         # merge positions of the new run into the existing run
         pos = np.searchsorted(self.packed, new_packed, side="left")
         merged_packed = np.insert(self.packed, pos, new_packed)
-        kc = {
-            c: np.insert(self.key_cols[c], pos, np.asarray(key_cols[c])[order].astype(np.int64))
-            for c in self.key_cols
+        run_kc = {
+            c: np.asarray(key_cols[c])[order].astype(np.int64) for c in self.key_cols
         }
-        vc = {
-            c: np.insert(self.value_cols[c], pos, np.asarray(value_cols[c])[order])
-            for c in self.value_cols
-        }
-        return SortedTable(self.layout, self.schema, kc, vc, merged_packed)
+        run_vc = {c: np.asarray(value_cols[c])[order] for c in self.value_cols}
+        kc = {c: np.insert(self.key_cols[c], pos, run_kc[c]) for c in self.key_cols}
+        vc = {c: np.insert(self.value_cols[c], pos, run_vc[c]) for c in self.value_cols}
+        merged = SortedTable(self.layout, self.schema, kc, vc, merged_packed)
+        if self._device is not None:
+            from repro.kernels import device_state_append
+
+            merged._device = device_state_append(self._device, merged, run_kc, run_vc, pos)
+        return merged
 
     # -- reads ---------------------------------------------------------------
 
@@ -249,10 +296,20 @@ class SortedTable:
     def slab_many(self, queries: Sequence[Query]) -> np.ndarray:
         """Row index slabs ``int64[Q, 2]`` for a query batch.
 
-        One vectorized ``np.searchsorted`` over the packed bound array
-        replaces 2·Q per-query binary searches (the batched read path's
-        slab location step).
+        On a device-resident table holding a single sorted run, the
+        ranks come from the Pallas vectorized binary-search kernel
+        (``repro.kernels.table_slab_locate_many``) — no host
+        searchsorted. Otherwise (host tables, or resident arrays with
+        appended write runs, whose device row order is no longer
+        sorted) one vectorized ``np.searchsorted`` over the packed
+        bound array replaces 2·Q per-query binary searches; that numpy
+        path stays the oracle the kernel is property-tested against.
         """
+        queries = list(queries)
+        if queries and self._device is not None and self._device.get("n_runs", 1) == 1:
+            from repro.kernels import table_slab_locate_many
+
+            return table_slab_locate_many(self, queries)
         bounds = slab_bounds_many(queries, self.layout, self.schema)
         lo = np.searchsorted(self.packed, bounds[:, 0], side="left")
         # inclusive upper key + side="right" ≡ scalar (hi + 1, side="left")
@@ -263,54 +320,52 @@ class SortedTable:
     def execute(self, query: Query) -> ScanResult:
         """Stream the slab, apply residual predicates, aggregate.
 
-        Device-resident tables route eligible queries through the Pallas
-        scan (the Q = 1 case of the batched launch, so a scalar loop and
-        ``execute_many`` compute per-query results identically); numpy is
-        the reference engine and the fallback for host tables.
+        Device-resident tables answer eligible queries (sum, count,
+        select) with the fused locate+scan launch at Q = 1 — no host
+        searchsorted, no numpy scan — so a scalar loop and
+        ``execute_many`` compute per-query results identically; numpy is
+        the reference engine and the path for host tables.
         """
-        lo, hi = self.slab(query)
         if self._device_eligible(query):
-            from repro.kernels import table_scan_device_many
+            from repro.kernels import table_execute_device_many
 
-            ((value, count),) = table_scan_device_many(
-                self, [query], slabs=np.array([[lo, hi]], np.int64)
-            )
-            return ScanResult(value, hi - lo, int(count))
+            return table_execute_device_many(self, [query])[0]
+        lo, hi = self.slab(query)
         return self._scan_slab(query, lo, hi)
 
     def execute_many(self, queries: Sequence[Query]) -> list[ScanResult]:
-        """Batched ``execute``: locate all slabs with one vectorized
-        searchsorted (``slab_many``), then answer the batch.
+        """Batched ``execute``.
 
-        On a device-resident table every eligible query (sum/count) is
-        served by one ``repro.kernels.table_scan_device_many`` launch —
-        the row-streaming kernel scans the columns once for the whole
-        group, mixing aggregation kinds and value columns. Ineligible
-        queries (e.g. agg == "select") and host tables run the numpy
-        residual scan. Either way result ``i`` equals
-        ``execute(queries[i])``, which routes per query the same way.
+        On a device-resident table every eligible query (sum, count AND
+        select) is served by ``repro.kernels.table_execute_device_many``:
+        one fused locate+scan launch answers the whole group — slab
+        membership is decided against the packed slab key bounds inside
+        the scan predicate, so no host searchsorted runs and no host
+        sync separates locate from scan — plus one compaction launch
+        when the group contains selects with matches. Host tables (and
+        ineligible aggregations) locate slabs with one vectorized
+        searchsorted and run the numpy residual scan. Either way result
+        ``i`` equals ``execute(queries[i])``, which routes per query the
+        same way.
         """
         queries = list(queries)
         if not queries:
             return []
-        slabs = self.slab_many(queries)
         results: list[ScanResult | None] = [None] * len(queries)
         dev_idx = [i for i, q in enumerate(queries) if self._device_eligible(q)]
         if dev_idx:
-            from repro.kernels import table_scan_device_many
+            from repro.kernels import table_execute_device_many
 
-            out = table_scan_device_many(
-                self, [queries[i] for i in dev_idx], slabs=slabs[dev_idx]
-            )
-            for i, (value, count) in zip(dev_idx, out):
-                lo, hi = int(slabs[i, 0]), int(slabs[i, 1])
-                results[i] = ScanResult(value, hi - lo, int(count))
-        return [
-            r
-            if r is not None
-            else self._scan_slab(queries[i], int(slabs[i, 0]), int(slabs[i, 1]))
-            for i, r in enumerate(results)
-        ]
+            out = table_execute_device_many(self, [queries[i] for i in dev_idx])
+            for i, r in zip(dev_idx, out):
+                results[i] = r
+        host_idx = [i for i in range(len(queries)) if results[i] is None]
+        if host_idx:
+            sub = [queries[i] for i in host_idx]
+            slabs = self.slab_many(sub)
+            for j, i in enumerate(host_idx):
+                results[i] = self._scan_slab(sub[j], int(slabs[j, 0]), int(slabs[j, 1]))
+        return results  # type: ignore[return-value]
 
     def _scan_slab(self, query: Query, lo: int, hi: int) -> ScanResult:
         n = hi - lo

@@ -1,41 +1,70 @@
 """Pallas TPU kernels for the HR hot paths.
 
-scan_agg         — predicated slab scan + aggregate (the paper's query loop)
-scan_agg_batched — one row-streaming launch over a replica's
-                   device-resident columns: row blocks are the outer grid
-                   axis, per-query accumulators are revisited every step,
-                   mixed sum/count batches share multi-row value tiles
-                   (the ``read_many`` device path)
-ecdf_hist        — histogram/ECDF build for the Cost Evaluator
+scan_agg                — predicated slab scan + aggregate (the paper's
+                          query loop)
+scan_agg_batched        — row-streaming batched scan over host-located
+                          slabs (PR 2; kept as the benchmark baseline)
+slab_locate_batched     — vectorized (rank-form) binary search over the
+                          resident key lanes: the device replacement for
+                          host ``searchsorted`` slab location
+scan_agg_locate_batched — FUSED locate+scan: one launch returns per-query
+                          float32 aggregates plus int32 matched/slab-row
+                          counts (the ``read_many`` device path; int32
+                          counts lift the old 2**24-row cap)
+select_compact_batched  — device "select": block-local prefix-sum
+                          compaction of matched row indices
+ecdf_hist               — histogram/ECDF build for the Cost Evaluator
 
 Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
 jit'd public API with CPU interpret-mode fallback. ``build_device_state``
 materializes a SortedTable's device-resident arrays (wide key columns
-packed into two int32 lanes per ``device_key_plan``).
+packed into two int32 lanes per ``device_key_plan``) and
+``device_state_append`` extends them incrementally with merged write
+runs; ``table_execute_device_many`` serves whole sum/count/select query
+batches from those arrays with no host searchsorted and no numpy
+fallback.
 """
 
 from .ops import (
     build_device_state,
     device_key_plan,
+    device_state_append,
     ecdf_hist,
     ecdf_hist_ref,
     scan_agg,
     scan_agg_batched,
     scan_agg_batched_ref,
+    scan_agg_locate_batched,
+    scan_agg_locate_batched_ref,
     scan_agg_ref,
+    select_compact_batched,
+    select_compact_batched_ref,
+    slab_locate_batched,
+    slab_locate_batched_ref,
+    table_execute_device_many,
     table_scan_device,
     table_scan_device_many,
+    table_slab_locate_many,
 )
 
 __all__ = [
     "build_device_state",
     "device_key_plan",
+    "device_state_append",
     "ecdf_hist",
     "ecdf_hist_ref",
     "scan_agg",
     "scan_agg_batched",
     "scan_agg_batched_ref",
+    "scan_agg_locate_batched",
+    "scan_agg_locate_batched_ref",
     "scan_agg_ref",
+    "select_compact_batched",
+    "select_compact_batched_ref",
+    "slab_locate_batched",
+    "slab_locate_batched_ref",
+    "table_execute_device_many",
     "table_scan_device",
     "table_scan_device_many",
+    "table_slab_locate_many",
 ]

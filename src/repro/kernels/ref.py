@@ -5,7 +5,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["scan_agg_ref", "scan_agg_batched_ref", "ecdf_hist_ref"]
+__all__ = [
+    "scan_agg_ref",
+    "scan_agg_batched_ref",
+    "slab_locate_batched_ref",
+    "scan_agg_locate_batched_ref",
+    "select_compact_batched_ref",
+    "ecdf_hist_ref",
+]
 
 
 def scan_agg_ref(
@@ -71,6 +78,122 @@ def scan_agg_batched_ref(
     mask = ok.astype(jnp.float32)
     vq = values[value_sel]  # (Q, N) — each query's value row
     return jnp.stack([jnp.sum(vq * mask, axis=1), jnp.sum(mask, axis=1)], axis=1)
+
+
+def _lex_tuple_masks(keys, slab_lo, slab_hi, n_lanes):
+    """(Q, N) ``key >= slab_lo`` and ``key <= slab_hi`` masks, tuple-
+    lexicographic over the first ``n_lanes`` lanes (MSB lane first)."""
+    ge = le = None
+    for lane in reversed(range(n_lanes)):
+        k = keys[lane][None, :]  # (1, N)
+        bl = slab_lo[:, lane : lane + 1]
+        bh = slab_hi[:, lane : lane + 1]
+        ge = (k >= bl) if ge is None else (k > bl) | ((k == bl) & ge)
+        le = (k <= bh) if le is None else (k < bh) | ((k == bh) & le)
+    return ge, le
+
+
+def _residual_mask(keys, col_lo, col_hi, col_parts, base):
+    """(Q, N) residual predicate: per logical column, value in [lo, hi)
+    (wide columns compared lexicographically over their lane pair)."""
+    ok = base
+    lane = 0
+    for parts in col_parts:
+        if parts == 1:
+            k = keys[lane][None, :]
+            ok &= (k >= col_lo[:, lane : lane + 1]) & (k < col_hi[:, lane : lane + 1])
+        else:
+            kh = keys[lane][None, :]
+            kl = keys[lane + 1][None, :]
+            bh, bl = col_lo[:, lane : lane + 1], col_lo[:, lane + 1 : lane + 2]
+            ok &= (kh > bh) | ((kh == bh) & (kl >= bl))
+            bh, bl = col_hi[:, lane : lane + 1], col_hi[:, lane + 1 : lane + 2]
+            ok &= (kh < bh) | ((kh == bh) & (kl < bl))
+        lane += parts
+    return ok
+
+
+def _window_mask(limits, N):
+    ridx = jnp.arange(N, dtype=jnp.int32)
+    return (ridx[None, :] >= limits[:, 0:1]) & (ridx[None, :] < limits[:, 1:2])
+
+
+def slab_locate_batched_ref(
+    keys: jax.Array,  # int32[K_ex, N] — key lanes
+    slab_lo: jax.Array,  # int32[Q, K_ex] lower slab key (inclusive)
+    slab_hi: jax.Array,  # int32[Q, K_ex] upper slab key (INCLUSIVE)
+    limits: jax.Array,  # int32[Q, 2] row window
+    n_lanes: int | None = None,
+) -> jax.Array:
+    """int32[Q, 2] searchsorted ranks in rank (count) form: lane 0 is
+    the number of window rows strictly below the lower slab key, lane 1
+    the number at-or-below the upper slab key."""
+    K_ex, N = keys.shape
+    if n_lanes is None:
+        n_lanes = K_ex
+    valid = _window_mask(limits, N)
+    ge, le = _lex_tuple_masks(keys, slab_lo, slab_hi, n_lanes)
+    lo_idx = jnp.sum((valid & ~ge).astype(jnp.int32), axis=1)
+    hi_idx = jnp.sum((valid & le).astype(jnp.int32), axis=1)
+    return jnp.stack([lo_idx, hi_idx], axis=1)
+
+
+def scan_agg_locate_batched_ref(
+    keys: jax.Array,  # int32[K_ex, N]
+    values: jax.Array,  # float32[N] or float32[V, N]
+    res_lo: jax.Array,  # int32[Q, K_ex] residual bounds (inclusive)
+    res_hi: jax.Array,  # int32[Q, K_ex] residual bounds (EXCLUSIVE)
+    slab_lo: jax.Array,  # int32[Q, K_ex] slab key (inclusive)
+    slab_hi: jax.Array,  # int32[Q, K_ex] slab key (INCLUSIVE)
+    limits: jax.Array,  # int32[Q, 2] row window
+    value_sel: jax.Array | None = None,
+    col_parts: tuple[int, ...] | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused locate+scan kernel: ``(sum f32[Q], matched
+    i32[Q], slab_rows i32[Q])``."""
+    K_ex, N = keys.shape
+    Q = res_lo.shape[0]
+    values = values.astype(jnp.float32)
+    if values.ndim == 1:
+        values = values[None, :]
+    if value_sel is None:
+        value_sel = jnp.zeros(Q, jnp.int32)
+    if col_parts is None:
+        col_parts = (1,) * K_ex
+    valid = _window_mask(limits, N)
+    ge, le = _lex_tuple_masks(keys, slab_lo, slab_hi, sum(col_parts))
+    slab_ok = valid & ge & le
+    matched = _residual_mask(keys, res_lo, res_hi, col_parts, valid)
+    vq = values[value_sel]  # (Q, N)
+    return (
+        jnp.sum(vq * matched.astype(jnp.float32), axis=1),
+        jnp.sum(matched.astype(jnp.int32), axis=1),
+        jnp.sum(slab_ok.astype(jnp.int32), axis=1),
+    )
+
+
+def select_compact_batched_ref(
+    keys: jax.Array,  # int32[K_ex, N]
+    res_lo: jax.Array,  # int32[Q, K_ex]
+    res_hi: jax.Array,  # int32[Q, K_ex]
+    limits: jax.Array,  # int32[Q, 2]
+    *,
+    col_parts: tuple[int, ...] | None = None,
+    out_width: int = 128,
+) -> jax.Array:
+    """Oracle for the select compaction kernel: int32[Q, out_width] with
+    each query's matched row indices compacted to the front."""
+    K_ex, N = keys.shape
+    Q = res_lo.shape[0]
+    if col_parts is None:
+        col_parts = (1,) * K_ex
+    matched = _residual_mask(keys, res_lo, res_hi, col_parts, _window_mask(limits, N))
+    m = matched.astype(jnp.int32)
+    pos = jnp.minimum(jnp.cumsum(m, axis=1) - m, out_width - 1)
+    ridx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None, :], m.shape)
+    qidx = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None], m.shape)
+    out = jnp.zeros((Q, out_width), jnp.int32)
+    return out.at[qidx, pos].add(jnp.where(matched, ridx, 0))
 
 
 def ecdf_hist_ref(col: jax.Array, *, n_bins: int, bin_width: int) -> jax.Array:

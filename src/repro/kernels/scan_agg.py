@@ -10,11 +10,15 @@ aggregation is a masked reduction feeding per-query scalar accumulators.
 HBM→VMEM traffic is exactly rows × row_bytes, which is what Eq (1) of the
 paper counts — the kernel makes Row() the literal unit of memory cost.
 
-Row-streaming grid (the default batched form)
----------------------------------------------
+Row-streaming grid (the PR 2 batched form)
+------------------------------------------
 ``scan_agg_batched_pallas`` serves a whole query batch with one kernel
-launch over a replica's device-resident columns (the ``read_many``
-device path). Row blocks are the **outer** (and only) grid axis: each
+launch over a replica's device-resident columns, given host-located
+row slabs. (The engine's ``read_many`` device path now routes through
+the FUSED locate+scan variant in ``slab_locate.py``, which decides slab
+membership inside the predicate; this kernel is kept as the pre-fusion
+baseline and general slab-mask scan.) Row blocks are the **outer**
+(and only) grid axis: each
 key/value tile is fetched from HBM exactly once per batch and every
 query's accumulator is *revisited* at every row step — the accumulators
 live in a single (Q_pad, 128) output block whose index map is constant

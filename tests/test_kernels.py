@@ -241,21 +241,28 @@ class TestScanAggBatched:
             assert cnt == res.rows_matched
             np.testing.assert_allclose(val, res.value, rtol=1e-5)
 
-    def test_row_count_cap_guards_float32_counts(self, rng, monkeypatch):
-        """Counts accumulate in a float32 lane (exact to 2**24): larger
-        tables must refuse device placement instead of silently rounding."""
+    def test_row_count_cap_lifted_to_int32(self, rng, monkeypatch):
+        """Counts now accumulate in int32 lanes: the cap sits at the
+        int32 row-index budget (≫ the old float32 2**24), and beyond it
+        tables still refuse device placement with a precise error."""
         from repro.kernels import ops
 
+        assert ops.MAX_DEVICE_ROWS > (1 << 24)  # the old cap is lifted
         kc = {"a": rng.integers(0, 16, 100)}
         vc = {"m": rng.uniform(0, 1, 100)}
         t = SortedTable.from_columns(kc, vc, ("a",))
         monkeypatch.setattr(ops, "MAX_DEVICE_ROWS", 64)
-        with pytest.raises(ValueError, match="float32 count"):
+        with pytest.raises(ValueError, match="int32 row"):
             t.place_on_device()
         with pytest.raises(ValueError, match="numpy engine"):
             table_scan_device_many(t, [Query(filters={}, agg="count")])
+        # appends respect the cap too
+        monkeypatch.setattr(ops, "MAX_DEVICE_ROWS", 128)
+        t2 = t.place_on_device()
+        with pytest.raises(ValueError, match="int32 row"):
+            t2.merge_insert({"a": rng.integers(0, 16, 50)}, {"m": np.zeros(50)})
         # the numpy engine still serves it
-        assert t.execute(Query(filters={}, agg="count")).value == 100.0
+        assert t.execute_many([Query(filters={}, agg="count")])[0].value == 100.0
 
     def test_rowstream_matches_qgrid(self, rng):
         """The row-streaming grid and the legacy queries-outer grid are
@@ -302,6 +309,266 @@ class TestScanAggBatched:
             scan_agg_batched_pallas(keys, vals, lo, hi, slabs, block_n=256, max_q=8)
         )
         np.testing.assert_allclose(whole, chunked, rtol=1e-6)
+
+
+def _lane_split(v, parts):
+    """Split int64 column values into 1 or 2 int32 lanes (test helper
+    mirroring the device layout)."""
+    from repro.kernels.scan_agg import WIDE_LANE_BITS
+
+    v = np.asarray(v, np.int64)
+    if parts == 1:
+        return [v.astype(np.int32)]
+    mask = (1 << WIDE_LANE_BITS) - 1
+    return [(v >> WIDE_LANE_BITS).astype(np.int32), (v & mask).astype(np.int32)]
+
+
+class TestSlabLocate:
+    """slab_locate_batched vs the numpy searchsorted oracle."""
+
+    def _oracle(self, table, queries):
+        from repro.core.table import slab_bounds_many
+
+        bounds = slab_bounds_many(queries, table.layout, table.schema)
+        lo = np.searchsorted(table.packed, bounds[:, 0], side="left")
+        hi = np.searchsorted(table.packed, bounds[:, 1], side="right")
+        return np.stack([lo, hi], axis=1).astype(np.int64)
+
+    @pytest.mark.parametrize("bits", [(4, 4), (31, 8), (43, 20), (60, 3)])
+    def test_matches_searchsorted_random_schemas(self, rng, bits):
+        from repro.core import KeySchema
+        from repro.kernels import table_slab_locate_many
+
+        schema = KeySchema({"a": bits[0], "b": bits[1]})
+        n = 3000
+        kc = {c: rng.integers(0, min(schema.max_value(c) + 1, 2**20), n).astype(np.int64)
+              for c in ("a", "b")}
+        vc = {"m": rng.uniform(0, 1, n)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"), schema)
+        qs = []
+        for _ in range(12):
+            f = {}
+            if rng.random() < 0.7:
+                v = int(kc["a"][rng.integers(0, n)])
+                f["a"] = Eq(v) if rng.random() < 0.5 else Range(
+                    max(0, v - 5), min(schema.max_value("a") + 1, v + 5))
+            if rng.random() < 0.5:
+                lo = int(rng.integers(0, schema.max_value("b")))
+                f["b"] = Range(lo, lo + int(rng.integers(0, 4)))  # may be empty
+            qs.append(Query(filters=f))
+        dev = t.place_on_device()
+        np.testing.assert_array_equal(table_slab_locate_many(dev, qs), self._oracle(t, qs))
+        # ref oracle path agrees too
+        np.testing.assert_array_equal(
+            table_slab_locate_many(dev, qs, use_pallas=False), self._oracle(t, qs)
+        )
+
+    def test_bounds_at_table_edges(self, rng):
+        """Slabs clamped at row 0 / row N: bounds entirely below the
+        smallest key, above the largest, exact first/last key, full
+        table, and empty filter ranges."""
+        from repro.core import KeySchema
+        from repro.kernels import table_slab_locate_many
+
+        schema = KeySchema({"a": 10})
+        vals = np.sort(rng.integers(100, 900, 500)).astype(np.int64)
+        t = SortedTable.from_columns(
+            {"a": vals}, {"m": np.ones(500)}, ("a",), schema
+        ).place_on_device()
+        qs = [
+            Query(filters={"a": Range(0, 50)}),          # fully below
+            Query(filters={"a": Range(950, 1024)}),       # fully above
+            Query(filters={"a": Eq(int(vals[0]))}),       # first key
+            Query(filters={"a": Eq(int(vals[-1]))}),      # last key
+            Query(filters={}),                            # full table
+            Query(filters={"a": Range(7, 7)}),            # empty range
+        ]
+        got = table_slab_locate_many(t, qs)
+        np.testing.assert_array_equal(got, self._oracle(t, qs))
+        assert tuple(got[0]) == (0, 0)
+        assert tuple(got[4]) == (0, 500)
+        assert tuple(got[5]) == (0, 0)
+
+    def test_kernel_matches_ref_on_raw_lanes(self, rng):
+        """Kernel vs jnp oracle on synthetic sorted lane arrays (wide
+        two-lane column + narrow column), multiple row blocks."""
+        from repro.kernels import slab_locate_batched, slab_locate_batched_ref
+
+        n, q = 5000, 9
+        packed = np.sort(rng.integers(0, 2**40, n)).astype(np.int64)
+        narrow = rng.integers(0, 50, n).astype(np.int64)  # not part of order
+        keys = np.stack(_lane_split(packed, 2) + _lane_split(narrow, 1))
+        b_lo = rng.integers(0, 2**40, (q,)).astype(np.int64)
+        b_hi = b_lo + rng.integers(0, 2**39, (q,))
+        slab_lo = np.stack(_lane_split(b_lo, 2) + [np.zeros(q, np.int32)], axis=1)
+        slab_hi = np.stack(_lane_split(b_hi, 2) + [np.full(q, 49, np.int32)], axis=1)
+        limits = np.tile(np.array([[0, n]], np.int64), (q, 1))
+        got = np.asarray(
+            slab_locate_batched(keys, slab_lo, slab_hi, limits, block_n=512)
+        )
+        want = np.asarray(
+            slab_locate_batched_ref(
+                jnp.asarray(keys), jnp.asarray(slab_lo), jnp.asarray(slab_hi),
+                jnp.asarray(limits, jnp.int32),
+            )
+        )
+        np.testing.assert_array_equal(got, want)
+
+    def test_requires_single_sorted_run(self, rng):
+        from repro.kernels import table_slab_locate_many
+
+        kc = {"a": rng.integers(0, 16, 300)}
+        t = SortedTable.from_columns(kc, {"m": np.ones(300)}, ("a",)).place_on_device()
+        merged = t.merge_insert({"a": np.array([3])}, {"m": np.array([1.0])})
+        with pytest.raises(ValueError, match="single sorted run"):
+            table_slab_locate_many(merged, [Query(filters={})])
+        host = SortedTable.from_columns(kc, {"m": np.ones(300)}, ("a",))
+        with pytest.raises(ValueError, match="device-resident"):
+            table_slab_locate_many(host, [Query(filters={})])
+
+
+class TestFusedLocateScan:
+    """scan_agg_locate_batched (fused kernel) vs oracles and the engine."""
+
+    def test_kernel_matches_ref(self, rng):
+        from repro.kernels import scan_agg_locate_batched, scan_agg_locate_batched_ref
+
+        n, q, k = 4000, 11, 3
+        keys = np.sort(rng.integers(0, 64, (k, n)), axis=1).astype(np.int32)
+        vals = rng.uniform(-2, 2, (3, n)).astype(np.float32)
+        res_lo = rng.integers(0, 32, (q, k)).astype(np.int32)
+        res_hi = (res_lo + rng.integers(0, 32, (q, k))).astype(np.int32)
+        slab_lo = rng.integers(0, 32, (q, k)).astype(np.int32)
+        slab_hi = (slab_lo + rng.integers(0, 32, (q, k))).astype(np.int32)
+        limits = np.tile(np.array([[0, n]], np.int32), (q, 1))
+        limits[2] = (0, 0)  # one dead query
+        sel = rng.integers(0, 3, q).astype(np.int32)
+        got = scan_agg_locate_batched(
+            keys, vals, res_lo, res_hi, slab_lo, slab_hi, limits, sel, block_n=512
+        )
+        want = scan_agg_locate_batched_ref(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(res_lo),
+            jnp.asarray(res_hi), jnp.asarray(slab_lo), jnp.asarray(slab_hi),
+            jnp.asarray(limits), jnp.asarray(sel),
+        )
+        assert np.asarray(got[1]).dtype == np.int32  # exact int counts
+        assert np.asarray(got[2]).dtype == np.int32
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-5, atol=1e-3)
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+        np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+    def test_block_size_and_chunking_invariance(self, rng):
+        from repro.kernels import scan_agg_locate_batched
+        from repro.kernels.slab_locate import scan_agg_locate_batched as raw
+
+        n, q = 3000, 21
+        keys = np.sort(rng.integers(0, 16, (2, n)), axis=1).astype(np.int32)
+        vals = rng.uniform(0, 1, n).astype(np.float32)
+        res_lo = rng.integers(0, 8, (q, 2)).astype(np.int32)
+        res_hi = (res_lo + rng.integers(1, 8, (q, 2))).astype(np.int32)
+        limits = np.tile(np.array([[0, n]], np.int32), (q, 1))
+        a = raw(keys, vals, res_lo, res_hi, res_lo, res_hi, limits, block_n=128)
+        b = raw(keys, vals, res_lo, res_hi, res_lo, res_hi, limits, block_n=1024)
+        c = raw(keys, vals, res_lo, res_hi, res_lo, res_hi, limits, block_n=128, max_q=8)
+        for x, y in ((a, b), (a, c)):
+            np.testing.assert_allclose(np.asarray(x[0]), np.asarray(y[0]), rtol=1e-6)
+            np.testing.assert_array_equal(np.asarray(x[1]), np.asarray(y[1]))
+            np.testing.assert_array_equal(np.asarray(x[2]), np.asarray(y[2]))
+
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    def test_table_execute_matches_numpy_engine(self, rng, use_pallas):
+        from repro.kernels import table_execute_device_many
+
+        kc = {"a": rng.integers(0, 30, 4000), "b": rng.integers(0, 30, 4000)}
+        vc = {"m": rng.uniform(0, 5, 4000), "w": rng.uniform(-2, 2, 4000)}
+        dev = SortedTable.from_columns(kc, vc, ("b", "a")).place_on_device()
+        host = SortedTable.from_columns(kc, vc, ("b", "a"))
+        qs = [
+            Query(filters={"a": Range(3, 20), "b": Eq(7)}, agg="sum", value_col="m"),
+            Query(filters={"b": Range(2, 9)}, agg="count"),
+            Query(filters={"a": Eq(5)}, agg="select"),
+            Query(filters={"a": Range(4, 4)}, agg="count"),   # empty range
+            Query(filters={"b": Range(4, 4)}, agg="select"),  # empty select
+            Query(filters={}, agg="sum", value_col="w"),
+        ]
+        out = table_execute_device_many(dev, qs, use_pallas=use_pallas)
+        for q, rd in zip(qs, out):
+            rh = host.execute(q)
+            assert rd.rows_scanned == rh.rows_scanned
+            assert rd.rows_matched == rh.rows_matched
+            np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5)
+            if q.agg == "select":
+                np.testing.assert_array_equal(rd.selected, rh.selected)
+
+    def test_agg_validation(self, rng):
+        from repro.kernels import table_execute_device_many
+
+        kc = {"a": rng.integers(0, 8, 100)}
+        vc = {"m": rng.uniform(0, 1, 100)}
+        t = SortedTable.from_columns(kc, vc, ("a",)).place_on_device()
+        with pytest.raises(ValueError, match="sum/count/select"):
+            table_execute_device_many(t, [Query(filters={}, agg="median")])
+        with pytest.raises(ValueError, match="value_col"):
+            table_execute_device_many(t, [Query(filters={}, agg="sum")])
+        with pytest.raises(KeyError):
+            table_execute_device_many(
+                t, [Query(filters={}, agg="sum", value_col="nope")]
+            )
+
+
+class TestSelectCompact:
+    def test_kernel_matches_ref_and_nonzero(self, rng):
+        from repro.kernels import select_compact_batched, select_compact_batched_ref
+
+        n, q = 7000, 6  # several 2048-row blocks exercise the carry
+        keys = rng.integers(0, 10, (2, n)).astype(np.int32)
+        res_lo = rng.integers(0, 5, (q, 2)).astype(np.int32)
+        res_hi = (res_lo + rng.integers(1, 6, (q, 2))).astype(np.int32)
+        limits = np.tile(np.array([[0, n]], np.int32), (q, 1))
+        limits[3] = (100, 900)  # a restricted window
+        mask = np.ones((q, n), bool)
+        ridx = np.arange(n)
+        for j in range(q):
+            m = (ridx >= limits[j, 0]) & (ridx < limits[j, 1])
+            for lane in range(2):
+                m &= (keys[lane] >= res_lo[j, lane]) & (keys[lane] < res_hi[j, lane])
+            mask[j] = m
+        counts = mask.sum(axis=1)
+        width = 128
+        while width < counts.max():
+            width *= 2
+        got = np.asarray(
+            select_compact_batched(
+                keys, res_lo, res_hi, limits, out_width=width, block_n=512
+            )
+        )
+        want = np.asarray(
+            select_compact_batched_ref(
+                jnp.asarray(keys), jnp.asarray(res_lo), jnp.asarray(res_hi),
+                jnp.asarray(limits), out_width=width,
+            )
+        )
+        np.testing.assert_array_equal(got, want)
+        for j in range(q):
+            np.testing.assert_array_equal(
+                got[j, : counts[j]], np.nonzero(mask[j])[0]
+            )
+
+    def test_width_exactly_count(self, rng):
+        """out_width == max matched count: the clamp path must not
+        corrupt the last slot."""
+        from repro.kernels import select_compact_batched
+
+        n = 600
+        keys = np.zeros((1, n), np.int32)
+        keys[0, 5:133] = 1  # exactly 128 matches
+        res_lo = np.array([[1]], np.int32)
+        res_hi = np.array([[2]], np.int32)
+        limits = np.array([[0, n]], np.int32)
+        got = np.asarray(
+            select_compact_batched(keys, res_lo, res_hi, limits, out_width=128, block_n=256)
+        )
+        np.testing.assert_array_equal(got[0], np.arange(5, 133))
 
 
 class TestEcdfHist:

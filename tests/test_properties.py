@@ -16,7 +16,14 @@ from hypothesis import given, settings, strategies as st
 from repro.core import CostModel, Eq, Query, Range, SortedTable
 from repro.core.ecdf import TableStats
 from repro.core.tpch import generate_simulation
-from repro.kernels import scan_agg, scan_agg_batched, scan_agg_batched_ref, scan_agg_ref
+from repro.kernels import (
+    scan_agg,
+    scan_agg_batched,
+    scan_agg_batched_ref,
+    scan_agg_ref,
+    table_execute_device_many,
+    table_slab_locate_many,
+)
 
 from conftest import brute_force
 
@@ -196,3 +203,98 @@ def test_property_device_table_matches_numpy_engine(seed, n):
         assert rd.rows_scanned == rh.rows_scanned
         assert rd.rows_matched == rh.rows_matched
         np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5, atol=1e-5)
+
+
+def _random_queries(rng, schema, cols, k, *, aggs=("count",), value_col=None):
+    qs = []
+    for _ in range(k):
+        f = {}
+        for c in cols:
+            u = rng.random()
+            dom = schema.max_value(c) + 1
+            if u < 0.3:
+                continue
+            if u < 0.6:
+                f[c] = Eq(int(rng.integers(0, dom)))
+            else:
+                lo = int(rng.integers(0, dom))
+                f[c] = Range(lo, min(dom, lo + int(rng.integers(0, dom // 2 + 2))))
+        agg = aggs[int(rng.integers(0, len(aggs)))]
+        qs.append(Query(filters=f, agg=agg,
+                        value_col=value_col if agg == "sum" else None))
+    return qs
+
+
+@pytest.mark.kernel
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 600),
+    bits_a=st.sampled_from([3, 8, 31, 40, 60]),
+    bits_b=st.integers(1, 3),
+)
+def test_property_slab_locate_matches_searchsorted(seed, n, bits_a, bits_b):
+    """Property: the device binary-search kernel == the numpy
+    searchsorted oracle, over random schemas (narrow and two-lane wide
+    columns), empty ranges, and bounds at the table edges."""
+    from repro.core import KeySchema
+    from repro.core.table import slab_bounds_many
+
+    rng = np.random.default_rng(seed)
+    schema = KeySchema({"a": bits_a, "b": bits_b})
+    kc = {
+        c: rng.integers(0, schema.max_value(c) + 1, n).astype(np.int64)
+        for c in ("a", "b")
+    }
+    vc = {"m": rng.uniform(0, 1, n)}
+    t = SortedTable.from_columns(kc, vc, ("a", "b"), schema)
+    qs = _random_queries(rng, schema, ("a", "b"), 10)
+    # force edge-of-table and degenerate bounds into every run
+    qs += [
+        Query(filters={"a": Eq(0)}),
+        Query(filters={"a": Eq(schema.max_value("a"))}),
+        Query(filters={"b": Range(1, 1)}),
+        Query(filters={}),
+    ]
+    bounds = slab_bounds_many(qs, t.layout, t.schema)
+    lo = np.searchsorted(t.packed, bounds[:, 0], side="left")
+    hi = np.searchsorted(t.packed, bounds[:, 1], side="right")
+    want = np.stack([lo, hi], axis=1).astype(np.int64)
+    got = table_slab_locate_many(t.place_on_device(), qs)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.kernel
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 500))
+def test_property_select_compaction_matches_numpy_indices(seed, n):
+    """Property: device "select" emits exactly the numpy engine's row
+    indices (same values, same ascending order), mixed into sum/count
+    batches, including after incremental device appends."""
+    from repro.core import KeySchema
+
+    rng = np.random.default_rng(seed)
+    # explicit schema: the appended run may exceed the seed data's max
+    schema = KeySchema({"x": 4, "y": 4})
+    kc = {"x": rng.integers(0, 10, n), "y": rng.integers(0, 10, n)}
+    vc = {"m": rng.uniform(0, 1, n)}
+    dev = SortedTable.from_columns(kc, vc, ("x", "y"), schema).place_on_device()
+    host = SortedTable.from_columns(kc, vc, ("x", "y"), schema)
+    if rng.random() < 0.5:  # half the runs read after an appended write
+        m = int(rng.integers(1, 50))
+        kc2 = {"x": rng.integers(0, 10, m), "y": rng.integers(0, 10, m)}
+        vc2 = {"m": rng.uniform(0, 1, m)}
+        dev = dev.merge_insert(kc2, vc2)
+        host = host.merge_insert(kc2, vc2)
+        assert dev._device["n_runs"] == 2
+    qs = _random_queries(
+        rng, dev.schema, ("x", "y"), 8, aggs=("select", "sum", "count"),
+        value_col="m",
+    )
+    for q, rd in zip(qs, table_execute_device_many(dev, qs)):
+        rh = host.execute(q)
+        assert rd.rows_scanned == rh.rows_scanned
+        assert rd.rows_matched == rh.rows_matched
+        np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5, atol=1e-5)
+        if q.agg == "select":
+            np.testing.assert_array_equal(rd.selected, rh.selected)
