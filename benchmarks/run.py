@@ -78,6 +78,8 @@ def main() -> None:
             )
         )
     if want("recovery"):
+        # smoke numbers feed the regression gate (log-replay + resort
+        # rows/sec), same as write_queue below — see scripts/bench_gate.py
         results["recovery"] = recovery_bench.run(n_rows=size(18_000_000, 300_000, 30_000))
     if want("hrca"):
         results["hrca"] = hrca_convergence.run(n_rows=size(1_000_000, 200_000, 20_000))
@@ -91,7 +93,7 @@ def main() -> None:
             n_rows=size(1_500_000, 120_000, 20_000),
             batch_sizes=(8, 16) if smoke else (16, 64, 256),
             device=smoke,
-            repeats=7 if smoke else 3,
+            repeats=11 if smoke else 3,
             best=smoke,
         )
     if want("write_queue"):

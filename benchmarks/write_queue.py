@@ -1,22 +1,28 @@
 """Group-commit write queue — §5.3 writes at batch granularity.
 
-Client writes arrive as small batches; a write queue that commits them
-in groups amortizes the per-replica merge overhead (one merge of
-``g × b`` rows instead of ``g`` merges of ``b`` rows; each replica
-still sorts its own copy — paper Table 1). This benchmark drains the
-same queue of ``n_batches`` pending batches at several group-commit
-sizes and reports committed rows/sec.
+Client writes arrive as small batches; since the durable write path
+(commit log → memtable → sorted runs) landed, group commit *falls out of
+memtable staging*: an engine whose staging threshold covers ``g``
+batches absorbs them as cheap log appends + memtable stages and flushes
+one sorted run of ``g × b`` rows per replica — one sort + one merge
+instead of ``g`` (each replica still sorts its own copy, paper Table 1).
+This benchmark drains the same queue of ``n_batches`` pending batches at
+several group-commit sizes (``memtable_rows = g × batch_rows``) and
+reports committed rows/sec.
 
 It also measures ``HREngine.write(parallel=True)`` — the thread-pool
-overlap of the independent per-replica merge sorts — against the
-sequential default at the largest group size. On CPython the merge is
-dominated by ``np.argsort``/``np.insert``, which hold the GIL, so the
-recorded ``thread_overlap_speedup`` hovers near (or below) 1.0; the
-number is recorded precisely so the trade-off stays visible, and group
-commit is the mechanism that actually amortizes.
+overlap of the independent per-replica flushes — against the sequential
+default at the largest group size. The merge hot path now routes
+through GIL-releasing ``np.sort`` on a concatenated packed-key buffer
+plus destination scatters (``SortedTable.merge_run``) instead of
+GIL-holding ``np.argsort``/``np.insert``, so the recorded
+``thread_overlap_speedup`` is the re-measured overlap of that path; the
+number is recorded precisely so the trade-off stays visible either way.
 
 Reported rows: ``write_queue/group{g}`` (µs per committed row) and
-``write_queue/parallel_merge`` (threaded writes, for the overlap ratio).
+``write_queue/parallel_merge`` (threaded flushes, for the overlap
+ratio). The queries/sec-style ``*_rows_per_sec`` keys feed the CI
+regression gate (``scripts/bench_gate.py``).
 """
 
 from __future__ import annotations
@@ -45,18 +51,18 @@ def _pending_batches(rng, schema, n_batches, batch_rows):
     return out
 
 
-def _fresh_engine(kc, vc, schema):
-    eng = HREngine(n_nodes=4)
+def _fresh_engine(kc, vc, schema, *, memtable_rows=0):
+    eng = HREngine(n_nodes=4, memtable_rows=memtable_rows)
     eng.create_column_family(
         "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
     )
     return eng
 
 
-def _concat(group):
-    kc = {c: np.concatenate([b[0][c] for b in group]) for c in group[0][0]}
-    vc = {c: np.concatenate([b[1][c] for b in group]) for c in group[0][1]}
-    return kc, vc
+def _drain(eng, queue, *, parallel=False):
+    for gk, gv in queue:
+        eng.write("cf", gk, gv, parallel=parallel)
+    eng.flush_memtables("cf", parallel=parallel)  # leftover staged rows
 
 
 def run(
@@ -65,33 +71,39 @@ def run(
     batch_rows: int = 2_000,
     group_sizes=(1, 4, 16),
     seed: int = 0,
+    repeats: int = 3,
 ) -> dict:
     rng = np.random.default_rng(seed)
     kc, vc, schema = generate_simulation(n_rows, 3, seed=seed)
     queue = _pending_batches(rng, schema, n_batches, batch_rows)
     total_rows = n_batches * batch_rows
 
+    def _timed_drain(g: int, parallel: bool) -> float:
+        # best-of-N full drains, each from a fresh base state: the
+        # rows/sec feed the 30% CI regression gate, and at smoke scale
+        # a single drain is a few milliseconds — one scheduler hiccup
+        # must not fail the gate (same rationale as the batched gate)
+        walls = []
+        for _ in range(repeats):
+            eng = _fresh_engine(kc, vc, schema, memtable_rows=g * batch_rows)
+            t0 = time.perf_counter()
+            _drain(eng, queue, parallel=parallel)
+            walls.append(time.perf_counter() - t0)
+        return min(walls)
+
     out: dict = {"n_rows": n_rows, "batch_rows": batch_rows, "n_batches": n_batches}
     for g in group_sizes:
-        eng = _fresh_engine(kc, vc, schema)  # same base state per size
-        t0 = time.perf_counter()
-        for s in range(0, n_batches, g):
-            gk, gv = _concat(queue[s : s + g])
-            eng.write("cf", gk, gv)
-        wall = time.perf_counter() - t0
+        # same base state per size; the staging threshold IS the group
+        # size — every g-th write crosses it and flushes the group
+        wall = _timed_drain(g, parallel=False)
         rps = total_rows / max(wall, 1e-12)
         out[f"group{g}_rows_per_sec"] = rps
         record(f"write_queue/group{g}", wall / total_rows * 1e6, f"rows_per_s={rps:.0f}")
 
-    # threaded-vs-sequential overlap of the per-replica merges: drain
+    # threaded-vs-sequential overlap of the per-replica flushes: drain
     # the queue at the largest group size with write(parallel=True)
     g = max(group_sizes)
-    eng = _fresh_engine(kc, vc, schema)
-    t0 = time.perf_counter()
-    for s in range(0, n_batches, g):
-        gk, gv = _concat(queue[s : s + g])
-        eng.write("cf", gk, gv, parallel=True)
-    wall_par = time.perf_counter() - t0
+    wall_par = _timed_drain(g, parallel=True)
     rps_par = total_rows / max(wall_par, 1e-12)
     out["parallel_merge_rows_per_sec"] = rps_par
     out["thread_overlap_speedup"] = rps_par / out[f"group{g}_rows_per_sec"]

@@ -15,6 +15,7 @@ from .ecdf import ColumnStats, TableStats
 from .engine import ColumnFamily, HREngine, Node, ReadReport, ReplicaHandle
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema, pack_columns, pack_tuple, unpack_key
+from .storage import CommitLog, CompactionPolicy, LogRecord, Memtable, SortedRun
 from .table import ScanResult, SortedTable, slab_bounds_for, slab_bounds_many
 from .workload import Eq, Query, Range, Workload, random_workload
 
@@ -39,6 +40,11 @@ __all__ = [
     "pack_columns",
     "pack_tuple",
     "unpack_key",
+    "CommitLog",
+    "CompactionPolicy",
+    "LogRecord",
+    "Memtable",
+    "SortedRun",
     "ScanResult",
     "SortedTable",
     "slab_bounds_for",

@@ -7,8 +7,12 @@ equi-width histograms (B bins). Stats are maintained by the engine's Cost
 Evaluator and refreshed on writes.
 
 The histogram build is a measurable hot loop at corpus scale, so it has a
-Pallas kernel (`repro.kernels.ecdf_hist`); this module is the numpy
-reference and the serving API.
+Pallas kernel (`repro.kernels.ecdf_hist`), wired in behind
+``merge_rows(..., device=True)`` — the engine passes ``device=True`` for
+device-resident column families so the Cost Evaluator's ECDF refresh
+after every memtable flush runs on the accelerator next to the data it
+describes. This module is the numpy reference (bit-equal: the kernel's
+float32 bin counts are exact integers below 2**24) and the serving API.
 """
 
 from __future__ import annotations
@@ -124,10 +128,39 @@ class ColumnStats:
             mass = mass / self.bin_width
         return np.where(valid, mass, 0.0)
 
-    def merge_values(self, values: np.ndarray) -> None:
-        """Streaming update on writes (engine Write Scheduler)."""
-        idx = np.asarray(values, dtype=np.int64) // self.bin_width
-        add = np.bincount(idx, minlength=self.n_bins).astype(np.float64)
+    # the ecdf_hist kernel holds values and bin ids in int32 lanes, its
+    # one-hot compare is sized for n_bins <= 4096, and its float32 bin
+    # counts are exact integers only below 2**24 rows per launch; wider
+    # domains, bin tables or batches keep the numpy path (same counts)
+    _DEVICE_MAX_BINS = 4096
+    _DEVICE_MAX_DOMAIN = 1 << 31
+    _DEVICE_MAX_ROWS = 1 << 24
+
+    def merge_values(self, values: np.ndarray, *, device: bool = False) -> None:
+        """Streaming update on writes (engine Write Scheduler).
+
+        With ``device=True`` the bin counts come from the Pallas
+        ``ecdf_hist`` kernel instead of host ``np.bincount`` — exact for
+        any batch below 2**24 rows per launch (float32 integer counts) —
+        so stats refresh stays on the accelerator for device-resident
+        column families. Falls back to numpy when the column's domain
+        exceeds the kernel's int32 lanes or bin budget, or the batch
+        exceeds the float32 count exactness bound."""
+        values = np.asarray(values, dtype=np.int64)
+        if (
+            device
+            and 0 < values.size < self._DEVICE_MAX_ROWS
+            and self.n_bins <= self._DEVICE_MAX_BINS
+            and self.domain <= self._DEVICE_MAX_DOMAIN
+        ):
+            from repro.kernels import ecdf_hist
+
+            add = np.asarray(
+                ecdf_hist(values, n_bins=self.n_bins, bin_width=self.bin_width)
+            ).astype(np.float64)
+        else:
+            idx = values // self.bin_width
+            add = np.bincount(idx, minlength=self.n_bins).astype(np.float64)
         self.counts = self.counts + add
         self.total = float(self.total + add.sum())
         if hasattr(self, "_cum_cache"):
@@ -152,8 +185,13 @@ class TableStats:
         }
         return cls(n_rows=n, columns=cols)
 
-    def merge_rows(self, key_cols: Mapping[str, np.ndarray]) -> None:
+    def merge_rows(
+        self, key_cols: Mapping[str, np.ndarray], *, device: bool = False
+    ) -> None:
+        """Fold a write batch into the stats; ``device=True`` routes the
+        per-column histogram updates through the ``ecdf_hist`` kernel
+        (the engine's choice for device-resident column families)."""
         n = len(next(iter(key_cols.values()))) if key_cols else 0
         self.n_rows += n
         for name, v in key_cols.items():
-            self.columns[name].merge_values(v)
+            self.columns[name].merge_values(v, device=device)

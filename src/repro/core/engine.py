@@ -9,11 +9,14 @@ Five modules, mapped 1:1 onto the paper's Figure 3:
   Cost Evaluator    → ``CostModel`` over live ``TableStats``
   Request Scheduler → cheapest-replica routing w/ tie round-robin (load
                       balance) and optional straggler hedging
-  Write Scheduler   → fan-out to ALL replicas; each replica sorts through
-                      its own LSM-style merge path (Table 1: HR write
-                      speed == TR write speed)
-  Recovery          → rebuild lost replicas by re-sorting a survivor
-                      (§4 "leverage the LSM-Tree write process"; §5.4)
+  Write Scheduler   → commit log → per-replica memtable → flushed sorted
+                      runs; each replica sorts through its own LSM-style
+                      merge path (Table 1: HR write speed == TR write
+                      speed)
+  Recovery          → rebuild lost replicas by replaying the shared
+                      commit log (default; bit-identical to re-sorting a
+                      survivor, which remains available — §4 "leverage
+                      the LSM-Tree write process"; §5.4)
 
 Nodes are simulated (this container is one host), but every byte of the
 data path is real: tables, scans, sorts and stats are actual arrays, so
@@ -58,6 +61,26 @@ sequential semantics exactly:
   straggler (slowdown > ``hedge_ratio``) are duplicated — grouped per
   alternate replica (the next-cheapest on a *different* node, as in
   ``read``) — and the faster copy wins per query.
+
+Durable write path (``write``)
+------------------------------
+Every write runs Cassandra's commit-log → memtable → sorted-run
+pipeline (``repro.core.storage``): the batch is appended to the column
+family's layout-agnostic :class:`CommitLog` (one shared record stream —
+record 0 is the CREATE-time base dataset), staged into each live
+replica's :class:`Memtable`, and flushed as an immutable sorted run in
+that replica's own key layout via ``SortedTable.merge_run``. With
+``memtable_rows > 0`` flushes are deferred until the staging threshold
+(group commit: one sort + one merge per group instead of one per
+write); reads flush a replica's pending rows before consulting it or
+its result cache, so staged-but-unflushed writes can never serve stale
+aggregates. On device-resident column families each flush appends a run
+to the resident arrays and the :class:`CompactionPolicy` collapses the
+run stack on device (Pallas k-way merge, ``merge_device_runs``) once
+appended rows outgrow the base — no manual
+``place_on_device(rebuild=True)``. Flushes and compactions invalidate
+the affected replica's result-cache entries; counters for log records,
+staged rows, flushes and compactions ride on :attr:`HREngine.stats`.
 """
 
 from __future__ import annotations
@@ -81,6 +104,7 @@ from .cost_model import (
 from .ecdf import TableStats
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema
+from .storage import CommitLog, CompactionPolicy, Memtable, compact_table
 from .table import ScanResult, SortedTable
 from .workload import Query, Workload
 
@@ -125,6 +149,14 @@ class ColumnFamily:
     # write/recovery paths is re-placed on device
     device_resident: bool = False
     rr_counter: "itertools.count" = dataclasses.field(default_factory=itertools.count)
+    # durable write path: shared layout-agnostic commit log (record 0 =
+    # CREATE-time base), one memtable per replica, compaction policy for
+    # device run stacks, and the group-commit staging threshold (0 =
+    # write-through: every write flushes)
+    commitlog: CommitLog | None = None
+    memtables: dict[int, Memtable] = dataclasses.field(default_factory=dict)
+    compaction: CompactionPolicy | None = None
+    memtable_rows: int = 0
 
 
 @dataclasses.dataclass
@@ -174,6 +206,8 @@ class HREngine:
         result_cache: bool = True,
         result_cache_max_entries: int = 4096,
         parallel_writes: bool = False,
+        memtable_rows: int = 0,
+        compaction: CompactionPolicy | None = None,
     ) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
@@ -182,6 +216,8 @@ class HREngine:
                 "result_cache_max_entries must be >= 1; pass "
                 "result_cache=False to disable caching"
             )
+        if memtable_rows < 0:
+            raise ValueError("memtable_rows must be >= 0 (0 = write-through)")
         self.nodes = [Node(node_id=i) for i in range(n_nodes)]
         self.column_families: dict[str, ColumnFamily] = {}
         self._cache_enabled = result_cache
@@ -193,12 +229,41 @@ class HREngine:
         # byte budget doesn't rescan the map on every store
         self._cache_sel_bytes: dict[tuple[str, int], int] = {}
         self.parallel_writes = parallel_writes
+        # write-path defaults inherited by create_column_family
+        self.memtable_rows = memtable_rows
+        self.compaction = compaction if compaction is not None else CompactionPolicy()
+        self._flushes = 0
+        self._compactions = 0
+        # cumulative seconds spent in memtable flushes (incl. the ones
+        # a read barrier triggers, which are write-path cost and NOT
+        # attributed to any ReadReport.wall_seconds)
+        self._flush_wall = 0.0
+        self._pool: ThreadPoolExecutor | None = None
+
+    @property
+    def _executor(self) -> ThreadPoolExecutor:
+        """Shared flush thread pool, created lazily on first parallel
+        flush — a per-flush pool's startup cost would eat into the
+        overlap ``benchmarks/write_queue.py`` measures."""
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=8)
+        return self._pool
+
+    def __getstate__(self) -> dict:
+        # thread pools hold locks/threads and cannot be (deep)copied or
+        # pickled; drop it — it is recreated lazily on first use
+        state = self.__dict__.copy()
+        state["_pool"] = None
+        return state
 
     # -- result cache --------------------------------------------------------
 
     @property
     def stats(self) -> dict:
-        """Operational counters (per-replica read result cache)."""
+        """Operational counters: per-replica read result cache plus the
+        durable write path (log records/rows, currently staged rows,
+        memtable flushes and automatic compactions)."""
+        cfs = self.column_families.values()
         return {
             "result_cache_hits": self._cache_hits,
             "result_cache_misses": self._cache_misses,
@@ -206,6 +271,24 @@ class HREngine:
                 len(c) for c in self._result_cache.values()
             ),
             "result_cache_select_bytes": sum(self._cache_sel_bytes.values()),
+            "commitlog_records": sum(
+                len(cf.commitlog) for cf in cfs if cf.commitlog is not None
+            ),
+            "commitlog_rows": sum(
+                cf.commitlog.n_rows for cf in cfs if cf.commitlog is not None
+            ),
+            "staged_rows": sum(
+                mt.n_staged for cf in cfs for mt in cf.memtables.values()
+            ),
+            "memtable_flushes": self._flushes,
+            "compactions": self._compactions,
+            # cumulative wall of ALL flushes. Flushes inside write()
+            # (write-through or threshold-crossing) also count toward
+            # that write's returned wall — don't sum the two. The
+            # counter exists because read-barrier flushes appear in
+            # neither write()'s return nor any ReadReport.wall_seconds;
+            # here is the only place that time is visible
+            "flush_wall_seconds": self._flush_wall,
         }
 
     @staticmethod
@@ -253,12 +336,20 @@ class HREngine:
         cache[key] = result
         self._cache_sel_bytes[map_key] = total + nb
 
-    def _invalidate_result_cache(self, cf_name: str, node_id: int | None = None) -> None:
+    def _invalidate_result_cache(
+        self,
+        cf_name: str,
+        node_id: int | None = None,
+        replica_id: int | None = None,
+    ) -> None:
         cf = self.column_families[cf_name]
         for r in cf.replicas:
-            if node_id is None or r.node_id == node_id:
-                self._result_cache.pop((cf_name, r.replica_id), None)
-                self._cache_sel_bytes.pop((cf_name, r.replica_id), None)
+            if node_id is not None and r.node_id != node_id:
+                continue
+            if replica_id is not None and r.replica_id != replica_id:
+                continue
+            self._result_cache.pop((cf_name, r.replica_id), None)
+            self._cache_sel_bytes.pop((cf_name, r.replica_id), None)
 
     # -- Replica Generator ---------------------------------------------------
 
@@ -287,6 +378,8 @@ class HREngine:
         hrca_kwargs: dict | None = None,
         layouts: Sequence[Sequence[str]] | None = None,
         device_resident: bool = False,
+        memtable_rows: int | None = None,
+        compaction: CompactionPolicy | None = None,
     ) -> ColumnFamily:
         """CREATE COLUMN FAMILY: choose replica structures, build tables.
 
@@ -305,6 +398,14 @@ class HREngine:
         resident arrays (incremental placement — no re-upload), and
         recovery re-places rebuilt tables. Raises if the schema exceeds
         the device path's per-column two-lane budget.
+
+        ``memtable_rows`` (default: the engine's) is the group-commit
+        staging threshold — 0 means write-through, every ``write``
+        flushes. ``compaction`` (default: the engine's policy) bounds
+        the device run stack; pass an explicit ``CompactionPolicy`` to
+        tune its thresholds. The CREATE-time dataset is committed as
+        record 0 of the column family's shared commit log, so replaying
+        the log alone rebuilds any replica.
         """
         if name in self.column_families:
             raise ValueError(f"column family {name!r} exists")
@@ -335,7 +436,9 @@ class HREngine:
         else:
             raise ValueError(f"unknown mechanism {mechanism!r}")
 
+        value_names = tuple(value_cols)
         replicas = []
+        memtables: dict[int, Memtable] = {}
         for rid, layout in enumerate(chosen):
             table = SortedTable.from_columns(key_cols, value_cols, layout, schema)
             if device_resident:
@@ -343,17 +446,27 @@ class HREngine:
             node_id = self._place(rid, name)
             self.nodes[node_id].tables[(name, rid)] = table
             replicas.append(ReplicaHandle(rid, tuple(layout), node_id))
+            memtables[rid] = Memtable(layout, schema, key_names, value_names)
+
+        log = CommitLog(key_names=key_names, value_names=value_names)
+        log.append(key_cols, value_cols)  # record 0: the base dataset
 
         cf = ColumnFamily(
             name=name,
             schema=schema,
             key_names=key_names,
-            value_names=tuple(value_cols),
+            value_names=value_names,
             replicas=replicas,
             stats=stats,
             cost_model=model,
             hrca_result=hrca_result,
             device_resident=device_resident,
+            commitlog=log,
+            memtables=memtables,
+            compaction=compaction if compaction is not None else self.compaction,
+            memtable_rows=(
+                self.memtable_rows if memtable_rows is None else memtable_rows
+            ),
         )
         self.column_families[name] = cf
         return cf
@@ -392,6 +505,9 @@ class HREngine:
         self, cf: ColumnFamily, entry: _Ranked, query: Query, hedged: bool
     ) -> tuple[ScanResult, ReadReport]:
         est_cost, est_rows, r = entry
+        # staged-but-unflushed writes must be visible (and must not let
+        # a stale cache entry answer): flush before the cache lookup
+        self._ensure_flushed(cf, r)
         table = self._table(cf, r)
         cache = ckey = None
         if self._cache_enabled:
@@ -551,6 +667,7 @@ class HREngine:
         that actually executed — result-cache hits are served at zero
         attributed wall. Hedged runs only replace a query's primary
         result when faster."""
+        self._ensure_flushed(cf, r)  # pending writes first (see _execute_on)
         table = self._table(cf, r)
         group = [queries[i] for i in qidx]
         cache = ckeys = None
@@ -594,7 +711,7 @@ class HREngine:
                 hedged=hedged,
             )
 
-    # -- Write Scheduler -------------------------------------------------------
+    # -- Write Scheduler (commit log → memtable → sorted runs) ----------------
 
     def write(
         self,
@@ -603,51 +720,126 @@ class HREngine:
         value_cols: Mapping[str, np.ndarray],
         *,
         parallel: bool | None = None,
+        flush: bool | None = None,
     ) -> float:
-        """Fan a batch write to all replicas (each sorts by its own layout
-        through the merge path) and refresh stats. Returns wall seconds.
-        Matches §5.3: per-replica cost is one sort regardless of layout.
+        """Commit a batch write through the durable path and refresh
+        stats; returns wall seconds. The batch is (1) appended to the
+        column family's shared commit log — the layout-agnostic
+        durability record any replica can be rebuilt from — then (2)
+        staged into each live replica's memtable, and (3) flushed as one
+        sorted run per replica when the staging threshold is reached
+        (``memtable_rows``; 0 = write-through, so every write flushes).
+        ``flush`` forces (True) or defers (False) step 3 explicitly.
+        Matches §5.3: per-replica flush cost is one sort regardless of
+        layout, so HR writes cost the same as TR (Table 1).
 
-        The per-replica merge sorts are independent (every replica sorts
-        its own copy), and ``parallel=True`` (default: the engine's
-        ``parallel_writes`` flag) overlaps them on a thread pool.
-        Measured caveat, recorded by ``benchmarks/write_queue.py``: on
-        CPython the merge path is dominated by ``np.argsort``/
-        ``np.insert``, which hold the GIL (only ``np.sort`` releases
-        it), so thread overlap is roughly break-even at large batches
-        and a loss at small ones — hence opt-in. *Group commit* (queue
-        pending batches, write them as one merged batch) is the
-        amortization that actually pays, and the same benchmark gates
-        it.
+        *Group commit falls out of the staging*: with a threshold set, g
+        writes of b rows flush as one sort + one merge of g×b rows —
+        the amortization ``benchmarks/write_queue.py`` measures. The
+        per-replica flushes remain independent and ``parallel=True``
+        (default: the engine's ``parallel_writes`` flag) overlaps them
+        on a thread pool; the merge hot path now runs through
+        GIL-releasing ``np.sort`` + scatters (``SortedTable.merge_run``),
+        and the same benchmark re-measures the overlap honestly.
 
-        On a device-resident column family each merge *appends* its run
-        to the replica's resident arrays (``merge_insert`` is
-        placement-incremental); nothing is re-uploaded. Cached read
-        results for the column family are invalidated first.
+        Deferred rows are never stale-served: reads flush a replica's
+        pending rows (invalidating its cached results) before touching
+        it. On a device-resident column family each flush *appends* its
+        run to the replica's resident arrays and the column family's
+        ``CompactionPolicy`` collapses the run stack on device once it
+        outgrows the base — nothing is re-uploaded either way.
         """
         cf = self.column_families[cf_name]
-        self._invalidate_result_cache(cf_name)
         if parallel is None:
             parallel = self.parallel_writes
         t0 = time.perf_counter()
-        # missed writes on dead nodes are repaired by Recovery
+        cf.commitlog.append(key_cols, value_cols)
+        rec = cf.commitlog.tail
+        # missed writes on dead nodes are repaired by Recovery (the log
+        # has every record; dead replicas neither stage nor flush). The
+        # record's columns are the log's own immutable copies, so every
+        # memtable stages them by reference — one copy per write, not RF
         live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
+        for r in live:
+            cf.memtables[r.replica_id].stage(
+                rec.key_cols, rec.value_cols, copy=False
+            )
+        cf.stats.merge_rows(key_cols, device=cf.device_resident)
+        if flush is None:
+            flush = cf.memtable_rows <= 0 or any(
+                cf.memtables[r.replica_id].n_staged >= cf.memtable_rows
+                for r in live
+            )
+        if flush:
+            self._flush_replicas(cf, live, parallel=parallel)
+        return time.perf_counter() - t0
 
-        def _merge(r: ReplicaHandle) -> tuple[ReplicaHandle, SortedTable]:
+    def _flush_replicas(
+        self, cf: ColumnFamily, replicas: Sequence[ReplicaHandle], *, parallel: bool = False
+    ) -> None:
+        """Flush the given replicas' staged rows: one sorted run per
+        replica (in its own layout), merged via ``merge_run``, result
+        cache invalidated, then the compaction policy applied to the
+        merged table. ``parallel`` overlaps the independent per-replica
+        merges on a thread pool."""
+        pending = [
+            r
+            for r in replicas
+            if self.nodes[r.node_id].alive and cf.memtables[r.replica_id].n_staged
+        ]
+        if not pending:
+            return
+        t0 = time.perf_counter()
+
+        def _flush(r: ReplicaHandle) -> tuple[ReplicaHandle, SortedTable]:
+            # peek, don't drain: the memtable is cleared only after the
+            # merged table is installed below, so an exception here (or
+            # in a sibling thread) never loses committed rows — the
+            # staged buffers and the old table both survive a retry
+            run = cf.memtables[r.replica_id].peek_run()
             table = self.nodes[r.node_id].tables[(cf.name, r.replica_id)]
-            return r, table.merge_insert(key_cols, value_cols)
+            return r, table.merge_run(run)
 
-        if parallel and len(live) > 1:
-            with ThreadPoolExecutor(max_workers=min(len(live), 8)) as pool:
-                merged_tables = list(pool.map(_merge, live))
+        if parallel and len(pending) > 1:
+            merged_tables = list(self._executor.map(_flush, pending))
         else:
-            merged_tables = [_merge(r) for r in live]
+            merged_tables = [_flush(r) for r in pending]
         for r, merged in merged_tables:
             if cf.device_resident and not merged.device_resident:
                 merged.place_on_device()
             self.nodes[r.node_id].tables[(cf.name, r.replica_id)] = merged
-        cf.stats.merge_rows(key_cols)
-        return time.perf_counter() - t0
+            cf.memtables[r.replica_id].clear()
+            self._flushes += 1
+            self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
+            if cf.compaction is not None and compact_table(merged, cf.compaction):
+                self._compactions += 1
+                self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
+        self._flush_wall += time.perf_counter() - t0
+
+    def _ensure_flushed(self, cf: ColumnFamily, r: ReplicaHandle) -> None:
+        """Flush one replica's pending staged rows (read barrier)."""
+        mt = cf.memtables.get(r.replica_id)
+        if mt is not None and mt.n_staged:
+            self._flush_replicas(cf, [r])
+
+    def flush_memtables(self, cf_name: str, *, parallel: bool | None = None) -> None:
+        """Drain every live replica's memtable (group-commit flush)."""
+        cf = self.column_families[cf_name]
+        if parallel is None:
+            parallel = self.parallel_writes
+        live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
+        self._flush_replicas(cf, live, parallel=parallel)
+
+    def checkpoint_commitlog(self, cf_name: str) -> int:
+        """Collapse the column family's commit log into one snapshot
+        record, bounding log memory and replay-recovery cost at
+        O(current rows) instead of O(rows ever written). Flushes every
+        live replica first so no record still backs staged-only rows;
+        log-replay recovery is unchanged (the snapshot replays to the
+        identical dataset). Returns the snapshot's LSN."""
+        cf = self.column_families[cf_name]
+        self.flush_memtables(cf_name)
+        return cf.commitlog.checkpoint()
 
     # -- Recovery ----------------------------------------------------------------
 
@@ -655,15 +847,35 @@ class HREngine:
         node = self.nodes[node_id]
         node.alive = False
         node.tables = {}  # disk lost
-        for cf_name in self.column_families:
+        for cf_name, cf in self.column_families.items():
+            for r in cf.replicas:
+                if r.node_id == node_id and r.replica_id in cf.memtables:
+                    # the memtable dies with its node; the commit log is
+                    # the durable copy every staged row replays from
+                    cf.memtables[r.replica_id].clear()
             self._invalidate_result_cache(cf_name, node_id=node_id)
 
-    def recover_node(self, node_id: int) -> float:
-        """Rebuild every replica the node hosted from a surviving replica
-        of the same column family: stream the survivor's dataset and
-        re-sort it into the lost replica's layout (same dataset, different
-        serialization). Returns wall seconds (benchmarked vs. byte-copy
-        recovery in §5.4 bench)."""
+    def recover_node(self, node_id: int, *, source: str = "log") -> float:
+        """Rebuild every replica the node hosted, in that replica's own
+        heterogeneous layout. Returns wall seconds (§5.4 bench).
+
+        ``source="log"`` (default) replays the column family's shared
+        commit log: the layout-agnostic record stream — base dataset
+        plus every committed write, including ones the dead node missed
+        and rows that were staged-but-unflushed anywhere when the node
+        died — is sorted into the lost replica's layout. The result is
+        the same dataset and serialization the surviving-peer path
+        produces (bit-identical packed keys and key columns; value
+        columns too whenever composite keys are unique — the tie order
+        among duplicate full keys is the only degree of freedom).
+
+        ``source="survivor"`` keeps the original path: stream a
+        surviving replica of the same column family and re-sort it
+        (same dataset, different serialization). It is also the
+        fallback for column families without a commit log.
+        """
+        if source not in ("log", "survivor"):
+            raise ValueError(f"unknown recovery source {source!r}")
         node = self.nodes[node_id]
         t0 = time.perf_counter()
         node.alive = True
@@ -673,24 +885,37 @@ class HREngine:
             for r in cf.replicas:
                 if r.node_id != node_id:
                     continue
-                survivor = next(
-                    (
-                        s
-                        for s in cf.replicas
-                        if s.replica_id != r.replica_id and self.nodes[s.node_id].alive
-                        and (cf.name, s.replica_id) in self.nodes[s.node_id].tables
-                    ),
-                    None,
-                )
-                if survivor is None:
-                    raise RuntimeError(
-                        f"data loss: no survivor for {cf.name!r} replica {r.replica_id}"
+                if source == "log" and cf.commitlog is not None and len(cf.commitlog):
+                    kc, vc = cf.commitlog.replay_columns()
+                    rebuilt = SortedTable.from_columns(kc, vc, r.layout, cf.schema)
+                else:
+                    survivor = next(
+                        (
+                            s
+                            for s in cf.replicas
+                            if s.replica_id != r.replica_id
+                            and self.nodes[s.node_id].alive
+                            and (cf.name, s.replica_id) in self.nodes[s.node_id].tables
+                        ),
+                        None,
                     )
-                src = self.nodes[survivor.node_id].tables[(cf.name, survivor.replica_id)]
-                rebuilt = src.resorted(r.layout)
+                    if survivor is None:
+                        raise RuntimeError(
+                            f"data loss: no survivor for {cf.name!r} "
+                            f"replica {r.replica_id}"
+                        )
+                    self._ensure_flushed(cf, survivor)  # staged rows too
+                    src = self.nodes[survivor.node_id].tables[
+                        (cf.name, survivor.replica_id)
+                    ]
+                    rebuilt = src.resorted(r.layout)
                 if cf.device_resident:
                     rebuilt.place_on_device()
                 node.tables[(cf.name, r.replica_id)] = rebuilt
+                # fresh memtable: a log rebuild is fully flushed state
+                cf.memtables[r.replica_id] = Memtable(
+                    r.layout, cf.schema, cf.key_names, cf.value_names
+                )
         return time.perf_counter() - t0
 
     # -- introspection -------------------------------------------------------------

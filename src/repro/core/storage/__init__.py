@@ -1,0 +1,30 @@
+"""Durable write path — commit log → memtable → sorted runs (paper §4).
+
+Cassandra's write path staged onto this repro's tables: every write is
+first appended to a layout-agnostic :class:`CommitLog` shared by all
+replicas of a column family (sequence numbers, replay iterator,
+torn-tail-safe byte framing), then staged in each replica's
+:class:`Memtable`, and flushed as an immutable sorted run in the
+replica's *own* heterogeneous key layout (``SortedTable.merge_run``).
+:class:`CompactionPolicy` bounds how many flushed runs a
+device-resident replica accumulates before they are collapsed by the
+Pallas k-way merge kernel (``repro.kernels.merge_device_runs``) — no
+host re-upload, no manual ``place_on_device(rebuild=True)``.
+
+Recovery replays the shared log: any replica's serialization can be
+rebuilt from the record stream alone, bit-identical to re-sorting a
+surviving peer (the paper's heterogeneous-recovery claim).
+"""
+
+from .commitlog import CommitLog, LogRecord
+from .compaction import CompactionPolicy, compact_table
+from .memtable import Memtable, SortedRun
+
+__all__ = [
+    "CommitLog",
+    "LogRecord",
+    "CompactionPolicy",
+    "compact_table",
+    "Memtable",
+    "SortedRun",
+]

@@ -1,0 +1,241 @@
+"""Append-only commit log — the layout-agnostic durability record.
+
+One log per column family, shared by every replica: records hold the
+written rows in *canonical column order* (the schema's key/value names),
+never in any replica's layout, so a single record stream can rebuild any
+heterogeneous serialization (replay → sort by that replica's layout).
+Records carry monotonically increasing sequence numbers (LSNs); the
+CREATE-time base dataset is record 0, so replaying from the beginning
+reconstructs the full table, including writes a dead node missed.
+
+Durability is modeled by the byte codec: ``to_bytes`` frames every
+record as ``magic · lsn · payload length · crc32(payload) · payload``
+and ``from_bytes`` replays frames until the first torn or corrupt one —
+a crash mid-append loses at most the tail record, never a prefix
+(classic commit-log semantics, property-tested in
+``tests/test_properties.py``).
+
+Memory: the log holds exactly one extra copy of the column family's
+dataset. This system is append-only (no updates or deletes), so log
+rows == current table rows — retention is O(current rows), the same
+asymptote as any single replica, not O(operations). What *does* grow
+with write count is the per-record framing overhead and replay's
+concatenation fan-in; ``checkpoint`` collapses the history into one
+snapshot record to bound both (``HREngine.checkpoint_commitlog`` is
+the flush-then-checkpoint form; an automatic trigger mirroring
+``CompactionPolicy`` is a ROADMAP open item). Unlike Cassandra, flushed
+records cannot simply be dropped: a node failure here wipes the node's
+sstables too, so the log (or a surviving peer) is the only rebuild
+source.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Iterator, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["CommitLog", "LogRecord"]
+
+_MAGIC = 0x48524C47  # "HRLG"
+_HEADER = struct.Struct("<IQQI")  # magic, lsn, payload_len, crc32(payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogRecord:
+    """One committed write batch: columns in canonical (schema) order."""
+
+    lsn: int
+    key_cols: dict[str, np.ndarray]
+    value_cols: dict[str, np.ndarray]
+
+    @property
+    def n_rows(self) -> int:
+        for v in self.key_cols.values():
+            return int(v.shape[0])
+        return 0
+
+
+def _pack_cols(cols: Mapping[str, np.ndarray]) -> bytes:
+    out = [struct.pack("<I", len(cols))]
+    for name, arr in cols.items():
+        a = np.ascontiguousarray(arr)
+        nb = name.encode("utf-8")
+        db = a.dtype.str.encode("ascii")
+        out.append(struct.pack("<III", len(nb), len(db), a.shape[0]))
+        out.append(nb)
+        out.append(db)
+        out.append(a.tobytes())
+    return b"".join(out)
+
+
+def _unpack_cols(buf: memoryview, off: int) -> tuple[dict[str, np.ndarray], int]:
+    (n_cols,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    cols: dict[str, np.ndarray] = {}
+    for _ in range(n_cols):
+        nlen, dlen, n = struct.unpack_from("<III", buf, off)
+        off += 12
+        name = bytes(buf[off : off + nlen]).decode("utf-8")
+        off += nlen
+        dtype = np.dtype(bytes(buf[off : off + dlen]).decode("ascii"))
+        off += dlen
+        nbytes = dtype.itemsize * n
+        cols[name] = np.frombuffer(buf[off : off + nbytes], dtype=dtype).copy()
+        off += nbytes
+    return cols, off
+
+
+class CommitLog:
+    """In-order record log with LSNs, replay, truncation and a byte codec."""
+
+    def __init__(
+        self,
+        key_names: Sequence[str] | None = None,
+        value_names: Sequence[str] | None = None,
+    ) -> None:
+        self._records: list[LogRecord] = []
+        self._next_lsn = 0
+        self._key_names = tuple(key_names) if key_names is not None else None
+        self._value_names = tuple(value_names) if value_names is not None else None
+
+    # -- append ------------------------------------------------------------
+
+    def append(
+        self, key_cols: Mapping[str, np.ndarray], value_cols: Mapping[str, np.ndarray]
+    ) -> int:
+        """Commit one write batch; returns its LSN. Columns are copied
+        (the log must be immune to caller-side mutation) and stored in
+        canonical order — the declared column names when the log was
+        created, else the first record's order."""
+        if self._key_names is None:
+            self._key_names = tuple(key_cols)
+            self._value_names = tuple(value_cols)
+        missing = set(self._key_names) - set(key_cols)
+        missing |= set(self._value_names or ()) - set(value_cols)
+        if missing:
+            raise KeyError(f"write batch missing columns {sorted(missing)}")
+        kc = {c: np.array(key_cols[c], dtype=np.int64, copy=True) for c in self._key_names}
+        vc = {c: np.array(value_cols[c], copy=True) for c in self._value_names or ()}
+        n = {v.shape[0] for v in kc.values()} | {v.shape[0] for v in vc.values()}
+        if len(n) > 1:
+            raise ValueError(f"ragged write batch: column lengths {sorted(n)}")
+        lsn = self._next_lsn
+        self._next_lsn += 1
+        self._records.append(LogRecord(lsn=lsn, key_cols=kc, value_cols=vc))
+        return lsn
+
+    # -- replay ------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    @property
+    def tail(self) -> LogRecord | None:
+        """The most recent record (e.g. the one ``append`` just wrote).
+        Its arrays are the log's own normalized copies — safe to stage
+        by reference as long as the borrower never mutates them."""
+        return self._records[-1] if self._records else None
+
+    @property
+    def n_rows(self) -> int:
+        return sum(r.n_rows for r in self._records)
+
+    def replay(self, start_lsn: int = 0) -> Iterator[LogRecord]:
+        """Records with ``lsn >= start_lsn`` in commit order."""
+        for rec in self._records:
+            if rec.lsn >= start_lsn:
+                yield rec
+
+    def replay_columns(
+        self, end_lsn: int | None = None
+    ) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
+        """All rows of records with ``lsn < end_lsn`` (default: all),
+        concatenated in commit order — the input any replica rebuild
+        sorts into its own layout."""
+        recs = [r for r in self._records if end_lsn is None or r.lsn < end_lsn]
+        if not recs:
+            kn, vn = self._key_names or (), self._value_names or ()
+            return (
+                {c: np.empty(0, np.int64) for c in kn},
+                {c: np.empty(0, np.float64) for c in vn},
+            )
+        kc = {
+            c: np.concatenate([r.key_cols[c] for r in recs])
+            for c in recs[0].key_cols
+        }
+        vc = {
+            c: np.concatenate([r.value_cols[c] for r in recs])
+            for c in recs[0].value_cols
+        }
+        return kc, vc
+
+    def truncate(self, n_records: int) -> None:
+        """Keep only the first ``n_records`` records (crash simulation:
+        everything after the truncation point is lost)."""
+        if n_records < 0:
+            raise ValueError("n_records must be >= 0")
+        self._records = self._records[:n_records]
+        self._next_lsn = self._records[-1].lsn + 1 if self._records else 0
+
+    def checkpoint(self) -> int:
+        """Collapse the whole record history into one snapshot record
+        holding the concatenated rows (Cassandra's "the sstables ARE
+        the checkpoint", applied to this in-memory log): replaying the
+        checkpointed log rebuilds exactly the same dataset, but memory
+        and future replay cost become O(current rows) instead of
+        O(total rows ever written). LSNs keep counting — the snapshot
+        takes a fresh LSN, so ``replay(start_lsn)`` with an old cursor
+        never silently skips rows. Returns the snapshot's LSN.
+
+        Call it only when every replica has flushed through the log's
+        tail (``HREngine.checkpoint_commitlog`` enforces that): the
+        per-record structure is what lets a *partially applied* suffix
+        be replayed record-by-record."""
+        kc, vc = self.replay_columns()
+        lsn = self._next_lsn
+        self._next_lsn += 1
+        self._records = [LogRecord(lsn=lsn, key_cols=kc, value_cols=vc)]
+        return lsn
+
+    # -- byte codec --------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """Framed serialization: per record ``magic · lsn · len ·
+        crc32 · payload``."""
+        frames = []
+        for rec in self._records:
+            payload = _pack_cols(rec.key_cols) + _pack_cols(rec.value_cols)
+            frames.append(
+                _HEADER.pack(_MAGIC, rec.lsn, len(payload), zlib.crc32(payload))
+            )
+            frames.append(payload)
+        return b"".join(frames)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "CommitLog":
+        """Replay frames until the first torn (incomplete) or corrupt
+        (bad magic / crc mismatch) one: a crash mid-append drops the
+        tail record and every complete earlier record survives."""
+        log = cls()
+        buf = memoryview(data)
+        off = 0
+        while off + _HEADER.size <= len(buf):
+            magic, lsn, plen, crc = _HEADER.unpack_from(buf, off)
+            if magic != _MAGIC or off + _HEADER.size + plen > len(buf):
+                break  # corrupt header or torn payload: stop at the prefix
+            payload = buf[off + _HEADER.size : off + _HEADER.size + plen]
+            if zlib.crc32(payload) != crc:
+                break
+            kc, p_off = _unpack_cols(payload, 0)
+            vc, _ = _unpack_cols(payload, p_off)
+            if log._key_names is None:
+                log._key_names = tuple(kc)
+                log._value_names = tuple(vc)
+            log._records.append(LogRecord(lsn=lsn, key_cols=kc, value_cols=vc))
+            log._next_lsn = lsn + 1
+            off += _HEADER.size + plen
+        return log

@@ -1,0 +1,150 @@
+"""Per-replica memtable: the staging half of the LSM write path.
+
+Each replica owns one memtable. Writes land as column batches in arrival
+order (cheap appends — no sort on the write path); ``flush`` concatenates
+the staged batches, sorts them **once** by the replica's own layout and
+emits an immutable :class:`SortedRun` ready for
+``SortedTable.merge_run``. Group commit therefore falls out of the
+staging itself: ``g`` writes of ``b`` rows flush as one sort + one merge
+of ``g × b`` rows instead of ``g`` separate merges — the amortization
+``benchmarks/write_queue.py`` measures, superseding the thread-pool
+overlap of ``HREngine.write(parallel=True)`` that the GIL held at
+break-even.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..keys import KeySchema, pack_columns
+
+__all__ = ["Memtable", "SortedRun", "sort_run"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SortedRun:
+    """An immutable flushed run: columns sorted by ``layout``, with the
+    packed composite key alongside (ascending)."""
+
+    layout: tuple[str, ...]
+    key_cols: dict[str, np.ndarray]
+    value_cols: dict[str, np.ndarray]
+    packed: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.packed.shape[0])
+
+
+def sort_run(
+    key_cols: Mapping[str, np.ndarray],
+    value_cols: Mapping[str, np.ndarray],
+    layout: Sequence[str],
+    schema: KeySchema,
+) -> SortedRun:
+    """Sort one batch into a run in ``layout`` order (stable, so rows
+    with equal keys keep arrival order — the tie rule every merge layer
+    preserves)."""
+    layout = tuple(layout)
+    packed = pack_columns(key_cols, layout, schema)
+    order = np.argsort(packed, kind="stable")
+    return SortedRun(
+        layout=layout,
+        key_cols={
+            c: np.asarray(v)[order].astype(np.int64) for c, v in key_cols.items()
+        },
+        value_cols={c: np.asarray(v)[order] for c, v in value_cols.items()},
+        packed=packed[order],
+    )
+
+
+class Memtable:
+    """Sorted staging buffer for one replica (sorted at flush time)."""
+
+    def __init__(
+        self,
+        layout: Sequence[str],
+        schema: KeySchema,
+        key_names: Sequence[str],
+        value_names: Sequence[str],
+    ) -> None:
+        self.layout = tuple(layout)
+        self.schema = schema
+        self.key_names = tuple(key_names)
+        self.value_names = tuple(value_names)
+        self._key_bufs: list[dict[str, np.ndarray]] = []
+        self._value_bufs: list[dict[str, np.ndarray]] = []
+        self._n_staged = 0
+
+    def __len__(self) -> int:
+        return self._n_staged
+
+    @property
+    def n_staged(self) -> int:
+        return self._n_staged
+
+    def stage(
+        self,
+        key_cols: Mapping[str, np.ndarray],
+        value_cols: Mapping[str, np.ndarray],
+        *,
+        copy: bool = True,
+    ) -> None:
+        """Absorb one write batch (arrival order, no sort). ``copy=False``
+        borrows the caller's arrays instead of copying — the engine
+        stages each commit-log record's already-copied columns into all
+        RF memtables this way, avoiding RF redundant memcpys per write
+        (the memtable never mutates staged arrays, so sharing is safe)."""
+        if copy:
+            kc = {
+                c: np.array(key_cols[c], dtype=np.int64, copy=True)
+                for c in self.key_names
+            }
+            vc = {c: np.array(value_cols[c], copy=True) for c in self.value_names}
+        else:
+            kc = {c: key_cols[c] for c in self.key_names}
+            vc = {c: value_cols[c] for c in self.value_names}
+        n = next(iter(kc.values())).shape[0] if kc else 0
+        if n == 0:
+            return
+        self._key_bufs.append(kc)
+        self._value_bufs.append(vc)
+        self._n_staged += n
+
+    def peek_run(self) -> SortedRun | None:
+        """Sort the staged batches into one :class:`SortedRun` in this
+        replica's layout (one concatenate + one stable sort for the
+        whole group) WITHOUT draining them — the engine merges the run
+        and calls :meth:`clear` only once the merged table is installed,
+        so a failed merge never loses committed rows. ``None`` when
+        nothing is staged."""
+        if self._n_staged == 0:
+            return None
+        if len(self._key_bufs) == 1:
+            kc, vc = self._key_bufs[0], self._value_bufs[0]
+        else:
+            kc = {
+                c: np.concatenate([b[c] for b in self._key_bufs])
+                for c in self.key_names
+            }
+            vc = {
+                c: np.concatenate([b[c] for b in self._value_bufs])
+                for c in self.value_names
+            }
+        return sort_run(kc, vc, self.layout, self.schema)
+
+    def flush(self) -> SortedRun | None:
+        """:meth:`peek_run` + :meth:`clear` in one step, for callers
+        that consume the run unconditionally."""
+        run = self.peek_run()
+        self.clear()
+        return run
+
+    def clear(self) -> None:
+        """Drop staged rows (node failure: the memtable dies with the
+        node; the commit log is the durable copy)."""
+        self._key_bufs = []
+        self._value_bufs = []
+        self._n_staged = 0

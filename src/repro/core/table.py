@@ -248,38 +248,98 @@ class SortedTable:
     def merge_insert(
         self, key_cols: Mapping[str, np.ndarray], value_cols: Mapping[str, np.ndarray]
     ) -> "SortedTable":
-        """Merge a sorted-on-arrival batch (memtable flush → SSTable merge).
+        """Merge an unsorted write batch: sort it into a run in this
+        table's own layout, then :meth:`merge_run` it.
 
         The per-replica sort order is this table's own layout, mirroring
         Cassandra's per-replica LSM write path: HR costs the same writes
         as TR because every replica sorts exactly one copy (Table 1).
+        The engine's memtable path produces the run itself (one sort for
+        a whole commit group) and calls :meth:`merge_run` directly.
+        """
+        from .storage.memtable import sort_run
 
-        If this table is device-resident, the merged run is *appended*
-        to the resident arrays (``repro.kernels.device_state_append``)
-        instead of re-uploading the whole table: the returned table is
+        return self.merge_run(sort_run(key_cols, value_cols, self.layout, self.schema))
+
+    def merge_run(self, run) -> "SortedTable":
+        """Merge one presorted run (memtable flush → SSTable merge).
+
+        ``run`` carries ``key_cols``/``value_cols``/``packed`` already
+        sorted by this table's layout (``repro.core.storage.SortedRun``).
+        Ties merge new-rows-first: a freshly written row lands *before*
+        equal existing rows, and rows within the run keep arrival order
+        — the order every layer above (``row_map`` bookkeeping, the
+        device k-way merge kernel) reproduces.
+
+        The hot path is GIL-friendly by construction: the dominant
+        O(N log N) step is an in-place ``np.sort`` on a concatenated
+        packed-key buffer (numpy's sort releases the GIL; its stable
+        sort is adaptive, so two sorted runs merge in ~O(N)), and the
+        columns are placed by precomputed destination scatters — no
+        ``np.argsort`` and no ``np.insert`` on the base-sized arrays,
+        which held the GIL and kept ``write(parallel=True)`` at
+        break-even (``benchmarks/write_queue.py`` records the overlap).
+
+        If this table is device-resident, the run is *appended* to the
+        resident arrays (``repro.kernels.device_state_append``) instead
+        of re-uploading the whole table: the returned table is
         immediately resident, with a ``row_map`` translating device row
         order (base rows then appended runs) back to the merged host
-        order for "select". ``place_on_device(rebuild=True)`` collapses
-        the runs back into one sorted upload.
+        order for "select". Automatic compaction (or
+        ``place_on_device(rebuild=True)``) collapses the run stack.
         """
-        new_packed = pack_columns(key_cols, self.layout, self.schema)
-        order = np.argsort(new_packed, kind="stable")
-        new_packed = new_packed[order]
-        # merge positions of the new run into the existing run
+        new_packed = np.asarray(run.packed)
+        m = int(new_packed.shape[0])
+        n_old = len(self)
+        # merge positions of the new run into the existing rows
         pos = np.searchsorted(self.packed, new_packed, side="left")
-        merged_packed = np.insert(self.packed, pos, new_packed)
-        run_kc = {
-            c: np.asarray(key_cols[c])[order].astype(np.int64) for c in self.key_cols
-        }
-        run_vc = {c: np.asarray(value_cols[c])[order] for c in self.value_cols}
-        kc = {c: np.insert(self.key_cols[c], pos, run_kc[c]) for c in self.key_cols}
-        vc = {c: np.insert(self.value_cols[c], pos, run_vc[c]) for c in self.value_cols}
-        merged = SortedTable(self.layout, self.schema, kc, vc, merged_packed)
+        if m == 0:
+            kc = {c: v.copy() for c, v in self.key_cols.items()}
+            vc = {c: np.asarray(v).copy() for c, v in self.value_cols.items()}
+            merged = SortedTable(self.layout, self.schema, kc, vc, self.packed.copy())
+        else:
+            # destination rows reproduce np.insert semantics exactly:
+            # run row j lands at pos[j] + j, old row i shifts past the
+            # new rows at-or-before it (ties: new rows first)
+            dest_new = pos + np.arange(m, dtype=np.int64)
+            shift = np.searchsorted(new_packed, self.packed, side="right")
+            dest_old = np.arange(n_old, dtype=np.int64) + shift
+            merged_packed = np.concatenate([self.packed, new_packed])
+            merged_packed.sort(kind="stable")
+
+            def _scatter(old: np.ndarray, new: np.ndarray) -> np.ndarray:
+                out = np.empty(n_old + m, dtype=old.dtype)
+                out[dest_old] = old
+                out[dest_new] = new
+                return out
+
+            kc = {c: _scatter(self.key_cols[c], run.key_cols[c]) for c in self.key_cols}
+            vc = {
+                c: _scatter(np.asarray(self.value_cols[c]), np.asarray(run.value_cols[c]))
+                for c in self.value_cols
+            }
+            merged = SortedTable(self.layout, self.schema, kc, vc, merged_packed)
         if self._device is not None:
             from repro.kernels import device_state_append
 
-            merged._device = device_state_append(self._device, merged, run_kc, run_vc, pos)
+            merged._device = device_state_append(
+                self._device, merged, run.key_cols, run.value_cols, pos
+            )
         return merged
+
+    def compact_runs(self, *, use_pallas: bool = True) -> "SortedTable":
+        """Collapse appended device runs into one sorted run *on device*
+        via the Pallas k-way merge kernel
+        (``repro.kernels.merge_device_runs``) — unlike
+        ``place_on_device(rebuild=True)`` nothing is re-uploaded. After
+        compaction device row order equals host row order again
+        (``row_map`` is identity), so the single-run fast paths apply.
+        No-op on host tables and single-run states. Returns ``self``."""
+        if self._device is not None and self._device.get("n_runs", 1) > 1:
+            from repro.kernels import merge_device_runs
+
+            self._device = merge_device_runs(self._device, use_pallas=use_pallas)
+        return self
 
     # -- reads ---------------------------------------------------------------
 

@@ -13,14 +13,20 @@ scan_agg_locate_batched — FUSED locate+scan: one launch returns per-query
                           counts lift the old 2**24-row cap)
 select_compact_batched  — device "select": block-local prefix-sum
                           compaction of matched row indices
+merge_rank_batched      — merge-path popcount ranks (strict/inclusive
+                          windows) behind the k-way run merge
 ecdf_hist               — histogram/ECDF build for the Cost Evaluator
+                          (wired into ``TableStats.merge_rows``)
 
 Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
 jit'd public API with CPU interpret-mode fallback. ``build_device_state``
 materializes a SortedTable's device-resident arrays (wide key columns
 packed into two int32 lanes per ``device_key_plan``) and
 ``device_state_append`` extends them incrementally with merged write
-runs; ``table_execute_device_many`` serves whole sum/count/select query
+runs and ``merge_device_runs`` collapses the run stack on device (the
+automatic-compaction storage move: ``merge_run_positions`` k-way
+merge-path ranks + one scatter per resident array, no host re-upload);
+``table_execute_device_many`` serves whole sum/count/select query
 batches from those arrays with no host searchsorted and no numpy
 fallback.
 """
@@ -31,6 +37,10 @@ from .ops import (
     device_state_append,
     ecdf_hist,
     ecdf_hist_ref,
+    merge_device_runs,
+    merge_rank_batched,
+    merge_run_positions,
+    merge_run_positions_ref,
     scan_agg,
     scan_agg_batched,
     scan_agg_batched_ref,
@@ -53,6 +63,10 @@ __all__ = [
     "device_state_append",
     "ecdf_hist",
     "ecdf_hist_ref",
+    "merge_device_runs",
+    "merge_rank_batched",
+    "merge_run_positions",
+    "merge_run_positions_ref",
     "scan_agg",
     "scan_agg_batched",
     "scan_agg_batched_ref",

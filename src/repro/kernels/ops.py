@@ -31,6 +31,7 @@ import numpy as np
 
 from . import ref
 from .ecdf_hist import ecdf_hist_pallas
+from .merge_runs import merge_rank_batched, merge_run_positions
 from .scan_agg import (
     WIDE_LANE_BITS,
     scan_agg_batched_pallas,
@@ -56,10 +57,14 @@ __all__ = [
     "scan_agg_locate_batched_ref",
     "slab_locate_batched_ref",
     "select_compact_batched_ref",
+    "merge_rank_batched",
+    "merge_run_positions",
+    "merge_run_positions_ref",
     "ecdf_hist_ref",
     "device_key_plan",
     "build_device_state",
     "device_state_append",
+    "merge_device_runs",
     "table_scan_device",
     "table_scan_device_many",
     "table_execute_device_many",
@@ -71,6 +76,7 @@ scan_agg_batched_ref = ref.scan_agg_batched_ref
 scan_agg_locate_batched_ref = ref.scan_agg_locate_batched_ref
 slab_locate_batched_ref = ref.slab_locate_batched_ref
 select_compact_batched_ref = ref.select_compact_batched_ref
+merge_run_positions_ref = ref.merge_run_positions_ref
 ecdf_hist_ref = ref.ecdf_hist_ref
 
 # Keys and filter bounds live in int32 lanes on device; one lane holds a
@@ -312,6 +318,9 @@ def build_device_state(table, value_cols=None) -> dict:
         "n_value_rows": n_value_rows,
         "n_rows": n,
         "n_runs": 1,
+        # start offset of each resident run (run 0 = the sorted base);
+        # device_state_append extends it, merge_device_runs resets it
+        "run_starts": (0,),
         # device row -> host row translation for "select"; None == identity
         "row_map": None,
     }
@@ -378,7 +387,46 @@ def device_state_append(state, table, run_key_cols, run_value_cols, positions) -
         values_tile=tile,
         n_rows=n_new,
         n_runs=state.get("n_runs", 1) + 1,
+        run_starts=tuple(state.get("run_starts", (0,))) + (n_old,),
         row_map=row_map,
+    )
+    return new
+
+
+def merge_device_runs(
+    state, *, block_n: int = DEVICE_BLOCK_N, use_pallas: bool = True
+) -> dict:
+    """Collapse a state's appended runs into one sorted run on device
+    (automatic compaction's storage move): the k-way merge-path kernel
+    (``merge_run_positions``) computes every row's merged position, and
+    one scatter per resident array reorders keys and value tile — the
+    N-sized columns never round-trip to host. The merge tie rule equals
+    the host ``merge_run`` order, so afterwards device row order ==
+    host row order: ``row_map`` collapses to identity (``None``),
+    ``n_runs`` to 1, and the single-run fast paths (device ``slab_many``,
+    the no-gather select) apply again. Returns a new state dict; the
+    input state is untouched."""
+    if state.get("n_runs", 1) <= 1:
+        return dict(state)
+    n = state["n_rows"]
+    pos = jnp.asarray(
+        merge_run_positions(
+            state["keys"], state["run_starts"], n,
+            n_lanes=sum(state["col_parts"]), block_n=block_n,
+            use_pallas=use_pallas,
+        )
+    )
+    keys = state["keys"]
+    tile = state["values_tile"]
+    merged_keys = jnp.zeros_like(keys).at[:, pos].set(keys[:, :n])
+    merged_tile = jnp.zeros_like(tile).at[:, pos].set(tile[:, :n])
+    new = dict(state)
+    new.update(
+        keys=merged_keys,
+        values_tile=merged_tile,
+        n_runs=1,
+        run_starts=(0,),
+        row_map=None,
     )
     return new
 

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "scan_agg_ref",
@@ -11,6 +12,7 @@ __all__ = [
     "slab_locate_batched_ref",
     "scan_agg_locate_batched_ref",
     "select_compact_batched_ref",
+    "merge_run_positions_ref",
     "ecdf_hist_ref",
 ]
 
@@ -194,6 +196,33 @@ def select_compact_batched_ref(
     qidx = jnp.broadcast_to(jnp.arange(Q, dtype=jnp.int32)[:, None], m.shape)
     out = jnp.zeros((Q, out_width), jnp.int32)
     return out.at[qidx, pos].add(jnp.where(matched, ridx, 0))
+
+
+def merge_run_positions_ref(
+    keys,  # int32[K_ex(+pad), N(+pad)] — key lanes, device row order
+    run_starts,  # run start offsets (run 0 = base at 0)
+    n_rows: int,
+    *,
+    n_lanes: int,
+) -> np.ndarray:
+    """Oracle for the k-way merge kernel: int64[n_rows] merged position
+    of each device row, ascending by (key tuple, run index DESCENDING,
+    within-run position). Later runs precede equal keys of earlier runs
+    — the host ``merge_run`` order, where a new row lands before equal
+    existing rows. Computed independently of the kernel math via one
+    ``np.lexsort`` + inverse permutation."""
+    k = np.asarray(keys)[:n_lanes, :n_rows]
+    starts = np.asarray(tuple(run_starts) + (n_rows,), dtype=np.int64)
+    run_id = np.searchsorted(starts, np.arange(n_rows), side="right") - 1
+    local = np.arange(n_rows, dtype=np.int64) - starts[run_id]
+    # np.lexsort sorts by the LAST key first: MSB lane is primary, then
+    # the remaining lanes, then -run_id (later runs first), then local
+    order = np.lexsort(
+        (local, -run_id) + tuple(k[lane] for lane in reversed(range(n_lanes)))
+    )
+    pos = np.empty(n_rows, np.int64)
+    pos[order] = np.arange(n_rows, dtype=np.int64)
+    return pos
 
 
 def ecdf_hist_ref(col: jax.Array, *, n_bins: int, bin_width: int) -> jax.Array:

@@ -590,3 +590,181 @@ class TestEcdfHist:
         got = np.asarray(ecdf_hist(col, n_bins=5000, bin_width=2))
         want = np.asarray(ecdf_hist_ref(jnp.asarray(col), n_bins=5000, bin_width=2))
         np.testing.assert_allclose(got, want)
+
+
+class TestMergeRuns:
+    """K-way merge-path kernel vs the lexsort oracle, the incremental
+    row_map, and the rebuild escape hatch."""
+
+    def _stacked(self, rng, n_base, runs, dom=16, layout=("a", "b")):
+        kc = {"a": rng.integers(0, dom, n_base), "b": rng.integers(0, dom, n_base)}
+        vc = {"m": rng.uniform(0, 1, n_base)}
+        t = SortedTable.from_columns(kc, vc, layout).place_on_device()
+        for m in runs:
+            t = t.merge_insert(
+                {"a": rng.integers(0, dom, m), "b": rng.integers(0, dom, m)},
+                {"m": rng.uniform(0, 1, m)},
+            )
+        return t
+
+    @pytest.mark.parametrize("runs", [(1,), (100,), (37, 208, 5), (64, 64, 64, 64)])
+    def test_positions_match_oracle_and_row_map(self, rng, runs):
+        from repro.kernels import merge_run_positions, merge_run_positions_ref
+
+        t = self._stacked(rng, 900, runs, dom=8)  # small domain: many ties
+        st = t._device
+        n_lanes = sum(st["col_parts"])
+        got = merge_run_positions(
+            st["keys"], st["run_starts"], st["n_rows"], n_lanes=n_lanes, block_n=256
+        )
+        want = merge_run_positions_ref(
+            st["keys"], st["run_starts"], st["n_rows"], n_lanes=n_lanes
+        )
+        np.testing.assert_array_equal(got, want)
+        # the merge tie rule IS the host merge order, so the kernel's
+        # permutation equals the incrementally maintained row_map
+        np.testing.assert_array_equal(got, st["row_map"])
+
+    def test_block_size_invariance(self, rng):
+        from repro.kernels import merge_run_positions
+
+        t = self._stacked(rng, 700, (90, 33))
+        st = t._device
+        n_lanes = sum(st["col_parts"])
+        outs = [
+            merge_run_positions(
+                st["keys"], st["run_starts"], st["n_rows"], n_lanes=n_lanes,
+                block_n=bn,
+            )
+            for bn in (128, 512, 4096)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+    def test_merge_device_runs_equals_rebuild(self, rng):
+        """Compacted state == place_on_device(rebuild=True) state, array
+        for array — device order becomes host order with no re-upload."""
+        import copy
+
+        from repro.kernels import merge_device_runs
+
+        t = self._stacked(rng, 1500, (200, 80, 41))
+        compacted = merge_device_runs(t._device)
+        rebuilt = copy.deepcopy(t).place_on_device(rebuild=True)._device
+        assert compacted["n_runs"] == 1 and compacted["row_map"] is None
+        assert compacted["run_starts"] == (0,)
+        np.testing.assert_array_equal(
+            np.asarray(compacted["keys"]), np.asarray(rebuilt["keys"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(compacted["values_tile"]), np.asarray(rebuilt["values_tile"])
+        )
+
+    def test_wide_two_lane_columns(self, rng):
+        """A 40-bit key column (two int32 lanes, lexicographic) merges
+        correctly through the kernel."""
+        from repro.core import KeySchema
+        from repro.kernels import merge_device_runs
+
+        schema = KeySchema({"a": 40, "b": 6})
+        kc = {"a": rng.integers(0, 2**40, 1200).astype(np.int64),
+              "b": rng.integers(0, 64, 1200).astype(np.int64)}
+        vc = {"m": rng.uniform(0, 1, 1200)}
+        t = SortedTable.from_columns(kc, vc, ("a", "b"), schema).place_on_device()
+        t = t.merge_insert(
+            {"a": rng.integers(0, 2**40, 150).astype(np.int64),
+             "b": rng.integers(0, 64, 150).astype(np.int64)},
+            {"m": rng.uniform(0, 1, 150)},
+        )
+        st = merge_device_runs(t._device)
+        import copy
+
+        rebuilt = copy.deepcopy(t).place_on_device(rebuild=True)._device
+        np.testing.assert_array_equal(
+            np.asarray(st["keys"]), np.asarray(rebuilt["keys"])
+        )
+
+    def test_compact_runs_preserves_results(self, rng):
+        t = self._stacked(rng, 1000, (120, 60))
+        qs = [Query(filters={"a": Eq(3)}, agg="count"),
+              Query(filters={"b": Range(2, 9)}, agg="sum", value_col="m"),
+              Query(filters={"a": Eq(5)}, agg="select")]
+        before = [t.execute(q) for q in qs]
+        t.compact_runs()
+        assert t._device["n_runs"] == 1
+        after = [t.execute(q) for q in qs]
+        for b, a in zip(before, after):
+            assert b.rows_matched == a.rows_matched
+            assert b.rows_scanned == a.rows_scanned
+            np.testing.assert_allclose(a.value, b.value, rtol=1e-5)
+            if b.selected is not None:
+                np.testing.assert_array_equal(a.selected, b.selected)
+
+    def test_single_run_noop(self, rng):
+        from repro.kernels import merge_device_runs, merge_run_positions
+
+        t = self._stacked(rng, 500, ())
+        st = t._device
+        assert merge_device_runs(st)["n_runs"] == 1
+        np.testing.assert_array_equal(
+            merge_run_positions(st["keys"], st["run_starts"], 500, n_lanes=2),
+            np.arange(500),
+        )
+
+
+class TestEcdfDeviceStats:
+    """Satellite: ecdf_hist wired into TableStats.merge_rows — the
+    device refresh must equal the host bincount path exactly."""
+
+    def test_merge_rows_device_equals_host(self, rng):
+        import copy
+
+        from repro.core import KeySchema
+        from repro.core.ecdf import TableStats
+
+        schema = KeySchema({"a": 6, "b": 14})
+        kc = {"a": rng.integers(0, 64, 4000), "b": rng.integers(0, 1 << 14, 4000)}
+        host_stats = TableStats.from_columns(kc, schema)
+        dev_stats = copy.deepcopy(host_stats)
+        batch = {"a": rng.integers(0, 64, 900), "b": rng.integers(0, 1 << 14, 900)}
+        host_stats.merge_rows(batch, device=False)
+        dev_stats.merge_rows(batch, device=True)
+        assert dev_stats.n_rows == host_stats.n_rows
+        for c in ("a", "b"):
+            np.testing.assert_array_equal(
+                dev_stats.columns[c].counts, host_stats.columns[c].counts
+            )
+            assert dev_stats.columns[c].total == host_stats.columns[c].total
+
+    def test_wide_domain_falls_back_to_host(self, rng):
+        import copy
+
+        from repro.core import KeySchema
+        from repro.core.ecdf import TableStats
+
+        schema = KeySchema({"w": 40})  # domain exceeds the int32 lanes
+        kc = {"w": rng.integers(0, 2**40, 2000).astype(np.int64)}
+        a = TableStats.from_columns(kc, schema)
+        b = copy.deepcopy(a)
+        batch = {"w": rng.integers(0, 2**40, 500).astype(np.int64)}
+        a.merge_rows(batch, device=False)
+        b.merge_rows(batch, device=True)  # silently host-path
+        np.testing.assert_array_equal(a.columns["w"].counts, b.columns["w"].counts)
+
+    def test_selectivities_identical_after_device_refresh(self, rng):
+        import copy
+
+        from repro.core import KeySchema
+        from repro.core.ecdf import TableStats
+
+        schema = KeySchema({"a": 10})
+        kc = {"a": rng.integers(0, 1024, 3000)}
+        a = TableStats.from_columns(kc, schema)
+        b = copy.deepcopy(a)
+        batch = {"a": rng.integers(0, 1024, 700)}
+        a.merge_rows(batch, device=False)
+        b.merge_rows(batch, device=True)
+        xs = rng.uniform(0, 1024, 50)
+        np.testing.assert_array_equal(
+            a.columns["a"].cdf_many(xs), b.columns["a"].cdf_many(xs)
+        )

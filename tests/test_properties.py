@@ -298,3 +298,111 @@ def test_property_select_compaction_matches_numpy_indices(seed, n):
         np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5, atol=1e-5)
         if q.agg == "select":
             np.testing.assert_array_equal(rd.selected, rh.selected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_writes=st.integers(0, 6),
+    byte_level=st.booleans(),
+    data=st.data(),
+)
+def test_property_truncated_commitlog_replays_consistent_prefix(
+    seed, n_writes, byte_level, data
+):
+    """Crash-recovery property: truncating the commit log at an
+    arbitrary record (or an arbitrary BYTE of its serialized form) and
+    replaying yields a prefix-consistent table — exactly the table built
+    from the surviving whole records, identical across all heterogeneous
+    layouts of the column family."""
+    from repro.core import CommitLog, KeySchema
+
+    rng = np.random.default_rng(seed)
+    schema = KeySchema({"x": 5, "y": 5})
+    layouts = (("x", "y"), ("y", "x"))
+    log = CommitLog(key_names=("x", "y"), value_names=("m",))
+    batches = []
+    for _ in range(1 + n_writes):  # record 0 plays the CREATE-time base
+        m = int(rng.integers(1, 60))
+        kc = {"x": rng.integers(0, 32, m), "y": rng.integers(0, 32, m)}
+        vc = {"m": rng.uniform(0, 1, m)}
+        log.append(kc, vc)
+        batches.append((kc, vc))
+
+    if byte_level:
+        blob = log.to_bytes()
+        cut = data.draw(st.integers(0, len(blob)))
+        survived = CommitLog.from_bytes(blob[:cut])
+        # torn-tail framing: what survives is some whole-record prefix
+        assert 0 <= len(survived) <= len(log)
+    else:
+        keep = data.draw(st.integers(0, len(log)))
+        survived = CommitLog.from_bytes(log.to_bytes())
+        survived.truncate(keep)
+        assert len(survived) == keep
+
+    kcr, vcr = survived.replay_columns()
+    k = len(survived)
+    if k == 0:
+        # a fully-torn log knows no columns; nothing to rebuild
+        assert survived.n_rows == 0
+        assert all(v.size == 0 for v in kcr.values())
+        return
+    prefix_k = {c: np.concatenate([b[0][c] for b in batches[:k]]) for c in ("x", "y")}
+    prefix_v = {"m": np.concatenate([b[1]["m"] for b in batches[:k]])}
+    fps = set()
+    for layout in layouts:
+        replayed = SortedTable.from_columns(kcr, vcr, layout, schema)
+        expected = SortedTable.from_columns(prefix_k, prefix_v, layout, schema)
+        np.testing.assert_array_equal(replayed.packed, expected.packed)
+        for c in ("x", "y"):
+            np.testing.assert_array_equal(replayed.key_cols[c], expected.key_cols[c])
+        np.testing.assert_array_equal(
+            np.asarray(replayed.value_cols["m"]), np.asarray(expected.value_cols["m"])
+        )
+        fps.add(replayed.dataset_fingerprint())
+    assert len(fps) == 1  # every heterogeneous layout holds the same prefix
+
+
+@pytest.mark.kernel
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 400),
+    n_runs=st.integers(1, 4),
+)
+def test_property_merge_kernel_matches_lexsort_oracle(seed, n, n_runs):
+    """Property: the k-way merge-path kernel's permutation equals the
+    lexsort oracle AND the incrementally maintained row_map for any run
+    stack, and compaction preserves every query result."""
+    from repro.kernels import merge_run_positions, merge_run_positions_ref
+
+    rng = np.random.default_rng(seed)
+    kc = {"x": rng.integers(0, 6, n), "y": rng.integers(0, 6, n)}
+    vc = {"m": rng.uniform(0, 1, n)}
+    t = SortedTable.from_columns(kc, vc, ("x", "y")).place_on_device()
+    for _ in range(n_runs - 1):
+        m = int(rng.integers(1, 80))
+        t = t.merge_insert(
+            {"x": rng.integers(0, 6, m), "y": rng.integers(0, 6, m)},
+            {"m": rng.uniform(0, 1, m)},
+        )
+    st_dev = t._device
+    n_lanes = sum(st_dev["col_parts"])
+    got = merge_run_positions(
+        st_dev["keys"], st_dev["run_starts"], st_dev["n_rows"],
+        n_lanes=n_lanes, block_n=256,
+    )
+    want = merge_run_positions_ref(
+        st_dev["keys"], st_dev["run_starts"], st_dev["n_rows"], n_lanes=n_lanes
+    )
+    np.testing.assert_array_equal(got, want)
+    if st_dev["row_map"] is not None:
+        np.testing.assert_array_equal(got, st_dev["row_map"])
+    q = Query(filters={"x": Eq(int(rng.integers(0, 6)))}, agg="select")
+    before = t.execute(q)
+    t.compact_runs()
+    assert t._device["n_runs"] == 1
+    after = t.execute(q)
+    assert after.rows_matched == before.rows_matched
+    np.testing.assert_array_equal(after.selected, before.selected)

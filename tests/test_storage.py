@@ -1,0 +1,651 @@
+"""Durable write path: commit log, memtable, run merge, compaction,
+flush-on-read consistency and log-replay recovery.
+
+The acceptance bar: (1) replaying the commit log rebuilds every
+heterogeneous replica bit-identical to the surviving-peer recovery
+path; (2) automatic compaction keeps the resident run count bounded
+under a sustained write workload with no manual
+``place_on_device(rebuild=True)``; (3) staged-but-unflushed writes can
+never serve stale aggregates — the per-replica result cache is
+invalidated by memtable flush and automatic compaction, not just
+``write``/``fail_node``/``recover_node``.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommitLog,
+    CompactionPolicy,
+    Eq,
+    HREngine,
+    KeySchema,
+    Query,
+    Range,
+    SortedTable,
+)
+from repro.core.storage.memtable import Memtable, sort_run
+from repro.core.tpch import generate_simulation
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _batch(rng, schema, n, cols=("k0", "k1", "k2")):
+    kc = {
+        c: rng.integers(0, schema.max_value(c) + 1, n).astype(np.int64) for c in cols
+    }
+    vc = {"metric": rng.uniform(0, 1, n)}
+    return kc, vc
+
+
+class TestCommitLog:
+    def _log(self, rng, n_records=4, rows=50):
+        log = CommitLog(key_names=("a", "b"), value_names=("m",))
+        for _ in range(n_records):
+            log.append(
+                {"a": rng.integers(0, 8, rows), "b": rng.integers(0, 8, rows)},
+                {"m": rng.uniform(0, 1, rows)},
+            )
+        return log
+
+    def test_lsns_monotonic_and_replay_order(self, rng):
+        log = self._log(rng)
+        assert [r.lsn for r in log.replay()] == [0, 1, 2, 3]
+        assert [r.lsn for r in log.replay(start_lsn=2)] == [2, 3]
+        assert len(log) == 4 and log.n_rows == 200
+
+    def test_records_immune_to_caller_mutation(self, rng):
+        log = CommitLog()
+        a = np.array([1, 2, 3], dtype=np.int64)
+        log.append({"a": a}, {"m": np.zeros(3)})
+        a[:] = 99
+        (rec,) = log.replay()
+        np.testing.assert_array_equal(rec.key_cols["a"], [1, 2, 3])
+
+    def test_replay_columns_concatenates_in_commit_order(self, rng):
+        log = CommitLog(key_names=("a",), value_names=("m",))
+        log.append({"a": np.array([3, 1])}, {"m": np.array([0.3, 0.1])})
+        log.append({"a": np.array([2])}, {"m": np.array([0.2])})
+        kc, vc = log.replay_columns()
+        np.testing.assert_array_equal(kc["a"], [3, 1, 2])
+        np.testing.assert_array_equal(vc["m"], [0.3, 0.1, 0.2])
+        kc1, _ = log.replay_columns(end_lsn=1)
+        np.testing.assert_array_equal(kc1["a"], [3, 1])
+
+    def test_bytes_round_trip(self, rng):
+        log = self._log(rng)
+        back = CommitLog.from_bytes(log.to_bytes())
+        assert len(back) == len(log)
+        for a, b in zip(log.replay(), back.replay()):
+            assert a.lsn == b.lsn
+            for c in a.key_cols:
+                np.testing.assert_array_equal(a.key_cols[c], b.key_cols[c])
+            for c in a.value_cols:
+                np.testing.assert_array_equal(a.value_cols[c], b.value_cols[c])
+
+    def test_torn_tail_drops_only_the_tail(self, rng):
+        """Crash mid-append: truncating the byte stream at ANY offset
+        replays a clean prefix of whole records."""
+        log = self._log(rng, n_records=3, rows=20)
+        data = log.to_bytes()
+        frame_ends = []
+        back_full = CommitLog.from_bytes(data)
+        assert len(back_full) == 3
+        for cut in [len(data) - 1, len(data) // 2, 17, 3, 0]:
+            back = CommitLog.from_bytes(data[:cut])
+            assert len(back) < 3 or cut == len(data)
+            # every replayed record is a verbatim prefix record
+            for a, b in zip(log.replay(), back.replay()):
+                assert a.lsn == b.lsn
+                for c in a.key_cols:
+                    np.testing.assert_array_equal(a.key_cols[c], b.key_cols[c])
+
+    def test_corrupt_crc_stops_replay(self, rng):
+        log = self._log(rng, n_records=2, rows=10)
+        data = bytearray(log.to_bytes())
+        data[-1] ^= 0xFF  # flip a payload byte of the last record
+        back = CommitLog.from_bytes(bytes(data))
+        assert len(back) == 1
+
+    def test_truncate_records(self, rng):
+        log = self._log(rng)
+        log.truncate(2)
+        assert [r.lsn for r in log.replay()] == [0, 1]
+        lsn = log.append({"a": np.array([1]), "b": np.array([1])}, {"m": np.array([0.5])})
+        assert lsn == 2  # sequence resumes after the truncation point
+
+    def test_ragged_batch_rejected(self):
+        log = CommitLog()
+        with pytest.raises(ValueError, match="ragged"):
+            log.append({"a": np.array([1, 2])}, {"m": np.array([0.5])})
+
+    def test_missing_column_rejected(self):
+        log = CommitLog(key_names=("a", "b"), value_names=("m",))
+        with pytest.raises(KeyError):
+            log.append({"a": np.array([1])}, {"m": np.array([0.5])})
+
+
+class TestMemtable:
+    def test_stage_counts_and_rejects_missing_columns(self, rng):
+        schema = KeySchema({"a": 4, "b": 4})
+        mt = Memtable(("b", "a"), schema, ("a", "b"), ("m",))
+        assert mt.n_staged == 0 and mt.flush() is None
+        mt.stage({"a": np.array([3, 1]), "b": np.array([0, 2])}, {"m": np.array([0.3, 0.1])})
+        with pytest.raises(KeyError):  # incomplete batch never stages
+            mt.stage({"a": np.array([2])}, {"m": np.array([0.2])})
+        assert mt.n_staged == 2
+
+    def test_flush_equals_sort_run_of_concatenation(self, rng):
+        schema = KeySchema({"a": 5, "b": 5})
+        mt = Memtable(("b", "a"), schema, ("a", "b"), ("m",))
+        batches = []
+        for _ in range(3):
+            kc = {"a": rng.integers(0, 32, 40), "b": rng.integers(0, 32, 40)}
+            vc = {"m": rng.uniform(0, 1, 40)}
+            mt.stage(kc, vc)
+            batches.append((kc, vc))
+        assert mt.n_staged == 120
+        run = mt.flush()
+        assert mt.n_staged == 0 and mt.flush() is None
+        kc = {c: np.concatenate([b[0][c] for b in batches]) for c in ("a", "b")}
+        vc = {"m": np.concatenate([b[1]["m"] for b in batches])}
+        ref = sort_run(kc, vc, ("b", "a"), schema)
+        np.testing.assert_array_equal(run.packed, ref.packed)
+        for c in ("a", "b"):
+            np.testing.assert_array_equal(run.key_cols[c], ref.key_cols[c])
+        np.testing.assert_array_equal(run.value_cols["m"], ref.value_cols["m"])
+        assert np.all(np.diff(run.packed) >= 0)
+
+    def test_clear_drops_staged_rows(self, rng):
+        schema = KeySchema({"a": 4})
+        mt = Memtable(("a",), schema, ("a",), ("m",))
+        mt.stage({"a": np.array([1, 2])}, {"m": np.array([0.1, 0.2])})
+        mt.clear()
+        assert mt.n_staged == 0 and mt.flush() is None
+
+
+class TestMergeRun:
+    def _table(self, rng, n=2000, dom=16):
+        kc = {"a": rng.integers(0, dom, n), "b": rng.integers(0, dom, n)}
+        vc = {"m": rng.uniform(0, 1, n)}
+        return SortedTable.from_columns(kc, vc, ("a", "b"))
+
+    def test_merge_run_matches_insert_reference(self, rng):
+        """The GIL-friendly scatter path (np.sort on a concatenated
+        buffer + destination scatters) must reproduce np.insert's merge
+        bit-for-bit — including the new-rows-first tie order."""
+        t = self._table(rng, dom=4)  # small domain: many key ties
+        kc = {"a": rng.integers(0, 4, 300), "b": rng.integers(0, 4, 300)}
+        vc = {"m": rng.uniform(0, 1, 300)}
+        run = sort_run(kc, vc, t.layout, t.schema)
+        merged = t.merge_run(run)
+        pos = np.searchsorted(t.packed, run.packed, side="left")
+        np.testing.assert_array_equal(
+            merged.packed, np.insert(t.packed, pos, run.packed)
+        )
+        for c in ("a", "b"):
+            np.testing.assert_array_equal(
+                merged.key_cols[c], np.insert(t.key_cols[c], pos, run.key_cols[c])
+            )
+        np.testing.assert_array_equal(
+            merged.value_cols["m"],
+            np.insert(t.value_cols["m"], pos, run.value_cols["m"]),
+        )
+
+    def test_merge_insert_is_sort_then_merge_run(self, rng):
+        t = self._table(rng)
+        kc = {"a": rng.integers(0, 16, 100), "b": rng.integers(0, 16, 100)}
+        vc = {"m": rng.uniform(0, 1, 100)}
+        a = t.merge_insert(kc, vc)
+        b = t.merge_run(sort_run(kc, vc, t.layout, t.schema))
+        np.testing.assert_array_equal(a.packed, b.packed)
+        np.testing.assert_array_equal(a.value_cols["m"], b.value_cols["m"])
+
+    def test_empty_run_returns_copy(self, rng):
+        t = self._table(rng)
+        merged = t.merge_run(
+            sort_run(
+                {"a": np.empty(0, np.int64), "b": np.empty(0, np.int64)},
+                {"m": np.empty(0)},
+                t.layout,
+                t.schema,
+            )
+        )
+        np.testing.assert_array_equal(merged.packed, t.packed)
+        assert merged.key_cols["a"] is not t.key_cols["a"]
+
+
+class TestWritePathStaging:
+    def _engine(self, rng, **kw):
+        kc, vc, schema = generate_simulation(6_000, 3, seed=5)
+        eng = HREngine(n_nodes=4, **kw)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        return eng, schema
+
+    def test_write_through_default_flushes_every_write(self, rng):
+        eng, schema = self._engine(rng)
+        kc, vc = _batch(rng, schema, 100)
+        eng.write("cf", kc, vc)
+        assert eng.stats["staged_rows"] == 0
+        assert eng.stats["memtable_flushes"] == 3  # one per live replica
+        assert eng.stats["commitlog_records"] == 2  # base + the write
+
+    def test_group_commit_defers_until_threshold(self, rng):
+        eng, schema = self._engine(rng, memtable_rows=250)
+        for _ in range(2):
+            eng.write("cf", *_batch(rng, schema, 100))
+        assert eng.stats["memtable_flushes"] == 0
+        assert eng.stats["staged_rows"] == 600  # 200 rows × 3 replicas
+        eng.write("cf", *_batch(rng, schema, 100))  # crosses 250
+        assert eng.stats["memtable_flushes"] == 3
+        assert eng.stats["staged_rows"] == 0
+
+    def test_explicit_flush_override(self, rng):
+        eng, schema = self._engine(rng, memtable_rows=10_000)
+        eng.write("cf", *_batch(rng, schema, 100), flush=True)
+        assert eng.stats["staged_rows"] == 0
+        eng.write("cf", *_batch(rng, schema, 100), flush=False)
+        assert eng.stats["staged_rows"] == 300
+        eng.flush_memtables("cf")
+        assert eng.stats["staged_rows"] == 0
+
+    def test_reads_see_staged_writes(self, rng):
+        """Flush-on-read: rows staged but not yet flushed are visible
+        to every read path (scalar + batched)."""
+        eng, schema = self._engine(rng, memtable_rows=1 << 30)
+        q = Query(filters={"k0": Eq(3)}, agg="count")
+        before, _ = eng.read("cf", q)
+        kc = {c: np.full(70, 3 if c == "k0" else 1) for c in ("k0", "k1", "k2")}
+        eng.write("cf", kc, {"metric": np.zeros(70)})
+        after, _ = eng.read("cf", q)
+        assert after.value == before.value + 70
+        (after_many,), = [eng.read_many("cf", [q])]
+        assert after_many[0].value == before.value + 70
+
+    def test_write_consistency_across_replicas_after_drain(self, rng):
+        eng, schema = self._engine(rng, memtable_rows=500)
+        for _ in range(5):
+            eng.write("cf", *_batch(rng, schema, 120))
+        eng.flush_memtables("cf")
+        cf = eng.column_families["cf"]
+        fps = {eng._table(cf, r).dataset_fingerprint() for r in cf.replicas}
+        assert len(fps) == 1
+        assert eng.stats["commitlog_rows"] == 6_000 + 5 * 120
+
+
+class TestCacheInvalidation:
+    """Satellite: the result cache is invalidated by memtable flush and
+    automatic compaction — not just write/fail_node/recover_node — so
+    staged-but-unflushed writes can never serve stale aggregates."""
+
+    def test_flush_invalidates_stale_entries(self, rng):
+        kc, vc, schema = generate_simulation(6_000, 3, seed=5)
+        eng = HREngine(n_nodes=4, memtable_rows=1 << 30)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1], schema=schema,
+        )
+        q = Query(filters={"k1": Eq(2)}, agg="count")
+        before, _ = eng.read("cf", q)
+        eng.read("cf", q)
+        assert eng.stats["result_cache_hits"] == 1
+        assert eng.stats["result_cache_entries"] == 1
+        kw = {c: np.full(40, 2 if c == "k1" else 0) for c in ("k0", "k1", "k2")}
+        eng.write("cf", kw, {"metric": np.zeros(40)})  # staged only
+        assert eng.stats["memtable_flushes"] == 0
+        after, _ = eng.read("cf", q)  # read barrier flushes + invalidates
+        assert eng.stats["memtable_flushes"] == 1
+        assert after.value == before.value + 40  # never the stale cached 'before'
+        misses = eng.stats["result_cache_misses"]
+        again, _ = eng.read("cf", q)
+        assert again.value == after.value
+        assert eng.stats["result_cache_misses"] == misses  # cached again now
+
+    def test_compaction_invalidates(self, rng):
+        kc, vc, schema = generate_simulation(4_000, 3, seed=5)
+        eng = HREngine(
+            n_nodes=2, compaction=CompactionPolicy(appended_frac=0.05, max_runs=2)
+        )
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1], schema=schema,
+            device_resident=True,
+        )
+        q = Query(filters={"k2": Eq(1)}, agg="select")
+        eng.read("cf", q)
+        assert eng.stats["result_cache_entries"] == 1
+        eng.write("cf", *_batch(rng, schema, 500))  # flush → compact
+        assert eng.stats["compactions"] >= 1
+        assert eng.stats["result_cache_entries"] == 0
+        cf = eng.column_families["cf"]
+        table = eng._table(cf, cf.replicas[0])
+        assert table._device["n_runs"] == 1 and table._device["row_map"] is None
+
+
+class TestLogReplayRecovery:
+    def _engines(self, rng, n_rows=5_000, writes=3, unique=False):
+        if unique:
+            # distinct composite keys: value columns then compare
+            # bit-identical too (tie order is the only freedom)
+            total = n_rows + writes * 100
+            perm = rng.permutation(1 << 13)[:total].astype(np.int64)
+            schema = KeySchema({"k0": 5, "k1": 4, "k2": 4})
+            all_kc = {
+                "k0": (perm >> 8) & 0x1F, "k1": (perm >> 4) & 0xF, "k2": perm & 0xF,
+            }
+            all_vc = {"metric": rng.uniform(0, 1, total)}
+            kc = {c: v[:n_rows] for c, v in all_kc.items()}
+            vc = {c: v[:n_rows] for c, v in all_vc.items()}
+            batches = [
+                (
+                    {c: v[n_rows + i * 100 : n_rows + (i + 1) * 100] for c, v in all_kc.items()},
+                    {c: v[n_rows + i * 100 : n_rows + (i + 1) * 100] for c, v in all_vc.items()},
+                )
+                for i in range(writes)
+            ]
+        else:
+            kc, vc, schema = generate_simulation(n_rows, 3, seed=7)
+            batches = [_batch(rng, schema, 100) for _ in range(writes)]
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        for bk, bv in batches:
+            eng.write("cf", bk, bv)
+        return eng
+
+    @pytest.mark.parametrize("unique", [False, True])
+    def test_replay_bit_identical_to_survivor_path(self, rng, unique):
+        """THE recovery acceptance criterion: rebuilding a lost replica
+        by replaying the shared commit log equals rebuilding it from a
+        surviving peer — identical packed keys and key columns always
+        (the packed composite key determines every key column), and
+        identical value columns whenever composite keys are unique."""
+        eng = self._engines(rng, unique=unique)
+        cf = eng.column_families["cf"]
+        for victim_replica in range(3):
+            victim = cf.replicas[victim_replica].node_id
+            e_log, e_sur = copy.deepcopy(eng), copy.deepcopy(eng)
+            e_log.fail_node(victim)
+            e_log.recover_node(victim, source="log")
+            e_sur.fail_node(victim)
+            e_sur.recover_node(victim, source="survivor")
+            for r in cf.replicas:
+                if r.node_id != victim:
+                    continue
+                t_log = e_log._table(e_log.column_families["cf"], r)
+                t_sur = e_sur._table(e_sur.column_families["cf"], r)
+                assert t_log.layout == t_sur.layout == r.layout
+                np.testing.assert_array_equal(t_log.packed, t_sur.packed)
+                for c in t_log.key_cols:
+                    np.testing.assert_array_equal(t_log.key_cols[c], t_sur.key_cols[c])
+                assert t_log.dataset_fingerprint() == t_sur.dataset_fingerprint()
+                if unique:
+                    for c in t_log.value_cols:
+                        np.testing.assert_array_equal(
+                            np.asarray(t_log.value_cols[c]),
+                            np.asarray(t_sur.value_cols[c]),
+                        )
+
+    def test_replay_repairs_missed_writes(self, rng):
+        eng = self._engines(rng)
+        cf = eng.column_families["cf"]
+        victim = cf.replicas[0].node_id
+        eng.fail_node(victim)
+        missed_k = {c: np.full(30, 5) for c in ("k0", "k1", "k2")}
+        eng.write("cf", missed_k, {"metric": np.ones(30)})  # victim is down
+        eng.recover_node(victim, source="log")
+        fps = {eng._table(cf, r).dataset_fingerprint() for r in cf.replicas}
+        assert len(fps) == 1  # the recovered replica has the missed write
+
+    def test_replay_includes_rows_staged_at_failure(self, rng):
+        """Rows staged in a dead node's memtable are lost with the node
+        but survive in the log: recovery replays them."""
+        kc, vc, schema = generate_simulation(3_000, 3, seed=7)
+        eng = HREngine(n_nodes=4, memtable_rows=1 << 30)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        eng.write("cf", *_batch(rng, schema, 80))  # staged everywhere
+        cf = eng.column_families["cf"]
+        victim = cf.replicas[0].node_id
+        eng.fail_node(victim)
+        eng.recover_node(victim, source="log")
+        t = eng._table(cf, cf.replicas[0])
+        assert len(t) == 3_000 + 80
+        q = Query(filters={}, agg="count")
+        res, _ = eng.read_many("cf", [q])[0]
+        assert res.value == 3_000 + 80
+
+    def test_unknown_source_rejected(self, rng):
+        eng = self._engines(rng, n_rows=1_000, writes=0)
+        with pytest.raises(ValueError, match="recovery source"):
+            eng.recover_node(0, source="tape")
+
+    def test_truncated_log_replays_prefix_consistently(self, rng):
+        """Crash-recovery invariant (deterministic twin of the
+        hypothesis property): truncating the log after any record and
+        replaying yields exactly the table built from that prefix of
+        writes, identical across every heterogeneous layout."""
+        kc, vc, schema = generate_simulation(2_000, 3, seed=7)
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        batches = [_batch(rng, schema, 60) for _ in range(4)]
+        for bk, bv in batches:
+            eng.write("cf", bk, bv)
+        log = eng.column_families["cf"].commitlog
+        for keep in range(1, 6):  # 1 = base only … 5 = everything
+            trunc = CommitLog.from_bytes(log.to_bytes())
+            trunc.truncate(keep)
+            kcr, vcr = trunc.replay_columns()
+            prefix_k = {
+                c: np.concatenate([kc[c]] + [b[0][c] for b in batches[: keep - 1]])
+                for c in kc
+            }
+            prefix_v = {
+                "metric": np.concatenate(
+                    [vc["metric"]] + [b[1]["metric"] for b in batches[: keep - 1]]
+                )
+            }
+            fps = set()
+            for layout in LAYOUTS:
+                replayed = SortedTable.from_columns(kcr, vcr, layout, schema)
+                expected = SortedTable.from_columns(prefix_k, prefix_v, layout, schema)
+                np.testing.assert_array_equal(replayed.packed, expected.packed)
+                np.testing.assert_array_equal(
+                    np.asarray(replayed.value_cols["metric"]),
+                    np.asarray(expected.value_cols["metric"]),
+                )
+                fps.add(replayed.dataset_fingerprint())
+            assert len(fps) == 1  # all layouts hold the same prefix dataset
+
+
+class TestAutoCompaction:
+    def test_run_count_bounded_under_sustained_writes(self, rng, monkeypatch):
+        """THE compaction acceptance criterion: a 10k-row write workload
+        on a device-resident column family keeps every replica's
+        resident run count bounded by the policy — with
+        place_on_device(rebuild=True) forbidden (no re-upload) — and
+        reads stay correct throughout."""
+        import repro.kernels as kernels
+
+        kc, vc, schema = generate_simulation(1_500, 3, seed=9)
+        policy = CompactionPolicy(appended_frac=0.5, max_runs=6)
+        eng = HREngine(n_nodes=4, compaction=policy)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+            device_resident=True,
+        )
+        host = HREngine(n_nodes=4)
+        host.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        # any rebuild would re-upload — the compaction path must not
+        monkeypatch.setattr(
+            kernels, "build_device_state",
+            lambda *a, **k: pytest.fail("device state rebuilt during compaction"),
+        )
+        cf = eng.column_families["cf"]
+        max_runs_seen = 0
+        for i in range(20):  # 20 × 500 = 10k rows written
+            bk, bv = _batch(rng, schema, 500)
+            eng.write("cf", bk, bv)
+            host.write("cf", bk, bv)
+            runs = [eng._table(cf, r)._device["n_runs"] for r in cf.replicas]
+            max_runs_seen = max(max_runs_seen, max(runs))
+        assert eng.stats["compactions"] >= 1
+        assert max_runs_seen <= policy.max_runs + 1  # bounded throughout
+        qs = [
+            Query(filters={"k0": Eq(int(rng.integers(0, 8)))}, agg="count")
+            for _ in range(4)
+        ] + [Query(filters={"k1": Range(0, 3)}, agg="select")]
+        got = eng.read_many("cf", qs)
+        ref = host.read_many("cf", qs)
+        for (rd, _), (rh, _) in zip(got, ref):
+            assert rd.rows_matched == rh.rows_matched
+            np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5)
+            if rh.selected is not None:
+                np.testing.assert_array_equal(rd.selected, rh.selected)
+
+    def test_compaction_restores_single_run_fast_paths(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=9)
+        eng = HREngine(n_nodes=2, compaction=CompactionPolicy(appended_frac=0.1))
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1], schema=schema,
+            device_resident=True,
+        )
+        eng.write("cf", *_batch(rng, schema, 400))
+        assert eng.stats["compactions"] == 1
+        cf = eng.column_families["cf"]
+        t = eng._table(cf, cf.replicas[0])
+        st = t._device
+        assert st["n_runs"] == 1 and st["row_map"] is None
+        assert st["run_starts"] == (0,) and st["n_rows"] == 2_400
+        # device order == host order after on-device compaction
+        host = SortedTable(t.layout, t.schema, t.key_cols, t.value_cols, t.packed)
+        q = Query(filters={"k0": Eq(2)}, agg="select")
+        np.testing.assert_array_equal(t.execute(q).selected, host.execute(q).selected)
+        np.testing.assert_array_equal(
+            t.slab_many([q]), host.slab_many([q])
+        )
+
+    def test_policy_thresholds(self):
+        p = CompactionPolicy(appended_frac=0.5, max_runs=4)
+        assert not p.should_compact(base_rows=100, appended_rows=0, n_runs=1)
+        assert not p.should_compact(base_rows=100, appended_rows=40, n_runs=2)
+        assert p.should_compact(base_rows=100, appended_rows=60, n_runs=2)
+        assert p.should_compact(base_rows=100, appended_rows=1, n_runs=5)
+        with pytest.raises(ValueError):
+            CompactionPolicy(max_runs=0)
+        with pytest.raises(ValueError):
+            CompactionPolicy(appended_frac=-0.1)
+
+
+class TestCommitLogCheckpoint:
+    def test_checkpoint_bounds_log_and_preserves_replay(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=11)
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        for _ in range(4):
+            eng.write("cf", *_batch(rng, schema, 50))
+        log = eng.column_families["cf"].commitlog
+        before_k, before_v = log.replay_columns()
+        assert len(log) == 5 and log.n_rows == 2_200
+        lsn = eng.checkpoint_commitlog("cf")
+        assert lsn == 5  # LSNs keep counting past the snapshot
+        assert len(log) == 1 and log.n_rows == 2_200
+        after_k, after_v = log.replay_columns()
+        for c in before_k:
+            np.testing.assert_array_equal(before_k[c], after_k[c])
+        np.testing.assert_array_equal(before_v["metric"], after_v["metric"])
+        # recovery through the snapshot is unchanged
+        cf = eng.column_families["cf"]
+        victim = cf.replicas[0].node_id
+        fp = eng._table(cf, cf.replicas[0]).dataset_fingerprint()
+        eng.fail_node(victim)
+        eng.recover_node(victim, source="log")
+        assert eng._table(cf, cf.replicas[0]).dataset_fingerprint() == fp
+
+    def test_checkpoint_flushes_staged_rows_first(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=11)
+        eng = HREngine(n_nodes=4, memtable_rows=1 << 30)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        eng.write("cf", *_batch(rng, schema, 60))  # staged only
+        eng.checkpoint_commitlog("cf")
+        assert eng.stats["staged_rows"] == 0  # flushed before collapsing
+        log = eng.column_families["cf"].commitlog
+        assert len(log) == 1 and log.n_rows == 1_060
+        cf = eng.column_families["cf"]
+        fps = {eng._table(cf, r).dataset_fingerprint() for r in cf.replicas}
+        assert len(fps) == 1
+
+
+class TestFlushAtomicity:
+    def test_failed_merge_loses_no_staged_rows(self, rng, monkeypatch):
+        """A merge that raises mid-flush must leave the staged rows AND
+        the old table intact — committed rows may be delayed, never
+        lost — and a retry succeeds."""
+        kc, vc, schema = generate_simulation(2_000, 3, seed=13)
+        eng = HREngine(n_nodes=4, memtable_rows=1 << 30)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        eng.write("cf", *_batch(rng, schema, 90))  # staged only
+        assert eng.stats["staged_rows"] == 180
+        boom = RuntimeError("disk full")
+        monkeypatch.setattr(
+            SortedTable, "merge_run", lambda self, run: (_ for _ in ()).throw(boom)
+        )
+        with pytest.raises(RuntimeError, match="disk full"):
+            eng.flush_memtables("cf")
+        # nothing drained, nothing installed
+        assert eng.stats["staged_rows"] == 180
+        assert eng.stats["memtable_flushes"] == 0
+        cf = eng.column_families["cf"]
+        assert all(len(eng._table(cf, r)) == 2_000 for r in cf.replicas)
+        monkeypatch.undo()
+        eng.flush_memtables("cf")  # retry succeeds with the same rows
+        assert eng.stats["staged_rows"] == 0
+        assert all(len(eng._table(cf, r)) == 2_090 for r in cf.replicas)
+        fps = {eng._table(cf, r).dataset_fingerprint() for r in cf.replicas}
+        assert len(fps) == 1
+
+    def test_parallel_flush_shares_executor_and_survives_deepcopy(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=13)
+        eng = HREngine(n_nodes=4, memtable_rows=1 << 30, parallel_writes=True)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        eng.write("cf", *_batch(rng, schema, 50))
+        eng.flush_memtables("cf")  # parallel path: pool created lazily
+        assert eng._pool is not None
+        pool = eng._pool
+        eng.write("cf", *_batch(rng, schema, 50))
+        eng.flush_memtables("cf")
+        assert eng._pool is pool  # reused, not rebuilt per flush
+        twin = copy.deepcopy(eng)  # pools are dropped, not copied
+        assert twin._pool is None
+        twin.write("cf", *_batch(rng, schema, 50))
+        twin.flush_memtables("cf")
+        cf = twin.column_families["cf"]
+        fps = {twin._table(cf, r).dataset_fingerprint() for r in cf.replicas}
+        assert len(fps) == 1
+
+    def test_flush_wall_counter_accumulates(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=13)
+        eng = HREngine(n_nodes=4, memtable_rows=1 << 30)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        assert eng.stats["flush_wall_seconds"] == 0.0
+        eng.write("cf", *_batch(rng, schema, 200))
+        eng.read("cf", Query(filters={"k0": Eq(1)}, agg="count"))  # read barrier
+        assert eng.stats["flush_wall_seconds"] > 0.0
