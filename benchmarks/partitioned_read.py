@@ -1,0 +1,120 @@
+"""Scatter-gather read throughput vs partition count (token ring).
+
+A partitioned column family (``create_column_family(partitions=P)``,
+PR 5) answers ``read_many`` by intersecting each query's canonical slab
+bounds with the ring's token ranges, executing one grouped scan per
+``(partition, replica)``, and merging partial aggregates on the host.
+This benchmark drains the same query batches against the same dataset
+at several partition counts and reports queries/sec:
+
+* queries with an equality on the leading canonical key are pinned to a
+  single partition — the Cassandra point-read case;
+* leading-key ranges span a few partitions;
+* residual-only filters fan out to every partition — the worst case,
+  paying P grouped scans for one query.
+
+What partitioning buys is *distribution*: per-node table state shrinks
+to ~N/P, writes fan out to the owning partitions only, and recovery
+rebuilds one partition slice instead of the whole keyspace. It does
+NOT reduce total rows scanned on this single-host simulation — the
+Cost Evaluator already routes every query to a slab-optimal layout, so
+the per-P numbers chiefly record the scatter/gather planning overhead,
+which this gate keeps honest (and bounded) per partition count.
+``p1`` doubles as the regression anchor for the unpartitioned path.
+The ``p{P}_qps`` keys feed the CI regression gate
+(``scripts/bench_gate.py``) alongside the batched-read queries/sec;
+the result cache is disabled so repeats measure the storage path, not
+the cache.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Eq, HREngine, Query, Range
+from repro.core.tpch import generate_simulation
+
+from .common import record, time_fn
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _mixed_batch(rng, schema, batch):
+    """~40% single-partition equalities, ~30% leading-key range spans,
+    ~30% full fan-out residual filters, mixed count/sum aggs."""
+    qs = []
+    doms = {c: schema.max_value(c) + 1 for c in ("k0", "k1", "k2")}
+    for i in range(batch):
+        u = rng.random()
+        if u < 0.4:
+            f = {"k0": Eq(int(rng.integers(0, doms["k0"])))}
+        elif u < 0.7:
+            lo = int(rng.integers(0, doms["k0"] - 1))
+            width = max(1, doms["k0"] // 8)
+            f = {"k0": Range(lo, min(lo + width, doms["k0"]))}
+        else:
+            lo = int(rng.integers(0, doms["k1"] - 1))
+            f = {"k1": Range(lo, min(lo + 2, doms["k1"]))}
+        agg = "sum" if i % 2 else "count"
+        qs.append(
+            Query(filters=f, agg=agg, value_col="metric" if agg == "sum" else None)
+        )
+    return qs
+
+
+def run(
+    n_rows: int = 200_000,
+    batch: int = 64,
+    n_batches: int = 4,
+    partition_counts=(1, 2, 4, 8),
+    seed: int = 0,
+    repeats: int = 3,
+    best: bool = False,
+) -> dict:
+    rng = np.random.default_rng(seed)
+    kc, vc, schema = generate_simulation(n_rows, 3, seed=seed)
+    batches = [_mixed_batch(rng, schema, batch) for _ in range(n_batches)]
+    total_q = batch * n_batches
+    out: dict = {"n_rows": n_rows, "batch": batch, "n_batches": n_batches}
+
+    for p in partition_counts:
+        # cache off: repeated drains must measure the scatter-gather
+        # storage path, not result-cache hits (same as the fig5 benches)
+        eng = HREngine(n_nodes=8, result_cache=False)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+            partitions=p,
+        )
+
+        def drain():
+            # returns the drain's total rows_scanned so the derived
+            # column comes from a timed pass (no extra untimed drain)
+            return sum(
+                rep.rows_scanned
+                for qs in batches
+                for _, rep in eng.read_many("cf", qs)
+            )
+
+        wall, rows = time_fn(drain, repeats=repeats, best=best)
+        qps = total_q / max(wall, 1e-12)
+        out[f"p{p}_qps"] = qps
+        record(
+            f"partitioned_read/p{p}",
+            wall / total_q * 1e6,
+            f"qps={qps:.0f};rows_scanned={rows}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=200_000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--partitions", type=int, nargs="+", default=[1, 2, 4, 8])
+    args = ap.parse_args()
+    for k, v in run(
+        n_rows=args.rows, batch=args.batch, partition_counts=tuple(args.partitions)
+    ).items():
+        print(k, v)

@@ -26,7 +26,7 @@ def main() -> None:
         "--only", default=None,
         help=(
             "comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,"
-            "kernels,batched,write_queue"
+            "kernels,batched,write_queue,partitioned"
         ),
     )
     args = ap.parse_args()
@@ -42,6 +42,7 @@ def main() -> None:
         fig5c_clustering,
         hrca_convergence,
         kernel_bench,
+        partitioned_read,
         recovery_bench,
         table1_write,
         write_queue,
@@ -93,6 +94,18 @@ def main() -> None:
             n_rows=size(1_500_000, 120_000, 20_000),
             batch_sizes=(8, 16) if smoke else (16, 64, 256),
             device=smoke,
+            repeats=11 if smoke else 3,
+            best=smoke,
+        )
+    if want("partitioned"):
+        # q/s vs partition count at fixed dataset size; the smoke
+        # p{P}_qps keys feed the regression gate (best-of-N, same
+        # jitter rationale as the batched gate)
+        results["partitioned"] = partitioned_read.run(
+            n_rows=size(2_000_000, 200_000, 20_000),
+            batch=size(256, 64, 16),
+            n_batches=size(8, 4, 3),
+            partition_counts=(1, 2, 4) if smoke else (1, 2, 4, 8),
             repeats=11 if smoke else 3,
             best=smoke,
         )

@@ -8,7 +8,9 @@ engine regresses by more than ``--tol`` (default 0.30 per the PR 3
 gate; override with ``--tol`` or the ``BENCH_GATE_TOL`` env var, e.g.
 on noisy shared machines). Gated sections: batched-read queries/sec,
 write-queue committed rows/sec (the durable write path + group
-commit), and recovery rows/sec (log replay and survivor re-sort).
+commit), recovery rows/sec (log replay and survivor re-sort), and
+partitioned-read queries/sec (scatter-gather over the token ring at
+each partition count).
 
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json --update
@@ -65,7 +67,7 @@ def main() -> int:
     # recovery paths. (thread_overlap_speedup and the copy/resort ratios
     # are descriptive — ratios, not throughputs — and stay ungated.)
     flat: dict[str, float] = {}
-    for section in ("batched", "write_queue", "recovery"):
+    for section in ("batched", "write_queue", "recovery", "partitioned"):
         flat.update(flatten_qps(smoke.get(section, {}), section))
     # parallel_merge measures thread-pool scheduling, which at smoke
     # scale is dominated by pool startup jitter; the sequential drain

@@ -15,8 +15,15 @@ from .ecdf import ColumnStats, TableStats
 from .engine import ColumnFamily, HREngine, Node, ReadReport, ReplicaHandle
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema, pack_columns, pack_tuple, unpack_key
+from .ring import Partition, TokenRing, place_replica
 from .storage import CommitLog, CompactionPolicy, LogRecord, Memtable, SortedRun
-from .table import ScanResult, SortedTable, slab_bounds_for, slab_bounds_many
+from .table import (
+    ScanResult,
+    SortedTable,
+    merge_partial_scans,
+    slab_bounds_for,
+    slab_bounds_many,
+)
 from .workload import Eq, Query, Range, Workload, random_workload
 
 __all__ = [
@@ -32,6 +39,9 @@ __all__ = [
     "Node",
     "ReadReport",
     "ReplicaHandle",
+    "Partition",
+    "TokenRing",
+    "place_replica",
     "HRCAResult",
     "exhaustive_search",
     "hrca",
@@ -47,6 +57,7 @@ __all__ = [
     "SortedRun",
     "ScanResult",
     "SortedTable",
+    "merge_partial_scans",
     "slab_bounds_for",
     "slab_bounds_many",
     "Eq",

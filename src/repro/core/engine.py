@@ -22,6 +22,24 @@ Nodes are simulated (this container is one host), but every byte of the
 data path is real: tables, scans, sorts and stats are actual arrays, so
 rows_scanned/latency numbers in benchmarks are measurements, not models.
 
+Token-ring partitioning (``create_column_family(partitions=P)``)
+----------------------------------------------------------------
+A production keyspace is split the way Cassandra's ring splits it
+(``repro.core.ring``): rows map to one of ``P`` contiguous token ranges
+of the canonical packed key space, and each partition owns a full
+heterogeneous replica set of just its rows, its own commit log,
+memtables and compaction policy. ``write`` routes rows to the owning
+partitions' logs; ``read_many`` scatters each query to the partitions
+its slab bounds intersect (pure host arithmetic against the ring's
+start tokens), executes per ``(partition, replica)`` group — device
+partitions via the fused Pallas launch — and gathers partial
+aggregates (sum/count add up; select indices concatenate into the
+global "partitions in ring order" index space). ``fail_node`` loses
+only the partition replicas the node hosted and ``recover_node``
+rebuilds each from its own partition log. ``P = 1`` (the default) is
+bit-identical to the unpartitioned engine — same placement, same
+routing draws, same results.
+
 Batched reads (``read_many``)
 -----------------------------
 Production traffic arrives in batches; ``read_many`` amortizes the
@@ -88,7 +106,6 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Mapping, Sequence
 
@@ -104,8 +121,9 @@ from .cost_model import (
 from .ecdf import TableStats
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema
+from .ring import Partition, ReplicaHandle, TokenRing, place_replica
 from .storage import CommitLog, CompactionPolicy, Memtable, compact_table
-from .table import ScanResult, SortedTable
+from .table import ScanResult, SortedTable, merge_partial_scans, slab_bounds_many
 from .workload import Query, Workload
 
 __all__ = ["Node", "ReplicaHandle", "ColumnFamily", "ReadReport", "HREngine"]
@@ -128,19 +146,29 @@ class Node:
 
 
 @dataclasses.dataclass
-class ReplicaHandle:
-    replica_id: int
-    layout: tuple[str, ...]
-    node_id: int
-
-
-@dataclasses.dataclass
 class ColumnFamily:
+    """One keyspace: a token ring over the canonical packed key space
+    and one :class:`repro.core.ring.Partition` per ring range, each
+    holding a full heterogeneous replica set of that range's rows with
+    its own commit log, memtables, compaction policy and round-robin
+    counter. ``slot_layouts`` (the HRCA/TR/explicit choice) is shared
+    by every partition — replica ``partition_id * RF + slot`` always
+    serializes in ``slot_layouts[slot]``. Stats and the cost model stay
+    column-family-global: selectivities describe the whole dataset, so
+    one cost matrix ranks every partition's replica set.
+
+    ``replicas``/``commitlog``/``memtables``/``compaction``/
+    ``rr_counter`` are flat compatibility views (the single-partition
+    forms every pre-ring caller used); code that routes per partition
+    goes through ``partitions`` directly."""
+
     name: str
     schema: KeySchema
     key_names: tuple[str, ...]
     value_names: tuple[str, ...]
-    replicas: list[ReplicaHandle]
+    slot_layouts: tuple[tuple[str, ...], ...]
+    ring: TokenRing
+    partitions: list[Partition]
     stats: TableStats
     cost_model: CostModel
     hrca_result: HRCAResult | None = None
@@ -148,15 +176,44 @@ class ColumnFamily:
     # through the batched Pallas scan, and every table produced by the
     # write/recovery paths is re-placed on device
     device_resident: bool = False
-    rr_counter: "itertools.count" = dataclasses.field(default_factory=itertools.count)
-    # durable write path: shared layout-agnostic commit log (record 0 =
-    # CREATE-time base), one memtable per replica, compaction policy for
-    # device run stacks, and the group-commit staging threshold (0 =
-    # write-through: every write flushes)
-    commitlog: CommitLog | None = None
-    memtables: dict[int, Memtable] = dataclasses.field(default_factory=dict)
-    compaction: CompactionPolicy | None = None
+    # group-commit staging threshold (0 = write-through: every write
+    # flushes); the per-partition durable state lives on ``partitions``
     memtable_rows: int = 0
+
+    @property
+    def replication_factor(self) -> int:
+        return len(self.slot_layouts)
+
+    @property
+    def replicas(self) -> list[ReplicaHandle]:
+        """All replica handles, flat in global-replica-id order
+        (partition-major, so index == ``replica_id``)."""
+        return [r for part in self.partitions for r in part.replicas]
+
+    @property
+    def commitlog(self) -> CommitLog | None:
+        """Partition 0's log — THE column-family log when P == 1."""
+        return self.partitions[0].commitlog
+
+    @property
+    def memtables(self) -> dict[int, Memtable]:
+        """Flat ``replica_id → Memtable`` view across partitions (read
+        the partitions directly to mutate)."""
+        return {
+            rid: mt for part in self.partitions for rid, mt in part.memtables.items()
+        }
+
+    @property
+    def compaction(self) -> CompactionPolicy | None:
+        return self.partitions[0].compaction
+
+    @property
+    def rr_counter(self) -> "itertools.count":
+        return self.partitions[0].rr_counter
+
+    @rr_counter.setter
+    def rr_counter(self, counter: "itertools.count") -> None:
+        self.partitions[0].rr_counter = counter
 
 
 @dataclasses.dataclass
@@ -181,6 +238,35 @@ def _tie_threshold(best_cost: float) -> float:
     fitted cost function goes negative (negative intercept): the tie
     set always contains the cheapest replica."""
     return best_cost + abs(best_cost) * 1e-9 + 1e-12
+
+
+def _schedule_picks(cost_mat: np.ndarray, counter) -> tuple[np.ndarray, np.ndarray]:
+    """Request Scheduler core, shared by the single-partition and
+    partitioned planners (one copy, so their routing semantics cannot
+    drift): per query (column of the ``(replicas, queries)`` cost
+    matrix) the within-tolerance ties are exactly the first tie_count
+    entries of the column's stable ascending order — the same tie list
+    a scalar ``read`` builds — and one round-robin draw is consumed per
+    query in batch order. Returns ``(order, picks)``: the stable cost
+    order and the picked replica row per query."""
+    order = np.argsort(cost_mat, axis=0, kind="stable")  # (R, Q)
+    sorted_costs = np.take_along_axis(cost_mat, order, axis=0)
+    thresh = _tie_threshold(sorted_costs[0])  # elementwise over queries
+    tie_counts = (sorted_costs <= thresh[None, :]).sum(axis=0)
+    n_q = cost_mat.shape[1]
+    draws = np.fromiter(
+        (next(counter) for _ in range(n_q)), dtype=np.int64, count=n_q
+    )
+    return order, order[draws % tie_counts, np.arange(n_q)]
+
+
+def _group_by_pick(picks: np.ndarray, qidx: list[int]) -> dict[int, list[int]]:
+    """Group global query indices (``qidx[j]`` is column ``j``'s) by
+    their picked replica row; one batched scan serves each group."""
+    groups: dict[int, list[int]] = {}
+    for j, qi in enumerate(qidx):
+        groups.setdefault(int(picks[j]), []).append(qi)
+    return groups
 
 
 class HREngine:
@@ -208,6 +294,7 @@ class HREngine:
         parallel_writes: bool = False,
         memtable_rows: int = 0,
         compaction: CompactionPolicy | None = None,
+        commitlog_checkpoint_records: int = 256,
     ) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
@@ -218,6 +305,11 @@ class HREngine:
             )
         if memtable_rows < 0:
             raise ValueError("memtable_rows must be >= 0 (0 = write-through)")
+        if commitlog_checkpoint_records < 0:
+            raise ValueError(
+                "commitlog_checkpoint_records must be >= 0 (0 = no "
+                "automatic checkpointing)"
+            )
         self.nodes = [Node(node_id=i) for i in range(n_nodes)]
         self.column_families: dict[str, ColumnFamily] = {}
         self._cache_enabled = result_cache
@@ -232,8 +324,14 @@ class HREngine:
         # write-path defaults inherited by create_column_family
         self.memtable_rows = memtable_rows
         self.compaction = compaction if compaction is not None else CompactionPolicy()
+        # auto-checkpoint trigger: collapse a partition's commit log
+        # after a flush once more than this many records accumulated
+        # since its last snapshot (0 disables; checkpoint_commitlog
+        # stays as the manual form)
+        self.commitlog_checkpoint_records = commitlog_checkpoint_records
         self._flushes = 0
         self._compactions = 0
+        self._auto_checkpoints = 0
         # cumulative seconds spent in memtable flushes (incl. the ones
         # a read barrier triggers, which are write-path cost and NOT
         # attributed to any ReadReport.wall_seconds)
@@ -263,7 +361,7 @@ class HREngine:
         """Operational counters: per-replica read result cache plus the
         durable write path (log records/rows, currently staged rows,
         memtable flushes and automatic compactions)."""
-        cfs = self.column_families.values()
+        parts = [p for cf in self.column_families.values() for p in cf.partitions]
         return {
             "result_cache_hits": self._cache_hits,
             "result_cache_misses": self._cache_misses,
@@ -271,14 +369,16 @@ class HREngine:
                 len(c) for c in self._result_cache.values()
             ),
             "result_cache_select_bytes": sum(self._cache_sel_bytes.values()),
+            "partitions": len(parts),
             "commitlog_records": sum(
-                len(cf.commitlog) for cf in cfs if cf.commitlog is not None
+                len(p.commitlog) for p in parts if p.commitlog is not None
             ),
             "commitlog_rows": sum(
-                cf.commitlog.n_rows for cf in cfs if cf.commitlog is not None
+                p.commitlog.n_rows for p in parts if p.commitlog is not None
             ),
+            "commitlog_auto_checkpoints": self._auto_checkpoints,
             "staged_rows": sum(
-                mt.n_staged for cf in cfs for mt in cf.memtables.values()
+                mt.n_staged for p in parts for mt in p.memtables.values()
             ),
             "memtable_flushes": self._flushes,
             "compactions": self._compactions,
@@ -318,7 +418,11 @@ class HREngine:
         selected-array bytes: workloads of all-distinct (select)
         queries must not grow memory without bound."""
         nb = 0 if result.selected is None else int(result.selected.nbytes)
-        if nb > self._CACHE_MAX_SELECT_BYTES:
+        if nb > self._CACHE_MAX_SELECT_BYTES or nb > self._CACHE_MAX_MAP_BYTES:
+            # uncacheable either way: over the per-entry cap, or (only
+            # reachable when the budgets are tuned so a single entry can
+            # exceed the whole map budget) it would leave the map over
+            # budget even after the eviction loop emptied it
             return
         if result.selected is not None:
             result.selected.setflags(write=False)
@@ -355,14 +459,16 @@ class HREngine:
 
     def _place(self, replica_id: int, cf_name: str) -> int:
         """Replica placement hash(replica_id, cf) → node. Successive
-        replicas land on distinct nodes when possible (Cassandra ring).
+        replicas land on distinct nodes when possible (Cassandra ring);
+        with global replica ids (``partition_id * RF + slot``)
+        successive partitions stagger around the node ring too.
 
-        Uses crc32, not ``hash``: the builtin is salted per process
-        (PYTHONHASHSEED), which made placement — and every benchmark
-        downstream of it — differ between runs.
+        Delegates to ``repro.core.ring.place_replica`` — crc32, not
+        ``hash``: the builtin is salted per process (PYTHONHASHSEED),
+        which made placement — and every benchmark downstream of it —
+        differ between runs.
         """
-        h = zlib.crc32(cf_name.encode("utf-8")) % len(self.nodes)
-        return (h + replica_id) % len(self.nodes)
+        return place_replica(cf_name, replica_id, len(self.nodes))
 
     def create_column_family(
         self,
@@ -380,6 +486,7 @@ class HREngine:
         device_resident: bool = False,
         memtable_rows: int | None = None,
         compaction: CompactionPolicy | None = None,
+        partitions: int = 1,
     ) -> ColumnFamily:
         """CREATE COLUMN FAMILY: choose replica structures, build tables.
 
@@ -406,6 +513,16 @@ class HREngine:
         tune its thresholds. The CREATE-time dataset is committed as
         record 0 of the column family's shared commit log, so replaying
         the log alone rebuilds any replica.
+
+        ``partitions`` splits the keyspace Cassandra-style: a token
+        ring over the canonical packed key range assigns every row to
+        one of ``P`` contiguous token ranges, each owning a full
+        heterogeneous replica set of just its rows, its own commit log,
+        memtables and compaction policy (``repro.core.ring``). Reads
+        scatter over the partitions a query's slab can touch and gather
+        partial aggregates on the host; writes route rows to the owning
+        partitions' logs. ``partitions=1`` (default) is bit-identical
+        to the unpartitioned engine.
         """
         if name in self.column_families:
             raise ValueError(f"column family {name!r} exists")
@@ -437,33 +554,63 @@ class HREngine:
             raise ValueError(f"unknown mechanism {mechanism!r}")
 
         value_names = tuple(value_cols)
-        replicas = []
-        memtables: dict[int, Memtable] = {}
-        for rid, layout in enumerate(chosen):
-            table = SortedTable.from_columns(key_cols, value_cols, layout, schema)
-            if device_resident:
-                table.place_on_device()
-            node_id = self._place(rid, name)
-            self.nodes[node_id].tables[(name, rid)] = table
-            replicas.append(ReplicaHandle(rid, tuple(layout), node_id))
-            memtables[rid] = Memtable(layout, schema, key_names, value_names)
-
-        log = CommitLog(key_names=key_names, value_names=value_names)
-        log.append(key_cols, value_cols)  # record 0: the base dataset
+        policy = compaction if compaction is not None else self.compaction
+        ring = TokenRing.build(schema, key_names, partitions)
+        if partitions == 1:
+            owner_masks = [None]  # whole dataset, no slicing copies
+        else:
+            tokens = ring.tokens(
+                {c: np.asarray(key_cols[c]) for c in key_names}, schema
+            )
+            pids = ring.partition_of_tokens(tokens)
+            owner_masks = [pids == pid for pid in range(partitions)]
+        parts: list[Partition] = []
+        for pid, mask in enumerate(owner_masks):
+            if mask is None:
+                kc_p, vc_p = key_cols, value_cols
+            else:
+                kc_p = {c: np.asarray(key_cols[c])[mask] for c in key_names}
+                vc_p = {c: np.asarray(value_cols[c])[mask] for c in value_names}
+            handles: list[ReplicaHandle] = []
+            memtables: dict[int, Memtable] = {}
+            for slot, layout in enumerate(chosen):
+                rid = pid * n + slot
+                table = SortedTable.from_columns(kc_p, vc_p, layout, schema)
+                if device_resident:
+                    table.place_on_device()
+                node_id = self._place(rid, name)
+                self.nodes[node_id].tables[(name, rid)] = table
+                handles.append(
+                    ReplicaHandle(rid, tuple(layout), node_id, partition_id=pid)
+                )
+                memtables[rid] = Memtable(layout, schema, key_names, value_names)
+            log = CommitLog(key_names=key_names, value_names=value_names)
+            log.append(kc_p, vc_p)  # record 0: the rows this partition owns
+            lo, hi = ring.token_range(pid)
+            parts.append(
+                Partition(
+                    partition_id=pid,
+                    token_lo=lo,
+                    token_hi=hi,
+                    replicas=handles,
+                    commitlog=log,
+                    memtables=memtables,
+                    compaction=policy,
+                )
+            )
 
         cf = ColumnFamily(
             name=name,
             schema=schema,
             key_names=key_names,
             value_names=value_names,
-            replicas=replicas,
+            slot_layouts=tuple(tuple(a) for a in chosen),
+            ring=ring,
+            partitions=parts,
             stats=stats,
             cost_model=model,
             hrca_result=hrca_result,
             device_resident=device_resident,
-            commitlog=log,
-            memtables=memtables,
-            compaction=compaction if compaction is not None else self.compaction,
             memtable_rows=(
                 self.memtable_rows if memtable_rows is None else memtable_rows
             ),
@@ -541,8 +688,16 @@ class HREngine:
         (load balance). With ``hedge=True`` a read landing on a straggler
         node (slowdown > hedge_ratio) is duplicated on the next-cheapest
         replica on a *different* node; the faster copy wins.
+
+        On a partitioned column family (``partitions > 1``) the scalar
+        read runs the batched scatter-gather planner at Q = 1, so
+        sequential and batched reads stay identical by construction.
         """
         cf = self.column_families[cf_name]
+        if cf.ring.n_partitions > 1:
+            return self._read_many_partitioned(
+                cf, [query], hedge=hedge, hedge_ratio=hedge_ratio
+            )[0]
         ranked = self._ranked_replicas(cf, query)
         best_cost = ranked[0][0]
         ties = [t for t in ranked if t[0] <= _tie_threshold(best_cost)]
@@ -578,6 +733,10 @@ class HREngine:
         queries = list(queries)
         if not queries:
             return []
+        if cf.ring.n_partitions > 1:
+            return self._read_many_partitioned(
+                cf, queries, hedge=hedge, hedge_ratio=hedge_ratio
+            )
         live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
         if not live:
             raise RuntimeError(f"no live replica for {cf_name!r}")
@@ -597,27 +756,14 @@ class HREngine:
             ]
         )
 
-        # Request Scheduler: per-query cheapest replica, RR tie-break.
-        # Sorted ascending, the within-tolerance ties are exactly the
-        # first tie_count entries of each column's stable order — the
-        # same tie list ``read`` builds. One rr_counter draw per query,
-        # in batch order, so a batch matches a sequential read loop.
-        order_mat = np.argsort(cost_mat, axis=0, kind="stable")  # (R, Q)
-        sorted_costs = np.take_along_axis(cost_mat, order_mat, axis=0)
-        thresh = _tie_threshold(sorted_costs[0])  # elementwise over queries
-        tie_counts = (sorted_costs <= thresh[None, :]).sum(axis=0)
-        draws = np.fromiter(
-            (next(cf.rr_counter) for _ in range(n_q)), dtype=np.int64, count=n_q
-        )
-        picks = order_mat[draws % tie_counts, np.arange(n_q)]
-
-        # group queries by chosen replica; one batched scan per group
-        groups: dict[int, list[int]] = {}
-        for qi in range(n_q):
-            groups.setdefault(int(picks[qi]), []).append(qi)
+        # Request Scheduler: per-query cheapest replica, RR tie-break
+        # (one draw per query in batch order, so a batch matches a
+        # sequential read loop); then one batched scan per chosen group
+        order_mat, picks = _schedule_picks(cost_mat, cf.rr_counter)
+        all_q = list(range(n_q))
         results: list[ScanResult | None] = [None] * n_q
         reports: list[ReadReport | None] = [None] * n_q
-        for k, qidx in groups.items():
+        for k, qidx in _group_by_pick(picks, all_q).items():
             self._execute_group(
                 cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
                 results, reports, hedged=False,
@@ -626,22 +772,9 @@ class HREngine:
         if hedge and len(live) > 1:
             # duplicate straggler-bound queries onto the next-cheapest
             # replica on a different node (same alternate ``read`` picks)
-            hedge_groups: dict[int, list[int]] = {}
-            for qi in range(n_q):
-                pick_node = live[int(picks[qi])].node_id
-                if self.nodes[pick_node].slowdown <= hedge_ratio:
-                    continue
-                alt = next(
-                    (
-                        int(k)
-                        for k in order_mat[:, qi]
-                        if live[int(k)].node_id != pick_node
-                    ),
-                    -1,
-                )
-                if alt >= 0:
-                    hedge_groups.setdefault(alt, []).append(qi)
-            for k, qidx in hedge_groups.items():
+            for k, qidx in self._hedge_groups(
+                live, order_mat, picks, all_q, hedge_ratio
+            ).items():
                 self._execute_group(
                     cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
                     results, reports, hedged=True,
@@ -711,6 +844,162 @@ class HREngine:
                 hedged=hedged,
             )
 
+    def _hedge_groups(
+        self,
+        live: list[ReplicaHandle],
+        order: np.ndarray,
+        picks: np.ndarray,
+        qidx: list[int],
+        hedge_ratio: float,
+    ) -> dict[int, list[int]]:
+        """Queries whose picked node is a straggler (slowdown >
+        ``hedge_ratio``), grouped by the next-cheapest replica on a
+        *different* node — the same alternate a scalar ``read`` hedges
+        to. Shared by both planners; ``qidx[j]`` is the global query
+        index of scheduler column ``j``."""
+        groups: dict[int, list[int]] = {}
+        for j, qi in enumerate(qidx):
+            pick_node = live[int(picks[j])].node_id
+            if self.nodes[pick_node].slowdown <= hedge_ratio:
+                continue
+            alt = next(
+                (int(k) for k in order[:, j] if live[int(k)].node_id != pick_node),
+                -1,
+            )
+            if alt >= 0:
+                groups.setdefault(alt, []).append(qi)
+        return groups
+
+    # -- partitioned scatter-gather read path ---------------------------------
+
+    def _partition_row_offsets(self, cf: ColumnFamily) -> np.ndarray:
+        """Global row offset of each partition in the cross-partition
+        select index space (partitions concatenated in ring order).
+        Built from the partition logs' row counts — append-only system,
+        so log rows == table rows for any fully-flushed live replica —
+        which keeps the offsets independent of staging state."""
+        rows = np.array(
+            [part.n_rows_committed for part in cf.partitions], dtype=np.int64
+        )
+        offsets = np.zeros(len(rows), dtype=np.int64)
+        np.cumsum(rows[:-1], out=offsets[1:])
+        return offsets
+
+    def _read_many_partitioned(
+        self,
+        cf: ColumnFamily,
+        queries: list[Query],
+        *,
+        hedge: bool,
+        hedge_ratio: float,
+    ) -> list[tuple[ScanResult, ReadReport]]:
+        """Scatter-gather ``read_many`` over a partitioned column family.
+
+        **Scatter** (host, pure arithmetic): each query's canonical slab
+        bounds — the ``slab_bounds_many`` walk over ``key_names``, the
+        same packing the ring's tokens use — are intersected with the
+        ring's contiguous token ranges, giving a contiguous partition
+        span per query (an equality filter on the leading canonical key
+        pins one partition; an open scan fans out to all). Per touched
+        partition the Cost Evaluator ranks that partition's *live*
+        replicas with the CF-global cost matrix (stats describe the
+        whole dataset, so the matrix is shared), the RR tie-break draws
+        from the partition's own counter, and each ``(partition,
+        replica)`` group runs the ordinary grouped execution — device-
+        resident partitions answer with the fused locate+scan launch,
+        and the per-replica result cache applies per partition replica.
+
+        **Gather** (host): per query, sum/count partial aggregates add
+        up across its partitions in ring order, and select indices
+        concatenate after each partition's local row indices (already
+        host-ordered via the table's ``row_map``) are offset into the
+        global index space — partitions in ring order, each in its
+        chosen replica's serialization order (``merge_partial_scans``).
+        The merged report carries the first touched partition's routing
+        choice and the summed wall/rows_scanned.
+        """
+        n_q = len(queries)
+        ring = cf.ring
+        bounds = slab_bounds_many(queries, cf.key_names, cf.schema)
+        p_lo, p_hi = ring.span_partitions(bounds)
+
+        # CF-global cost matrix over the replica slots, shared by every
+        # partition (same vectorized Eq 1-2 as the single-partition path)
+        pre = precompute_query_stats(cf.stats, queries, cf.key_names)
+        rows_mat = np.stack(
+            [
+                estimate_rows_many(cf.stats, layout, queries, pre)
+                for layout in cf.slot_layouts
+            ]
+        )
+        cost_mat = np.stack(
+            [
+                cf.cost_model.cost_fn(len(layout)).many(rows_mat[s])
+                for s, layout in enumerate(cf.slot_layouts)
+            ]
+        )
+
+        touched: dict[int, list[int]] = {}
+        for qi in range(n_q):
+            for pid in range(int(p_lo[qi]), int(p_hi[qi]) + 1):
+                touched.setdefault(pid, []).append(qi)
+
+        rf = cf.replication_factor
+        partials: dict[int, tuple[list, list]] = {}
+        for pid in sorted(touched):
+            part = cf.partitions[pid]
+            qidx = touched[pid]
+            live = [r for r in part.replicas if self.nodes[r.node_id].alive]
+            if not live:
+                raise RuntimeError(
+                    f"no live replica for partition {pid} of {cf.name!r}"
+                )
+            slots = [r.replica_id - pid * rf for r in live]
+            sub_cost = cost_mat[np.asarray(slots)][:, qidx]  # (live, group)
+            order, picks = _schedule_picks(sub_cost, part.rr_counter)
+
+            res_p: list[ScanResult | None] = [None] * n_q
+            rep_p: list[ReadReport | None] = [None] * n_q
+            for k, sub in _group_by_pick(picks, qidx).items():
+                self._execute_group(
+                    cf, live[k], sub, queries, rows_mat[slots[k]],
+                    cost_mat[slots[k]], res_p, rep_p, hedged=False,
+                )
+            if hedge and len(live) > 1:
+                for k, sub in self._hedge_groups(
+                    live, order, picks, qidx, hedge_ratio
+                ).items():
+                    self._execute_group(
+                        cf, live[k], sub, queries, rows_mat[slots[k]],
+                        cost_mat[slots[k]], res_p, rep_p, hedged=True,
+                    )
+            partials[pid] = (res_p, rep_p)
+
+        # gather: merge each query's per-partition partials in ring order
+        offsets = self._partition_row_offsets(cf)
+        out: list[tuple[ScanResult, ReadReport]] = []
+        for qi in range(n_q):
+            pids = range(int(p_lo[qi]), int(p_hi[qi]) + 1)
+            scans = [(partials[pid][0][qi], int(offsets[pid])) for pid in pids]
+            reps: list[ReadReport] = [partials[pid][1][qi] for pid in pids]
+            merged = merge_partial_scans(scans, queries[qi].agg)
+            first = reps[0]
+            out.append(
+                (
+                    merged,
+                    ReadReport(
+                        replica_id=first.replica_id,
+                        node_id=first.node_id,
+                        estimated_rows=first.estimated_rows,
+                        estimated_cost=first.estimated_cost,
+                        wall_seconds=sum(r.wall_seconds for r in reps),
+                        rows_scanned=merged.rows_scanned,
+                        hedged=any(r.hedged for r in reps),
+                    ),
+                )
+            )
+        return out
+
     # -- Write Scheduler (commit log → memtable → sorted runs) ----------------
 
     def write(
@@ -748,26 +1037,57 @@ class HREngine:
         run to the replica's resident arrays and the column family's
         ``CompactionPolicy`` collapses the run stack on device once it
         outgrows the base — nothing is re-uploaded either way.
+
+        On a partitioned column family the batch is first split by the
+        token ring (one vectorized pack + partition lookup): each owning
+        partition's sub-batch becomes one record in *that partition's*
+        commit log and stages into that partition's live replicas only —
+        a node hosting no replica of a row's partition never sees the
+        row.
         """
         cf = self.column_families[cf_name]
         if parallel is None:
             parallel = self.parallel_writes
         t0 = time.perf_counter()
-        cf.commitlog.append(key_cols, value_cols)
-        rec = cf.commitlog.tail
+        if cf.ring.n_partitions == 1:
+            routed = [(cf.partitions[0], key_cols, value_cols)]
+        else:
+            kc_arr = {c: np.asarray(key_cols[c]) for c in cf.key_names}
+            pids = cf.ring.partition_of_tokens(cf.ring.tokens(kc_arr, cf.schema))
+            routed = []
+            for pid in np.unique(pids):
+                mask = pids == pid
+                routed.append(
+                    (
+                        cf.partitions[int(pid)],
+                        {c: kc_arr[c][mask] for c in cf.key_names},
+                        {
+                            c: np.asarray(value_cols[c])[mask]
+                            for c in cf.value_names
+                        },
+                    )
+                )
         # missed writes on dead nodes are repaired by Recovery (the log
         # has every record; dead replicas neither stage nor flush). The
         # record's columns are the log's own immutable copies, so every
         # memtable stages them by reference — one copy per write, not RF
-        live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
-        for r in live:
-            cf.memtables[r.replica_id].stage(
-                rec.key_cols, rec.value_cols, copy=False
-            )
+        for part, kc_p, vc_p in routed:
+            part.commitlog.append(kc_p, vc_p)
+            rec = part.commitlog.tail
+            for r in part.replicas:
+                if self.nodes[r.node_id].alive:
+                    part.memtables[r.replica_id].stage(
+                        rec.key_cols, rec.value_cols, copy=False
+                    )
         cf.stats.merge_rows(key_cols, device=cf.device_resident)
+        # the threshold check spans ALL live replicas, not just this
+        # write's routed partitions: rows staged earlier in a partition
+        # the current key mix never touches again must still flush once
+        # over the group-commit threshold
+        live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
         if flush is None:
             flush = cf.memtable_rows <= 0 or any(
-                cf.memtables[r.replica_id].n_staged >= cf.memtable_rows
+                self._memtable(cf, r).n_staged >= cf.memtable_rows
                 for r in live
             )
         if flush:
@@ -785,7 +1105,7 @@ class HREngine:
         pending = [
             r
             for r in replicas
-            if self.nodes[r.node_id].alive and cf.memtables[r.replica_id].n_staged
+            if self.nodes[r.node_id].alive and self._memtable(cf, r).n_staged
         ]
         if not pending:
             return
@@ -796,7 +1116,7 @@ class HREngine:
             # merged table is installed below, so an exception here (or
             # in a sibling thread) never loses committed rows — the
             # staged buffers and the old table both survive a retry
-            run = cf.memtables[r.replica_id].peek_run()
+            run = self._memtable(cf, r).peek_run()
             table = self.nodes[r.node_id].tables[(cf.name, r.replica_id)]
             return r, table.merge_run(run)
 
@@ -808,17 +1128,38 @@ class HREngine:
             if cf.device_resident and not merged.device_resident:
                 merged.place_on_device()
             self.nodes[r.node_id].tables[(cf.name, r.replica_id)] = merged
-            cf.memtables[r.replica_id].clear()
+            self._memtable(cf, r).clear()
             self._flushes += 1
             self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
-            if cf.compaction is not None and compact_table(merged, cf.compaction):
+            policy = cf.partitions[r.partition_id].compaction
+            if policy is not None and compact_table(merged, policy):
                 self._compactions += 1
                 self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
+        # count-based auto-checkpoint: once a flushed partition's log
+        # has accumulated more than the engine's record threshold since
+        # its last snapshot AND the partition is fully drained (every
+        # replica flushed through the tail — the documented safety
+        # condition of CommitLog.checkpoint), collapse its history
+        k = self.commitlog_checkpoint_records
+        if k:
+            for pid in sorted({r.partition_id for r, _ in merged_tables}):
+                part = cf.partitions[pid]
+                log = part.commitlog
+                if (
+                    log is not None
+                    and log.should_checkpoint(k)
+                    and not any(mt.n_staged for mt in part.memtables.values())
+                ):
+                    log.checkpoint()
+                    self._auto_checkpoints += 1
         self._flush_wall += time.perf_counter() - t0
+
+    def _memtable(self, cf: ColumnFamily, r: ReplicaHandle) -> Memtable:
+        return cf.partitions[r.partition_id].memtables[r.replica_id]
 
     def _ensure_flushed(self, cf: ColumnFamily, r: ReplicaHandle) -> None:
         """Flush one replica's pending staged rows (read barrier)."""
-        mt = cf.memtables.get(r.replica_id)
+        mt = cf.partitions[r.partition_id].memtables.get(r.replica_id)
         if mt is not None and mt.n_staged:
             self._flush_replicas(cf, [r])
 
@@ -831,48 +1172,62 @@ class HREngine:
         self._flush_replicas(cf, live, parallel=parallel)
 
     def checkpoint_commitlog(self, cf_name: str) -> int:
-        """Collapse the column family's commit log into one snapshot
+        """Collapse every partition's commit log into one snapshot
         record, bounding log memory and replay-recovery cost at
         O(current rows) instead of O(rows ever written). Flushes every
         live replica first so no record still backs staged-only rows;
         log-replay recovery is unchanged (the snapshot replays to the
-        identical dataset). Returns the snapshot's LSN."""
+        identical dataset). Returns the highest snapshot LSN (the only
+        one when ``partitions == 1``). The count-based automatic
+        trigger (``commitlog_checkpoint_records``) fires the same
+        collapse per partition after a flush."""
         cf = self.column_families[cf_name]
         self.flush_memtables(cf_name)
-        return cf.commitlog.checkpoint()
+        return max(part.commitlog.checkpoint() for part in cf.partitions)
 
     # -- Recovery ----------------------------------------------------------------
 
     def fail_node(self, node_id: int) -> None:
+        """Node loss: the node's disk (every partition replica it
+        hosted, across all column families) and memtables are gone;
+        partitions the node held no replica of are untouched. The
+        per-partition commit logs are the durable copy."""
         node = self.nodes[node_id]
         node.alive = False
         node.tables = {}  # disk lost
         for cf_name, cf in self.column_families.items():
-            for r in cf.replicas:
-                if r.node_id == node_id and r.replica_id in cf.memtables:
-                    # the memtable dies with its node; the commit log is
-                    # the durable copy every staged row replays from
-                    cf.memtables[r.replica_id].clear()
+            for part in cf.partitions:
+                for r in part.replicas:
+                    if r.node_id == node_id and r.replica_id in part.memtables:
+                        # the memtable dies with its node; the commit log
+                        # is the durable copy every staged row replays from
+                        part.memtables[r.replica_id].clear()
             self._invalidate_result_cache(cf_name, node_id=node_id)
 
     def recover_node(self, node_id: int, *, source: str = "log") -> float:
         """Rebuild every replica the node hosted, in that replica's own
         heterogeneous layout. Returns wall seconds (§5.4 bench).
 
-        ``source="log"`` (default) replays the column family's shared
-        commit log: the layout-agnostic record stream — base dataset
-        plus every committed write, including ones the dead node missed
-        and rows that were staged-but-unflushed anywhere when the node
-        died — is sorted into the lost replica's layout. The result is
-        the same dataset and serialization the surviving-peer path
-        produces (bit-identical packed keys and key columns; value
-        columns too whenever composite keys are unique — the tie order
-        among duplicate full keys is the only degree of freedom).
+        Recovery is partition-aware: only the partition replicas the
+        node actually hosted are rebuilt, each from *its own
+        partition's* state — the other partitions (and their logs) are
+        never touched.
+
+        ``source="log"`` (default) replays the owning partition's
+        commit log: the layout-agnostic record stream — that
+        partition's base rows plus every committed write it owns,
+        including ones the dead node missed and rows that were
+        staged-but-unflushed anywhere when the node died — is sorted
+        into the lost replica's layout. The result is the same dataset
+        and serialization the surviving-peer path produces
+        (bit-identical packed keys and key columns; value columns too
+        whenever composite keys are unique — the tie order among
+        duplicate full keys is the only degree of freedom).
 
         ``source="survivor"`` keeps the original path: stream a
-        surviving replica of the same column family and re-sort it
-        (same dataset, different serialization). It is also the
-        fallback for column families without a commit log.
+        surviving replica of the same partition and re-sort it (same
+        row slice, different serialization). It is also the fallback
+        for partitions without a commit log.
         """
         if source not in ("log", "survivor"):
             raise ValueError(f"unknown recovery source {source!r}")
@@ -882,45 +1237,54 @@ class HREngine:
         for cf_name in self.column_families:
             self._invalidate_result_cache(cf_name, node_id=node_id)
         for cf in self.column_families.values():
-            for r in cf.replicas:
-                if r.node_id != node_id:
-                    continue
-                if source == "log" and cf.commitlog is not None and len(cf.commitlog):
-                    kc, vc = cf.commitlog.replay_columns()
-                    rebuilt = SortedTable.from_columns(kc, vc, r.layout, cf.schema)
-                else:
-                    survivor = next(
-                        (
-                            s
-                            for s in cf.replicas
-                            if s.replica_id != r.replica_id
-                            and self.nodes[s.node_id].alive
-                            and (cf.name, s.replica_id) in self.nodes[s.node_id].tables
-                        ),
-                        None,
-                    )
-                    if survivor is None:
-                        raise RuntimeError(
-                            f"data loss: no survivor for {cf.name!r} "
-                            f"replica {r.replica_id}"
+            for part in cf.partitions:
+                for r in part.replicas:
+                    if r.node_id != node_id:
+                        continue
+                    log = part.commitlog
+                    if source == "log" and log is not None and len(log):
+                        kc, vc = log.replay_columns()
+                        rebuilt = SortedTable.from_columns(
+                            kc, vc, r.layout, cf.schema
                         )
-                    self._ensure_flushed(cf, survivor)  # staged rows too
-                    src = self.nodes[survivor.node_id].tables[
-                        (cf.name, survivor.replica_id)
-                    ]
-                    rebuilt = src.resorted(r.layout)
-                if cf.device_resident:
-                    rebuilt.place_on_device()
-                node.tables[(cf.name, r.replica_id)] = rebuilt
-                # fresh memtable: a log rebuild is fully flushed state
-                cf.memtables[r.replica_id] = Memtable(
-                    r.layout, cf.schema, cf.key_names, cf.value_names
-                )
+                    else:
+                        survivor = next(
+                            (
+                                s
+                                for s in part.replicas
+                                if s.replica_id != r.replica_id
+                                and self.nodes[s.node_id].alive
+                                and (cf.name, s.replica_id)
+                                in self.nodes[s.node_id].tables
+                            ),
+                            None,
+                        )
+                        if survivor is None:
+                            raise RuntimeError(
+                                f"data loss: no survivor for {cf.name!r} "
+                                f"partition {part.partition_id} replica "
+                                f"{r.replica_id}"
+                            )
+                        self._ensure_flushed(cf, survivor)  # staged rows too
+                        src = self.nodes[survivor.node_id].tables[
+                            (cf.name, survivor.replica_id)
+                        ]
+                        rebuilt = src.resorted(r.layout)
+                    if cf.device_resident:
+                        rebuilt.place_on_device()
+                    node.tables[(cf.name, r.replica_id)] = rebuilt
+                    # fresh memtable: a log rebuild is fully flushed state
+                    part.memtables[r.replica_id] = Memtable(
+                        r.layout, cf.schema, cf.key_names, cf.value_names
+                    )
         return time.perf_counter() - t0
 
     # -- introspection -------------------------------------------------------------
 
     def layouts(self, cf_name: str) -> tuple[tuple[str, ...], ...]:
+        """Per-replica layouts, flat in global replica-id order (every
+        partition serializes slot ``s`` as ``slot_layouts[s]``, so a
+        P-partition CF repeats the RF slot layouts P times)."""
         return tuple(r.layout for r in self.column_families[cf_name].replicas)
 
     def total_bytes(self) -> int:

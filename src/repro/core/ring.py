@@ -1,0 +1,186 @@
+"""Token-ring partitioning — Cassandra's ring, order-preserving form.
+
+A production keyspace does not fit one replica set: Cassandra assigns
+every row a *token* and splits the token space into contiguous ranges,
+each owned by its own replica group, so reads and writes fan out and a
+node holds only a slice of the dataset. This module reproduces that for
+the heterogeneous-replica engine:
+
+* The **token** of a row is its composite key packed in *canonical*
+  order (``key_names`` as declared at CREATE — never a replica layout,
+  which differs per replica). Packing is order-preserving
+  (``keys.pack_columns``), so this is Cassandra's
+  ByteOrderedPartitioner rather than the hash partitioner: token ranges
+  are key ranges, which is what lets a query's slab bounds be
+  intersected with the ring by pure host arithmetic (no hashing a
+  range — see :meth:`TokenRing.span_partitions`).
+* The ring splits ``[0, 2**total_bits)`` into ``P`` near-equal
+  contiguous ranges (:meth:`TokenRing.build`). A row belongs to exactly
+  one partition regardless of which replica serialization it lands in.
+* Each :class:`Partition` owns a full heterogeneous replica set (one
+  table per layout), its own commit log, its own memtables and its own
+  compaction policy — the engine's write/flush/recovery machinery runs
+  per partition, and a node failure costs only the partition replicas
+  that node hosted.
+* Placement onto nodes uses the same deterministic crc32 scheme as
+  ``HREngine._place`` (:func:`place_replica` — the engine delegates to
+  it): replica ids are global across partitions
+  (``partition_id * RF + slot``), so partition 0 of a ``P = 1`` column
+  family places exactly where the unpartitioned engine always did.
+
+Query planning (the scatter half of scatter-gather ``read_many``):
+``slab_bounds_many(queries, key_names, schema)`` gives each query's
+canonical packed slab ``[lo, hi]`` (componentwise filter bounds imply
+packed bounds, since the fields occupy disjoint bit ranges), and the
+partitions a query can touch are exactly the contiguous ring ranges
+intersecting it — two vectorized ``searchsorted`` calls over the ring's
+start tokens, the same pure-arithmetic style as the slab walk itself.
+An equality filter on the leading canonical key pins the query to a
+single partition (Cassandra's partition-key point read); an open query
+fans out to all ``P``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import zlib
+from typing import TYPE_CHECKING, Mapping, Sequence
+
+import numpy as np
+
+from .keys import KeySchema, pack_columns
+
+if TYPE_CHECKING:  # imported for annotations only; storage never imports us
+    from .storage import CommitLog, CompactionPolicy, Memtable
+
+__all__ = ["TokenRing", "Partition", "ReplicaHandle", "place_replica"]
+
+
+def place_replica(cf_name: str, replica_id: int, n_nodes: int) -> int:
+    """Deterministic replica placement ``hash(cf, replica) → node``.
+
+    crc32, not the builtin ``hash`` (salted per process), so placement
+    is a pure function of the name and cluster size. Successive replica
+    ids land on distinct nodes when possible; with global replica ids
+    (``partition_id * RF + slot``) successive *partitions* stagger
+    around the ring too. ``HREngine._place`` delegates here, so ring
+    placement and engine placement can never drift apart.
+    """
+    h = zlib.crc32(cf_name.encode("utf-8")) % n_nodes
+    return (h + replica_id) % n_nodes
+
+
+@dataclasses.dataclass
+class ReplicaHandle:
+    """One replica of one partition: a heterogeneous serialization of
+    that partition's row slice, hosted on ``node_id``. ``replica_id``
+    is global across the column family (``partition_id * RF + slot``)
+    — node table keys and result-cache keys stay flat."""
+
+    replica_id: int
+    layout: tuple[str, ...]
+    node_id: int
+    partition_id: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenRing:
+    """Order-preserving token ring over the canonical packed key space.
+
+    ``starts[p]`` is the first token partition ``p`` owns; partition
+    ``p`` owns ``[starts[p], starts[p+1])`` (the last runs to
+    ``2**total_bits``). Start tokens are built once at CREATE and are
+    immutable — routing must be a pure function or replicas disagree
+    about row ownership.
+    """
+
+    key_names: tuple[str, ...]
+    total_bits: int
+    starts: tuple[int, ...]
+
+    @classmethod
+    def build(
+        cls, schema: KeySchema, key_names: Sequence[str], n_partitions: int = 1
+    ) -> "TokenRing":
+        """Split the canonical packed key space into ``n_partitions``
+        near-equal contiguous token ranges."""
+        key_names = tuple(key_names)
+        schema.check_layout(key_names)
+        total_bits = schema.total_bits(key_names)
+        space = 1 << total_bits
+        if not 1 <= n_partitions <= space:
+            raise ValueError(
+                f"partitions must be in [1, {space}] for a {total_bits}-bit "
+                f"key space, got {n_partitions}"
+            )
+        starts = tuple((space * p) // n_partitions for p in range(n_partitions))
+        return cls(key_names=key_names, total_bits=total_bits, starts=starts)
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.starts)
+
+    def token_range(self, partition_id: int) -> tuple[int, int]:
+        """Inclusive ``[lo, hi]`` token range owned by a partition."""
+        lo = self.starts[partition_id]
+        if partition_id + 1 < len(self.starts):
+            return lo, self.starts[partition_id + 1] - 1
+        return lo, (1 << self.total_bits) - 1
+
+    def tokens(
+        self, key_cols: Mapping[str, np.ndarray], schema: KeySchema
+    ) -> np.ndarray:
+        """Row tokens: the composite keys packed in canonical order."""
+        return pack_columns(key_cols, self.key_names, schema)
+
+    def partition_of_tokens(self, tokens: np.ndarray) -> np.ndarray:
+        """Owning partition id per token (vectorized)."""
+        starts = np.asarray(self.starts, dtype=np.int64)
+        return np.searchsorted(starts, tokens, side="right") - 1
+
+    def span_partitions(self, bounds: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Partition id span ``[p_lo, p_hi]`` (inclusive) per query from
+        canonical packed slab bounds ``int64[Q, 2]`` (inclusive ``hi``,
+        the ``slab_bounds_many(queries, key_names, schema)`` output).
+
+        Every row matching a query satisfies the query's componentwise
+        filter bounds, so its canonical token lies inside the slab — a
+        partition outside the span cannot hold a matching row, and the
+        partitions inside it apply the full residual filters themselves
+        (visiting an over-approximated partition is harmless). A query
+        with a degenerate (empty) slab (``hi < lo``) is clamped to its
+        home partition so it still executes (and returns zero rows)
+        somewhere — mirroring the scalar empty-slab behavior.
+        """
+        starts = np.asarray(self.starts, dtype=np.int64)
+        p_lo = np.searchsorted(starts, bounds[:, 0], side="right") - 1
+        p_hi = np.searchsorted(starts, bounds[:, 1], side="right") - 1
+        return p_lo, np.maximum(p_hi, p_lo)
+
+
+@dataclasses.dataclass
+class Partition:
+    """One token range's full storage state: the heterogeneous replica
+    set over its row slice, the slice's own commit log (record 0 = the
+    CREATE-time rows this partition owns), per-replica memtables, the
+    compaction policy bounding its device run stacks, and the
+    round-robin tie-break counter for its replica set (each partition
+    load-balances independently)."""
+
+    partition_id: int
+    token_lo: int
+    token_hi: int
+    replicas: list[ReplicaHandle]
+    commitlog: "CommitLog | None" = None
+    memtables: "dict[int, Memtable]" = dataclasses.field(default_factory=dict)
+    compaction: "CompactionPolicy | None" = None
+    rr_counter: "itertools.count" = dataclasses.field(default_factory=itertools.count)
+
+    @property
+    def n_rows_committed(self) -> int:
+        """Rows this partition owns per its durable log (base + every
+        committed write) — equal to any fully-flushed live replica's
+        table length, and independent of staging state, which is what
+        the cross-partition select offsets are built from."""
+        return self.commitlog.n_rows if self.commitlog is not None else 0

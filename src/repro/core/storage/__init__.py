@@ -2,18 +2,27 @@
 
 Cassandra's write path staged onto this repro's tables: every write is
 first appended to a layout-agnostic :class:`CommitLog` shared by all
-replicas of a column family (sequence numbers, replay iterator,
-torn-tail-safe byte framing), then staged in each replica's
-:class:`Memtable`, and flushed as an immutable sorted run in the
-replica's *own* heterogeneous key layout (``SortedTable.merge_run``).
-:class:`CompactionPolicy` bounds how many flushed runs a
-device-resident replica accumulates before they are collapsed by the
-Pallas k-way merge kernel (``repro.kernels.merge_device_runs``) — no
-host re-upload, no manual ``place_on_device(rebuild=True)``.
+replicas of a *partition* (on a token-ring-partitioned column family —
+``repro.core.ring`` — each partition owns its own log holding exactly
+the rows its token range covers; an unpartitioned CF is the P = 1
+case with one log). Sequence numbers, a replay iterator and torn-tail-
+safe byte framing make the log the durability record; a count-based
+trigger (``CommitLog.should_checkpoint``) lets the engine collapse a
+partition's record history into one snapshot automatically once it
+outgrows ``commitlog_checkpoint_records``. Writes are then staged in
+each replica's :class:`Memtable` and flushed as an immutable sorted
+run in the replica's *own* heterogeneous key layout
+(``SortedTable.merge_run``). :class:`CompactionPolicy` bounds how many
+flushed runs a device-resident replica accumulates before they are
+collapsed by the Pallas k-way merge kernel
+(``repro.kernels.merge_device_runs``) — no host re-upload, no manual
+``place_on_device(rebuild=True)``.
 
-Recovery replays the shared log: any replica's serialization can be
-rebuilt from the record stream alone, bit-identical to re-sorting a
-surviving peer (the paper's heterogeneous-recovery claim).
+Recovery replays the owning partition's log: any replica's
+serialization can be rebuilt from the record stream alone,
+bit-identical to re-sorting a surviving peer (the paper's
+heterogeneous-recovery claim), and a lost node rebuilds only the
+partition replicas it hosted.
 """
 
 from .commitlog import CommitLog, LogRecord

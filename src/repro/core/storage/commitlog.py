@@ -22,8 +22,12 @@ asymptote as any single replica, not O(operations). What *does* grow
 with write count is the per-record framing overhead and replay's
 concatenation fan-in; ``checkpoint`` collapses the history into one
 snapshot record to bound both (``HREngine.checkpoint_commitlog`` is
-the flush-then-checkpoint form; an automatic trigger mirroring
-``CompactionPolicy`` is a ROADMAP open item). Unlike Cassandra, flushed
+the flush-then-checkpoint form), and the count-based trigger
+(:meth:`CommitLog.should_checkpoint`, mirroring ``CompactionPolicy``'s
+threshold rule) lets the engine fire it automatically after a flush
+once more than ``k`` records accumulated since the last snapshot
+(``HREngine(commitlog_checkpoint_records=k)``; 0 disables — the
+manual method remains). Unlike Cassandra, flushed
 records cannot simply be dropped: a node failure here wipes the node's
 sstables too, so the log (or a surviving peer) is the only rebuild
 source.
@@ -101,6 +105,11 @@ class CommitLog:
         self._next_lsn = 0
         self._key_names = tuple(key_names) if key_names is not None else None
         self._value_names = tuple(value_names) if value_names is not None else None
+        # appends since the last checkpoint() — the auto-checkpoint
+        # trigger's counter (reset by checkpoint, approximated by the
+        # record count after truncate/from_bytes, where the true append
+        # history is unknown)
+        self._since_checkpoint = 0
 
     # -- append ------------------------------------------------------------
 
@@ -126,6 +135,7 @@ class CommitLog:
         lsn = self._next_lsn
         self._next_lsn += 1
         self._records.append(LogRecord(lsn=lsn, key_cols=kc, value_cols=vc))
+        self._since_checkpoint += 1
         return lsn
 
     # -- replay ------------------------------------------------------------
@@ -143,6 +153,22 @@ class CommitLog:
     @property
     def n_rows(self) -> int:
         return sum(r.n_rows for r in self._records)
+
+    @property
+    def records_since_checkpoint(self) -> int:
+        """Appends since the last :meth:`checkpoint` (what the
+        count-based auto-checkpoint trigger measures — per-record
+        framing and replay fan-in grow with this, not with rows)."""
+        return self._since_checkpoint
+
+    def should_checkpoint(self, max_records: int) -> bool:
+        """Count-based trigger mirroring ``CompactionPolicy``: True when
+        more than ``max_records`` records accumulated since the last
+        snapshot. ``max_records <= 0`` disables. The caller remains
+        responsible for the safety condition (every replica flushed
+        through the tail — ``HREngine`` checks its partition's
+        memtables are drained before firing)."""
+        return max_records > 0 and self._since_checkpoint > max_records
 
     def replay(self, start_lsn: int = 0) -> Iterator[LogRecord]:
         """Records with ``lsn >= start_lsn`` in commit order."""
@@ -180,6 +206,7 @@ class CommitLog:
             raise ValueError("n_records must be >= 0")
         self._records = self._records[:n_records]
         self._next_lsn = self._records[-1].lsn + 1 if self._records else 0
+        self._since_checkpoint = min(self._since_checkpoint, len(self._records))
 
     def checkpoint(self) -> int:
         """Collapse the whole record history into one snapshot record
@@ -199,6 +226,7 @@ class CommitLog:
         lsn = self._next_lsn
         self._next_lsn += 1
         self._records = [LogRecord(lsn=lsn, key_cols=kc, value_cols=vc)]
+        self._since_checkpoint = 0
         return lsn
 
     # -- byte codec --------------------------------------------------------
@@ -238,4 +266,5 @@ class CommitLog:
             log._records.append(LogRecord(lsn=lsn, key_cols=kc, value_cols=vc))
             log._next_lsn = lsn + 1
             off += _HEADER.size + plen
+        log._since_checkpoint = len(log._records)
         return log

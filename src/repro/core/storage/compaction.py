@@ -23,7 +23,22 @@ __all__ = ["CompactionPolicy", "compact_table"]
 @dataclasses.dataclass(frozen=True)
 class CompactionPolicy:
     """Threshold rule: compact when appended rows outgrow the base run
-    (``appended_frac``) or the stack outgrows ``max_runs``."""
+    (``appended_frac``) or the stack outgrows ``max_runs``.
+
+    Multi-cycle behavior (audited in PR 5,
+    ``tests/test_storage.py::TestAutoCompaction``): every compaction
+    folds the appended rows into the base, so the *next*
+    ``appended_frac`` trigger needs ``appended_frac ×`` the new, larger
+    base — a geometric full-merge cadence, the standard size-tiered
+    trade (amortized O(log) rewrites per row). Under a steady drip of
+    small writes that trigger therefore goes quiet and ``max_runs``
+    becomes the binding rule, bounding both the run stack (no
+    starvation of the single-run fast paths) and the cadence at one
+    full merge per ``max_runs`` flushes (no compact-every-flush
+    thrash). The accounting is drift-free across cycles: ``base_rows``
+    is always ``run_starts[1]`` of the live device state, and an
+    append onto an *empty* base becomes the base run itself rather
+    than a phantom appended run (``device_state_append``)."""
 
     appended_frac: float = 0.5
     max_runs: int = 8

@@ -373,6 +373,17 @@ def device_state_append(state, table, run_key_cols, run_value_cols, positions) -
     v_block[state["ones_row"]] = 1.0
     keys = jax.lax.dynamic_update_slice(keys, jnp.asarray(k_block), (0, n_old))
     tile = jax.lax.dynamic_update_slice(tile, jnp.asarray(v_block), (0, n_old))
+    new = dict(state)
+    if n_old == 0:
+        # appending to an empty base (a freshly-split partition that
+        # owns no CREATE-time rows): the sorted run IS the base run —
+        # device row order equals host order, so the table keeps the
+        # single-run fast paths instead of paying a phantom run
+        new.update(
+            keys=keys, values_tile=tile, n_rows=n_new,
+            n_runs=1, run_starts=(0,), row_map=None,
+        )
+        return new
     # host index of old row i after the merge: i + |{j : positions[j] <= i}|;
     # run row j (sorted order) lands at positions[j] + j (np.insert layout)
     old_to_merged = np.arange(n_old, dtype=np.int64) + np.searchsorted(
@@ -381,7 +392,6 @@ def device_state_append(state, table, run_key_cols, run_value_cols, positions) -
     rm = state["row_map"]
     base = old_to_merged if rm is None else old_to_merged[rm]
     row_map = np.concatenate([base, positions + np.arange(m, dtype=np.int64)])
-    new = dict(state)
     new.update(
         keys=keys,
         values_tile=tile,

@@ -567,3 +567,92 @@ class TestResultCache:
         r, _ = eng.read("cf", Query(filters={}, agg="select"))
         assert r.rows_matched == 8_000
         assert eng.stats["result_cache_entries"] == entries
+
+    @staticmethod
+    def _check_byte_accounting(eng, map_keys):
+        """The audited invariant: each map's recorded select bytes equal
+        the true retained sum (so the counter can neither drift negative
+        nor leak), entry counts respect the FIFO bound, and no byte
+        entry outlives its map."""
+        for mk in map_keys:
+            cache = eng._result_cache.get(mk, {})
+            actual = sum(
+                r.selected.nbytes for r in cache.values() if r.selected is not None
+            )
+            recorded = eng._cache_sel_bytes.get(mk, 0)
+            assert recorded == actual
+            assert recorded >= 0
+            assert len(cache) <= eng._cache_max
+            assert actual <= eng._CACHE_MAX_MAP_BYTES
+        assert set(eng._cache_sel_bytes) <= set(eng._result_cache)
+
+    def test_select_byte_accounting_never_drifts(self, rng, monkeypatch):
+        """Satellite audit (deterministic twin of the hypothesis
+        property): ``_cache_sel_bytes`` equals the true retained
+        selected-array bytes after ANY sequence of store / overwrite /
+        evict / invalidate — in particular the overwrite-then-evict
+        interleaving, where an overwritten key's bytes are subtracted
+        before the eviction loop recomputes the running total."""
+        from repro.core.table import ScanResult
+
+        kc, vc, schema = generate_simulation(2_000, 3, seed=3)
+        eng = HREngine(n_nodes=4, result_cache_max_entries=3)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        # tiny budgets so overwrite, FIFO and byte evictions all fire
+        monkeypatch.setattr(HREngine, "_CACHE_MAX_SELECT_BYTES", 256)
+        monkeypatch.setattr(HREngine, "_CACHE_MAX_MAP_BYTES", 512)
+        map_keys = [("cf", 0), ("cf", 1)]
+        r = np.random.default_rng(7)
+        stored = 0
+        for _ in range(400):
+            mk = map_keys[int(r.integers(0, 2))]
+            if r.random() < 0.85:
+                # small key space → frequent overwrites of live entries
+                key = ("select", None, (("k0", int(r.integers(0, 5))),))
+                n_sel = int(r.integers(0, 40))  # some exceed the entry cap
+                sel = (
+                    np.arange(n_sel, dtype=np.int64)
+                    if r.random() < 0.8
+                    else None  # count/sum entries carry no select bytes
+                )
+                res = ScanResult(float(n_sel), n_sel, n_sel, selected=sel)
+                cache = eng._result_cache.setdefault(mk, {})
+                eng._cache_store(mk, cache, key, res)
+                stored += 1
+            else:
+                eng._invalidate_result_cache("cf", replica_id=mk[1])
+            self._check_byte_accounting(eng, map_keys)
+        assert stored > 300  # the sequence actually exercised stores
+        eng._invalidate_result_cache("cf")
+        assert eng._result_cache == {} and eng._cache_sel_bytes == {}
+
+    def test_byte_accounting_through_real_reads(self, rng):
+        """End-to-end twin: after reads, writes (invalidation) and more
+        reads through the public API, the recorded select bytes equal a
+        recount over the live maps."""
+        kc, vc, schema = generate_simulation(4_000, 3, seed=3)
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        map_keys = [("cf", 0), ("cf", 1)]
+        for v in range(6):
+            eng.read("cf", Query(filters={"k0": Eq(v)}, agg="select"))
+        self._check_byte_accounting(eng, map_keys)
+        total = sum(
+            r.selected.nbytes
+            for c in eng._result_cache.values()
+            for r in c.values()
+            if r.selected is not None
+        )
+        assert eng.stats["result_cache_select_bytes"] == total > 0
+        kw = {c: np.full(10, 2 if c == "k0" else 0) for c in ("k0", "k1", "k2")}
+        eng.write("cf", kw, {"metric": np.zeros(10)})  # invalidates all
+        self._check_byte_accounting(eng, map_keys)
+        assert eng.stats["result_cache_select_bytes"] == 0
+        eng.read_many(
+            "cf", [Query(filters={"k1": Eq(i)}, agg="select") for i in range(4)]
+        )
+        self._check_byte_accounting(eng, map_keys)

@@ -1,0 +1,572 @@
+"""Token-ring partitioning: scatter-gather reads over partitioned
+heterogeneous replicas.
+
+The acceptance bar: (1) a ``partitions=1`` column family is
+bit-identical to the unpartitioned engine — same tables, same commit
+log, same read results and select indices; (2) for P ∈ {2, 4} every
+``read_many`` answer (aggregate value, matched count, and the actual
+selected *rows*) equals the P = 1 oracle over the same dataset and
+queries, including queries whose slab spans several partitions and
+queries pinned to one; (3) ``fail_node``/``recover_node(source="log")``
+rebuild only the failed node's partition replicas, bit-identically,
+from each partition's own log.
+"""
+
+import copy
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Eq,
+    HREngine,
+    KeySchema,
+    Query,
+    Range,
+    SortedTable,
+    TokenRing,
+    merge_partial_scans,
+    place_replica,
+    slab_bounds_many,
+)
+from repro.core.table import ScanResult
+from repro.core.tpch import generate_simulation
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _mixed_queries(rng, schema, n=24, value_col="metric"):
+    """Mixed workload: partition-key equalities (single-partition),
+    leading-key ranges (multi-partition spans), residual-only filters
+    (full fan-out), across all three aggregations."""
+    qs = []
+    doms = {c: schema.max_value(c) + 1 for c in ("k0", "k1", "k2")}
+    aggs = itertools.cycle(["count", "sum", "select"])
+    for _ in range(n):
+        agg = next(aggs)
+        u = rng.random()
+        if u < 0.35:  # pinned to one partition (leading-key equality)
+            f = {"k0": Eq(int(rng.integers(0, doms["k0"])))}
+        elif u < 0.65:  # contiguous span of partitions
+            lo = int(rng.integers(0, doms["k0"] - 1))
+            width = int(rng.integers(1, max(2, doms["k0"] // 3)))
+            f = {"k0": Range(lo, min(lo + width, doms["k0"]))}
+            if rng.random() < 0.5:
+                f["k2"] = Eq(int(rng.integers(0, doms["k2"])))
+        else:  # residual filter only: fans out to every partition
+            lo = int(rng.integers(0, doms["k1"] - 1))
+            f = {"k1": Range(lo, min(lo + 2, doms["k1"]))}
+        qs.append(
+            Query(filters=f, agg=agg, value_col=value_col if agg == "sum" else None)
+        )
+    return qs
+
+
+def _engine(kc, vc, schema, *, partitions, rf=3, n_nodes=6, **kw):
+    eng = HREngine(n_nodes=n_nodes, **kw)
+    eng.create_column_family(
+        "cf", kc, vc, replication_factor=rf, layouts=LAYOUTS[:rf], schema=schema,
+        partitions=partitions,
+    )
+    return eng
+
+
+def _selected_rows(eng, cf_name, selected):
+    """Materialize a partitioned (RF = 1) engine's global select indices
+    into actual (keys..., value) rows — the representation-independent
+    form the P = 1 oracle comparison uses."""
+    cf = eng.column_families[cf_name]
+    offsets = eng._partition_row_offsets(cf)
+    pids = np.searchsorted(offsets, selected, side="right") - 1
+    rows = []
+    for pid, g in zip(pids, selected):
+        t = eng._table(cf, cf.partitions[int(pid)].replicas[0])
+        li = int(g - offsets[int(pid)])
+        rows.append(
+            tuple(int(t.key_cols[c][li]) for c in cf.key_names)
+            + (float(np.asarray(t.value_cols["metric"])[li]),)
+        )
+    return sorted(rows)
+
+
+class TestTokenRing:
+    def test_ranges_partition_the_space(self):
+        schema = KeySchema({"a": 5, "b": 3})
+        ring = TokenRing.build(schema, ("a", "b"), 5)
+        assert ring.n_partitions == 5 and ring.starts[0] == 0
+        space = 1 << ring.total_bits
+        # contiguous, disjoint, covering
+        prev_hi = -1
+        for p in range(5):
+            lo, hi = ring.token_range(p)
+            assert lo == prev_hi + 1 and hi >= lo
+            prev_hi = hi
+        assert prev_hi == space - 1
+
+    def test_partition_of_tokens_matches_ranges(self):
+        schema = KeySchema({"a": 6, "b": 4})
+        ring = TokenRing.build(schema, ("a", "b"), 7)
+        rng = np.random.default_rng(0)
+        tokens = rng.integers(0, 1 << ring.total_bits, 500)
+        pids = ring.partition_of_tokens(tokens)
+        for t, p in zip(tokens, pids):
+            lo, hi = ring.token_range(int(p))
+            assert lo <= int(t) <= hi
+
+    def test_rows_route_by_canonical_packing(self):
+        """A row's partition is a pure function of its composite key in
+        canonical column order — never of any replica layout."""
+        schema = KeySchema({"a": 4, "b": 4})
+        ring = TokenRing.build(schema, ("a", "b"), 4)
+        kc = {"a": np.array([0, 5, 10, 15]), "b": np.array([0, 0, 0, 0])}
+        pids = ring.partition_of_tokens(ring.tokens(kc, schema))
+        # 8-bit space split in 4: a-value quartiles (b is the low byte)
+        np.testing.assert_array_equal(pids, [0, 1, 2, 3])
+
+    def test_span_partitions_pins_and_fans(self):
+        schema = KeySchema({"a": 4, "b": 4})
+        ring = TokenRing.build(schema, ("a", "b"), 4)
+        qs = [
+            Query(filters={"a": Eq(5)}),          # one partition
+            Query(filters={"a": Range(3, 13)}),   # a span
+            Query(filters={"b": Eq(2)}),          # residual: all partitions
+            Query(filters={"a": Range(5, 5)}),    # empty slab: clamped home
+        ]
+        bounds = slab_bounds_many(qs, ("a", "b"), schema)
+        p_lo, p_hi = ring.span_partitions(bounds)
+        assert p_lo[0] == p_hi[0] == 1  # a=5 → second quartile
+        assert (p_lo[1], p_hi[1]) == (0, 3)
+        assert (p_lo[2], p_hi[2]) == (0, 3)
+        assert p_lo[3] == p_hi[3]  # executes (empty) on one partition
+
+    def test_build_validation(self):
+        schema = KeySchema({"a": 2})
+        with pytest.raises(ValueError, match="partitions"):
+            TokenRing.build(schema, ("a",), 0)
+        with pytest.raises(ValueError, match="partitions"):
+            TokenRing.build(schema, ("a",), 5)  # 4-token space
+
+    def test_placement_consistent_with_engine(self):
+        eng = HREngine(n_nodes=7)
+        for rid in range(12):
+            assert eng._place(rid, "orders") == place_replica("orders", rid, 7)
+
+
+class TestMergePartialScans:
+    def test_aggregates_add_and_selects_offset(self):
+        a = ScanResult(3.0, 10, 3, selected=np.array([0, 2, 5]))
+        b = ScanResult(2.0, 4, 2, selected=np.array([1, 3]))
+        m = merge_partial_scans([(a, 0), (b, 100)], "select")
+        assert m.value == 5.0 and m.rows_scanned == 14 and m.rows_matched == 5
+        np.testing.assert_array_equal(m.selected, [0, 2, 5, 101, 103])
+        s = merge_partial_scans([(ScanResult(1.5, 7, 4), 0), (ScanResult(2.5, 3, 1), 7)], "sum")
+        assert s.value == 4.0 and s.rows_scanned == 10 and s.rows_matched == 5
+
+    def test_does_not_mutate_cached_partials(self):
+        sel = np.array([4, 5])
+        sel.setflags(write=False)  # as the result cache freezes it
+        a = ScanResult(2.0, 2, 2, selected=sel)
+        m = merge_partial_scans([(a, 10)], "select")
+        np.testing.assert_array_equal(a.selected, [4, 5])
+        np.testing.assert_array_equal(m.selected, [14, 15])
+
+
+class TestP1BitIdentity:
+    """partitions=1 must BE the unpartitioned engine: identical replica
+    tables, identical commit log content, identical read results and
+    select indices, identical placement."""
+
+    def test_tables_and_log_match_direct_construction(self):
+        kc, vc, schema = generate_simulation(4_000, 3, seed=3)
+        eng = _engine(kc, vc, schema, partitions=1)
+        cf = eng.column_families["cf"]
+        assert cf.ring.n_partitions == 1 and len(cf.partitions) == 1
+        assert cf.partitions[0].token_lo == 0
+        for slot, r in enumerate(cf.replicas):
+            assert r.replica_id == slot and r.partition_id == 0
+            direct = SortedTable.from_columns(kc, vc, LAYOUTS[slot], schema)
+            t = eng._table(cf, r)
+            np.testing.assert_array_equal(t.packed, direct.packed)
+            for c in kc:
+                np.testing.assert_array_equal(t.key_cols[c], direct.key_cols[c])
+            np.testing.assert_array_equal(
+                np.asarray(t.value_cols["metric"]),
+                np.asarray(direct.value_cols["metric"]),
+            )
+        (rec,) = cf.commitlog.replay()
+        for c in kc:
+            np.testing.assert_array_equal(rec.key_cols[c], np.asarray(kc[c]))
+
+    def test_reads_and_selects_match_table_oracle(self):
+        kc, vc, schema = generate_simulation(4_000, 3, seed=3)
+        rng = np.random.default_rng(7)
+        eng = _engine(kc, vc, schema, partitions=1)
+        cf = eng.column_families["cf"]
+        for q in _mixed_queries(rng, schema, n=12):
+            res, rep = eng.read("cf", q)
+            oracle = eng._table(cf, cf.replicas[rep.replica_id]).execute(q)
+            assert res.value == oracle.value
+            assert res.rows_scanned == oracle.rows_scanned
+            if q.agg == "select":
+                np.testing.assert_array_equal(res.selected, oracle.selected)
+
+
+class TestPartitionedReadEquivalence:
+    """THE partitioning acceptance criterion: P ∈ {2, 4} ``read_many``
+    equals the P = 1 oracle for sum/count/select on the same dataset."""
+
+    @pytest.mark.parametrize("partitions", [2, 4])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_aggregates_match_p1_oracle(self, partitions, seed):
+        kc, vc, schema = generate_simulation(8_000, 3, seed=seed)
+        rng = np.random.default_rng(100 + seed)
+        qs = _mixed_queries(rng, schema, n=30)
+        e1 = _engine(kc, vc, schema, partitions=1)
+        ep = _engine(kc, vc, schema, partitions=partitions)
+        assert ep.stats["partitions"] == partitions
+        for q, (a, _), (b, _) in zip(qs, e1.read_many("cf", qs), ep.read_many("cf", qs)):
+            assert b.rows_matched == a.rows_matched, q
+            if q.agg == "sum":
+                np.testing.assert_allclose(b.value, a.value, rtol=1e-9)
+            else:
+                assert b.value == a.value
+            if q.agg == "select":
+                assert b.selected is not None
+                assert len(b.selected) == b.rows_matched
+
+    @pytest.mark.parametrize("partitions", [2, 4])
+    def test_selected_rows_match_p1_oracle(self, partitions):
+        """Select equality at row granularity: the global indices of a
+        P-partition select materialize to exactly the rows the P = 1
+        oracle selects (RF = 1 pins the serving layout on both sides)."""
+        kc, vc, schema = generate_simulation(5_000, 3, seed=5)
+        rng = np.random.default_rng(11)
+        e1 = _engine(kc, vc, schema, partitions=1, rf=1)
+        ep = _engine(kc, vc, schema, partitions=partitions, rf=1)
+        qs = [q for q in _mixed_queries(rng, schema, n=30) if q.agg == "select"]
+        for q, (a, _), (b, _) in zip(qs, e1.read_many("cf", qs), ep.read_many("cf", qs)):
+            assert _selected_rows(ep, "cf", b.selected) == _selected_rows(
+                e1, "cf", a.selected
+            ), q
+
+    def test_equivalence_survives_writes(self):
+        """Routed writes keep the P-partition family equal to the P = 1
+        oracle — including rows staged under a group-commit threshold
+        (the per-partition flush-on-read barrier)."""
+        kc, vc, schema = generate_simulation(6_000, 3, seed=9)
+        rng = np.random.default_rng(13)
+        e1 = _engine(kc, vc, schema, partitions=1, memtable_rows=1 << 30)
+        ep = _engine(kc, vc, schema, partitions=3, memtable_rows=1 << 30)
+        qs = _mixed_queries(rng, schema, n=18)
+        for _ in range(3):
+            bk = {
+                c: rng.integers(0, schema.max_value(c) + 1, 200).astype(np.int64)
+                for c in ("k0", "k1", "k2")
+            }
+            bv = {"metric": rng.uniform(0, 1, 200)}
+            e1.write("cf", bk, bv)
+            ep.write("cf", bk, bv)
+        assert ep.stats["staged_rows"] > 0  # really exercising the barrier
+        for q, (a, _), (b, _) in zip(qs, e1.read_many("cf", qs), ep.read_many("cf", qs)):
+            assert b.rows_matched == a.rows_matched, q
+            np.testing.assert_allclose(b.value, a.value, rtol=1e-9)
+
+    def test_single_partition_queries_touch_one_partition(self):
+        """A leading-key equality consumes exactly one partition's RR
+        draw — the scatter plan really prunes to one replica set."""
+        kc, vc, schema = generate_simulation(3_000, 3, seed=1)
+        ep = _engine(kc, vc, schema, partitions=4)
+        cf = ep.column_families["cf"]
+        q = Query(filters={"k0": Eq(1)}, agg="count")
+        bounds = slab_bounds_many([q], cf.key_names, cf.schema)
+        p_lo, p_hi = cf.ring.span_partitions(bounds)
+        assert p_lo[0] == p_hi[0]
+        before = [copy.deepcopy(p.rr_counter) for p in cf.partitions]
+        ep.read_many("cf", [q])
+        after_draws = [
+            next(p.rr_counter) - next(b)
+            for p, b in zip(cf.partitions, before)
+        ]
+        assert after_draws[int(p_lo[0])] == 1
+        assert all(d == 0 for i, d in enumerate(after_draws) if i != int(p_lo[0]))
+
+    def test_scalar_read_equals_batched(self):
+        kc, vc, schema = generate_simulation(3_000, 3, seed=2)
+        rng = np.random.default_rng(4)
+        qs = _mixed_queries(rng, schema, n=10)
+        e_a = _engine(kc, vc, schema, partitions=4)
+        e_b = _engine(kc, vc, schema, partitions=4)
+        seq = [e_a.read("cf", q) for q in qs]
+        bat = e_b.read_many("cf", qs)
+        for (rs, rep_s), (rb, rep_b) in zip(seq, bat):
+            assert rb.value == rs.value
+            assert rb.rows_matched == rs.rows_matched
+            assert rep_b.replica_id == rep_s.replica_id
+
+    def test_hedged_partitioned_batch(self):
+        from repro.ft.straggler import clear_slowdowns, inject_slowdown
+
+        kc, vc, schema = generate_simulation(3_000, 3, seed=2)
+        rng = np.random.default_rng(4)
+        qs = _mixed_queries(rng, schema, n=10)
+        eng = _engine(kc, vc, schema, partitions=2)
+        oracle = _engine(kc, vc, schema, partitions=2)
+        victim = eng.column_families["cf"].partitions[0].replicas[0].node_id
+        inject_slowdown(eng, victim, 1e4)
+        try:
+            out = eng.read_many("cf", qs, hedge=True)
+            ref = oracle.read_many("cf", qs)
+            for (rb, _), (rs, _) in zip(out, ref):
+                assert rb.value == rs.value
+        finally:
+            clear_slowdowns(eng)
+
+
+class TestPartitionedWriteRouting:
+    def test_rows_land_in_owning_partition_logs(self):
+        kc, vc, schema = generate_simulation(4_000, 3, seed=6)
+        rng = np.random.default_rng(8)
+        eng = _engine(kc, vc, schema, partitions=4)
+        cf = eng.column_families["cf"]
+        for _ in range(3):
+            bk = {
+                c: rng.integers(0, schema.max_value(c) + 1, 150).astype(np.int64)
+                for c in ("k0", "k1", "k2")
+            }
+            eng.write("cf", bk, {"metric": rng.uniform(0, 1, 150)})
+        total = 0
+        for part in cf.partitions:
+            kc_p, _ = part.commitlog.replay_columns()
+            tokens = cf.ring.tokens(kc_p, cf.schema)
+            assert ((tokens >= part.token_lo) & (tokens <= part.token_hi)).all()
+            total += part.commitlog.n_rows
+        assert total == 4_000 + 3 * 150
+        # within a partition every replica holds the same row slice;
+        # across partitions the slices are disjoint
+        fps = [
+            {eng._table(cf, r).dataset_fingerprint() for r in part.replicas}
+            for part in cf.partitions
+        ]
+        assert all(len(s) == 1 for s in fps)
+        assert len({next(iter(s)) for s in fps}) == len(cf.partitions)
+
+    def test_threshold_flush_covers_untouched_partitions(self):
+        """Group-commit regression: rows deferred in one partition must
+        flush once over the staging threshold, even when every later
+        write routes to *other* partitions — the threshold check spans
+        all live replicas, not just the current write's routed ones."""
+        schema = KeySchema({"k0": 4, "k1": 4})
+        rng = np.random.default_rng(5)
+        kc = {c: rng.integers(0, 16, 600).astype(np.int64) for c in ("k0", "k1")}
+        vc = {"metric": rng.uniform(0, 1, 600)}
+        eng = HREngine(n_nodes=4, memtable_rows=100)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=[("k0", "k1")],
+            schema=schema, partitions=2,
+        )
+        # 150 rows into partition 0 (k0 < 8), deferred past the threshold
+        eng.write(
+            "cf",
+            {"k0": np.full(150, 2, np.int64), "k1": np.zeros(150, np.int64)},
+            {"metric": np.zeros(150)},
+            flush=False,
+        )
+        assert eng.stats["staged_rows"] == 150
+        # a later write routed ONLY to partition 1 must still trip the
+        # CF-wide threshold and drain partition 0's backlog
+        eng.write(
+            "cf",
+            {"k0": np.full(5, 12, np.int64), "k1": np.zeros(5, np.int64)},
+            {"metric": np.zeros(5)},
+        )
+        assert eng.stats["staged_rows"] == 0
+
+    def test_empty_partition_stays_consistent(self):
+        """A partition owning no rows (skewed dataset) serves reads and
+        absorbs its first routed write."""
+        schema = KeySchema({"k0": 4, "k1": 4})
+        n = 800
+        rng = np.random.default_rng(3)
+        kc = {
+            "k0": rng.integers(8, 16, n).astype(np.int64),  # upper half only
+            "k1": rng.integers(0, 16, n).astype(np.int64),
+        }
+        vc = {"metric": rng.uniform(0, 1, n)}
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2,
+            layouts=[("k0", "k1"), ("k1", "k0")], schema=schema, partitions=2,
+        )
+        cf = eng.column_families["cf"]
+        # base record exists but carries zero rows
+        assert len(cf.partitions[0].commitlog) == 1
+        assert cf.partitions[0].n_rows_committed == 0
+        assert len(eng._table(cf, cf.partitions[0].replicas[0])) == 0
+        q = Query(filters={"k0": Range(0, 16)}, agg="count")
+        (res, _), = eng.read_many("cf", [q])
+        assert res.value == n
+        # first write into the empty partition
+        eng.write(
+            "cf",
+            {"k0": np.array([2, 3]), "k1": np.array([1, 1])},
+            {"metric": np.array([0.5, 0.5])},
+        )
+        (res, _), = eng.read_many("cf", [q])
+        assert res.value == n + 2
+        (res, _), = eng.read_many(
+            "cf", [Query(filters={"k0": Range(0, 8)}, agg="select")]
+        )
+        assert res.rows_matched == 2 and len(res.selected) == 2
+
+
+class TestPartitionedFailRecover:
+    def _engine_with_writes(self, partitions=4, rf=2, seed=4):
+        kc, vc, schema = generate_simulation(5_000, 3, seed=seed)
+        rng = np.random.default_rng(seed)
+        eng = _engine(kc, vc, schema, partitions=partitions, rf=rf, n_nodes=5)
+        for _ in range(3):
+            bk = {
+                c: rng.integers(0, schema.max_value(c) + 1, 100).astype(np.int64)
+                for c in ("k0", "k1", "k2")
+            }
+            eng.write("cf", bk, {"metric": rng.uniform(0, 1, 100)})
+        return eng
+
+    def test_node_loses_only_its_partition_replicas(self):
+        eng = self._engine_with_writes()
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[1].replicas[0].node_id
+        hosted = {r.replica_id for r in cf.replicas if r.node_id == victim}
+        surviving = {
+            r.replica_id: eng._table(cf, r)
+            for r in cf.replicas
+            if r.node_id != victim
+        }
+        eng.fail_node(victim)
+        assert eng.nodes[victim].tables == {}
+        # replicas on other nodes are untouched (same table objects)
+        for r in cf.replicas:
+            if r.node_id != victim:
+                assert eng._table(cf, r) is surviving[r.replica_id]
+        # every partition the victim hosted still has a live peer (RF=2)
+        for part in cf.partitions:
+            lost = [r for r in part.replicas if r.replica_id in hosted]
+            live = [r for r in part.replicas if eng.nodes[r.node_id].alive]
+            assert len(lost) <= 1 and live
+
+    def test_log_recovery_bit_identical_per_partition(self):
+        """THE partition-recovery criterion: log replay rebuilds exactly
+        the failed node's partition replicas, each bit-identical to the
+        survivor re-sort of its own partition, and touches nothing
+        else."""
+        eng = self._engine_with_writes()
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[2].replicas[1].node_id
+        e_log, e_sur = copy.deepcopy(eng), copy.deepcopy(eng)
+        e_log.fail_node(victim)
+        e_log.recover_node(victim, source="log")
+        e_sur.fail_node(victim)
+        e_sur.recover_node(victim, source="survivor")
+        checked = 0
+        for part in cf.partitions:
+            for r in part.replicas:
+                if r.node_id != victim:
+                    continue
+                t_log = e_log._table(e_log.column_families["cf"], r)
+                t_sur = e_sur._table(e_sur.column_families["cf"], r)
+                np.testing.assert_array_equal(t_log.packed, t_sur.packed)
+                for c in t_log.key_cols:
+                    np.testing.assert_array_equal(
+                        t_log.key_cols[c], t_sur.key_cols[c]
+                    )
+                assert t_log.dataset_fingerprint() == t_sur.dataset_fingerprint()
+                checked += 1
+        assert checked > 0
+        # untouched nodes keep their exact table objects through recovery
+        cf_log = e_log.column_families["cf"]
+        for r in cf_log.replicas:
+            if r.node_id != victim:
+                assert (
+                    e_log._table(cf_log, r)
+                    is e_log.nodes[r.node_id].tables[("cf", r.replica_id)]
+                )
+
+    def test_recovery_repairs_missed_partition_writes(self):
+        """Writes committed while a node is down reach only the live
+        partitions' replicas; log recovery repairs the dead node's
+        partition slices including those rows."""
+        eng = self._engine_with_writes(partitions=4, rf=2)
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[0].replicas[0].node_id
+        eng.fail_node(victim)
+        rng = np.random.default_rng(99)
+        bk = {
+            c: rng.integers(0, schema_max + 1, 120).astype(np.int64)
+            for c, schema_max in (
+                (c, cf.schema.max_value(c)) for c in ("k0", "k1", "k2")
+            )
+        }
+        eng.write("cf", bk, {"metric": rng.uniform(0, 1, 120)})
+        eng.recover_node(victim, source="log")
+        for part in cf.partitions:
+            fps = {eng._table(cf, r).dataset_fingerprint() for r in part.replicas}
+            assert len(fps) == 1
+
+    def test_full_scan_correct_through_fail_recover(self):
+        eng = self._engine_with_writes(partitions=4, rf=2)
+        cf = eng.column_families["cf"]
+        q = Query(filters={}, agg="count")
+        (before, _), = eng.read_many("cf", [q])
+        victim = cf.partitions[1].replicas[0].node_id
+        eng.fail_node(victim)
+        (during, _), = eng.read_many("cf", [q])  # routed around per partition
+        assert during.value == before.value
+        eng.recover_node(victim, source="log")
+        (after, _), = eng.read_many("cf", [q])
+        assert after.value == before.value
+
+
+class TestPartitionedDevicePath:
+    def test_device_partitioned_matches_host(self):
+        kc, vc, schema = generate_simulation(4_000, 3, seed=12)
+        rng = np.random.default_rng(21)
+        qs = _mixed_queries(rng, schema, n=18)
+        host = _engine(kc, vc, schema, partitions=2, rf=2)
+        dev = HREngine(n_nodes=6)
+        dev.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+            partitions=2, device_resident=True,
+        )
+        for q, (a, _), (b, _) in zip(qs, host.read_many("cf", qs), dev.read_many("cf", qs)):
+            assert b.rows_matched == a.rows_matched, q
+            np.testing.assert_allclose(b.value, a.value, rtol=1e-5)
+            if q.agg == "select":
+                np.testing.assert_array_equal(b.selected, a.selected)
+
+    def test_device_partitioned_write_and_compact(self):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=12)
+        rng = np.random.default_rng(22)
+        from repro.core import CompactionPolicy
+
+        dev = HREngine(n_nodes=4, compaction=CompactionPolicy(appended_frac=0.1))
+        dev.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1], schema=schema,
+            partitions=2, device_resident=True,
+        )
+        host = _engine(kc, vc, schema, partitions=2, rf=1, n_nodes=4)
+        for _ in range(3):
+            bk = {
+                c: rng.integers(0, schema.max_value(c) + 1, 300).astype(np.int64)
+                for c in ("k0", "k1", "k2")
+            }
+            bv = {"metric": rng.uniform(0, 1, 300)}
+            dev.write("cf", bk, bv)
+            host.write("cf", bk, bv)
+        assert dev.stats["compactions"] >= 1
+        qs = _mixed_queries(rng, schema, n=12)
+        for q, (a, _), (b, _) in zip(qs, host.read_many("cf", qs), dev.read_many("cf", qs)):
+            assert b.rows_matched == a.rows_matched, q
+            np.testing.assert_allclose(b.value, a.value, rtol=1e-5)
+            if q.agg == "select":
+                np.testing.assert_array_equal(b.selected, a.selected)

@@ -406,3 +406,121 @@ def test_property_merge_kernel_matches_lexsort_oracle(seed, n, n_runs):
     after = t.execute(q)
     assert after.rows_matched == before.rows_matched
     np.testing.assert_array_equal(after.selected, before.selected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_result_cache_byte_accounting(data):
+    """Property (PR 5 satellite): over ANY sequence of cache stores —
+    including overwrites of live keys and stores that trigger FIFO or
+    byte-budget evictions — interleaved with invalidations, the
+    per-replica ``_cache_sel_bytes`` counter equals the true sum of
+    retained selected-array bytes: it never drifts negative and never
+    leaks an entry once ``_invalidate_result_cache`` drops its map."""
+    from repro.core import HREngine
+    from repro.core.table import ScanResult
+
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    kc, vc, schema = generate_simulation(300, 3, seed=1)
+    eng = HREngine(n_nodes=2, result_cache_max_entries=data.draw(st.integers(1, 4)))
+    eng.create_column_family(
+        "cf", kc, vc, replication_factor=2,
+        layouts=[("k0", "k1", "k2"), ("k1", "k2", "k0")], schema=schema,
+    )
+    # tiny instance-level budgets so every eviction path is reachable
+    eng._CACHE_MAX_SELECT_BYTES = data.draw(st.sampled_from([64, 256]))
+    eng._CACHE_MAX_MAP_BYTES = data.draw(st.sampled_from([128, 512]))
+    map_keys = [("cf", 0), ("cf", 1)]
+    for _ in range(data.draw(st.integers(10, 60))):
+        mk = map_keys[int(rng.integers(0, 2))]
+        if rng.random() < 0.85:
+            key = ("select", None, (("k0", int(rng.integers(0, 4))),))
+            n_sel = int(rng.integers(0, 48))
+            sel = np.arange(n_sel, dtype=np.int64) if rng.random() < 0.8 else None
+            eng._cache_store(
+                mk,
+                eng._result_cache.setdefault(mk, {}),
+                key,
+                ScanResult(float(n_sel), n_sel, n_sel, selected=sel),
+            )
+        else:
+            eng._invalidate_result_cache("cf", replica_id=mk[1])
+        for check_mk in map_keys:
+            cache = eng._result_cache.get(check_mk, {})
+            actual = sum(
+                r.selected.nbytes for r in cache.values() if r.selected is not None
+            )
+            recorded = eng._cache_sel_bytes.get(check_mk, 0)
+            assert recorded == actual
+            assert recorded >= 0
+            assert len(cache) <= eng._cache_max
+            assert actual <= eng._CACHE_MAX_MAP_BYTES
+        assert set(eng._cache_sel_bytes) <= set(eng._result_cache)
+    eng._invalidate_result_cache("cf")
+    assert eng._result_cache == {} and eng._cache_sel_bytes == {}
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    data=st.data(),
+    n=st.integers(50, 500),
+    n_partitions=st.integers(2, 5),
+)
+def test_property_partitioned_read_matches_p1_oracle(data, n, n_partitions):
+    """Property (PR 5 tentpole): for any dataset and query mix,
+    ``read_many`` on a P-partition column family returns the same
+    aggregates, matched counts and selected *rows* as the P = 1 oracle
+    — queries spanning several partitions and queries pinned to one."""
+    from repro.core import HREngine, KeySchema
+
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    dom = data.draw(st.integers(4, 16))
+    cols = ("x", "y")
+    kc = {c: rng.integers(0, dom, n).astype(np.int64) for c in cols}
+    vc = {"m": rng.uniform(0, 1, n)}
+    schema = KeySchema({c: max(1, int(dom - 1).bit_length()) for c in cols})
+    layouts = [("x", "y"), ("y", "x")]
+    engines = []
+    for partitions in (1, n_partitions):
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=layouts[:1], schema=schema,
+            partitions=partitions,
+        )
+        engines.append(eng)
+    e1, ep = engines
+    qs = []
+    for _ in range(8):
+        f = {}
+        for c in cols:
+            kind = data.draw(st.sampled_from(["eq", "range", "none"]))
+            if kind == "eq":
+                f[c] = Eq(data.draw(st.integers(0, dom - 1)))
+            elif kind == "range":
+                lo = data.draw(st.integers(0, dom - 1))
+                f[c] = Range(lo, data.draw(st.integers(lo, dom)))
+        agg = data.draw(st.sampled_from(["count", "sum", "select"]))
+        qs.append(Query(filters=f, agg=agg, value_col="m" if agg == "sum" else None))
+
+    def rows_of(eng, selected):
+        cf = eng.column_families["cf"]
+        offsets = eng._partition_row_offsets(cf)
+        pids = np.searchsorted(offsets, selected, side="right") - 1
+        out = []
+        for pid, g in zip(pids, selected):
+            t = eng._table(cf, cf.partitions[int(pid)].replicas[0])
+            li = int(g - offsets[int(pid)])
+            out.append(
+                tuple(int(t.key_cols[c][li]) for c in cols)
+                + (float(np.asarray(t.value_cols["m"])[li]),)
+            )
+        return sorted(out)
+
+    for q, (a, _), (b, _) in zip(qs, e1.read_many("cf", qs), ep.read_many("cf", qs)):
+        assert b.rows_matched == a.rows_matched
+        if q.agg == "sum":
+            np.testing.assert_allclose(b.value, a.value, rtol=1e-9)
+        else:
+            assert b.value == a.value
+        if q.agg == "select":
+            assert rows_of(ep, b.selected) == rows_of(e1, a.selected)

@@ -533,6 +533,81 @@ class TestAutoCompaction:
             t.slab_many([q]), host.slab_many([q])
         )
 
+    def test_multi_cycle_accounting_no_thrash_no_starve(self, rng):
+        """Satellite regression: repeated append→compact cycles under a
+        steady drip of small writes. Each compaction folds the appended
+        rows into the base run, silently raising the ``appended_frac``
+        threshold for the next cycle — by design (geometric full-merge
+        cadence) — while ``max_runs`` keeps the cadence bounded. The
+        accounting must never drift: ``run_starts`` stays consistent
+        with ``n_rows`` at every cycle, runs stay bounded (no
+        starvation), compaction does not fire on every flush (no
+        thrash), and reads stay correct throughout."""
+        kc, vc, schema = generate_simulation(1_000, 3, seed=9)
+        policy = CompactionPolicy(appended_frac=0.5, max_runs=4)
+        eng = HREngine(n_nodes=2, compaction=policy)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1], schema=schema,
+            device_resident=True,
+        )
+        host = HREngine(n_nodes=2)
+        host.create_column_family(
+            "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1], schema=schema,
+        )
+        cf = eng.column_families["cf"]
+        compaction_writes = []
+        for i in range(40):  # 40 drip writes → many full cycles
+            bk, bv = _batch(rng, schema, 100)
+            eng.write("cf", bk, bv)
+            host.write("cf", bk, bv)
+            st = eng._table(cf, cf.replicas[0])._device
+            rs = st["run_starts"]
+            # accounting invariants, every cycle
+            assert st["n_runs"] == len(rs)
+            assert st["n_rows"] == 1_000 + (i + 1) * 100
+            base = rs[1] if len(rs) > 1 else st["n_rows"]
+            appended = st["n_rows"] - base
+            assert 0 <= appended <= st["n_rows"]
+            assert all(a < b for a, b in zip(rs, rs[1:]))  # runs non-empty
+            # bounded stack: never more than max_runs + the in-flight run
+            assert st["n_runs"] <= policy.max_runs + 1
+            if eng.stats["compactions"] > len(compaction_writes):
+                compaction_writes.append(i)
+        # repeated cycles actually happened, at a bounded cadence …
+        assert len(compaction_writes) >= 5
+        gaps = np.diff(compaction_writes)
+        assert gaps.max() <= policy.max_runs + 1  # no starvation
+        # … but the drip did not degenerate into compact-every-flush
+        assert len(compaction_writes) < 40
+        qs = [
+            Query(filters={"k0": Eq(int(rng.integers(0, 8)))}, agg="count")
+            for _ in range(3)
+        ] + [Query(filters={"k1": Range(0, 4)}, agg="select")]
+        for (rd, _), (rh, _) in zip(eng.read_many("cf", qs), host.read_many("cf", qs)):
+            assert rd.rows_matched == rh.rows_matched
+            np.testing.assert_allclose(rd.value, rh.value, rtol=1e-5)
+            if rh.selected is not None:
+                np.testing.assert_array_equal(rd.selected, rh.selected)
+
+    def test_append_to_empty_base_is_single_run(self, rng):
+        """A run merged into an empty resident table IS the sorted base:
+        no phantom run, no row_map, fast paths keep applying."""
+        schema = KeySchema({"a": 4, "b": 4})
+        t = SortedTable.from_columns(
+            {"a": np.empty(0, np.int64), "b": np.empty(0, np.int64)},
+            {"m": np.empty(0)},
+            ("a", "b"),
+            schema,
+        ).place_on_device()
+        kc = {"a": rng.integers(0, 16, 50), "b": rng.integers(0, 16, 50)}
+        merged = t.merge_insert(kc, {"m": rng.uniform(0, 1, 50)})
+        st = merged._device
+        assert st["n_runs"] == 1 and st["row_map"] is None
+        assert st["run_starts"] == (0,) and st["n_rows"] == 50
+        host = SortedTable.from_columns(kc, {"m": np.zeros(50)}, ("a", "b"), schema)
+        q = Query(filters={"a": Eq(int(kc["a"][0]))}, agg="select")
+        np.testing.assert_array_equal(merged.execute(q).selected, host.execute(q).selected)
+
     def test_policy_thresholds(self):
         p = CompactionPolicy(appended_frac=0.5, max_runs=4)
         assert not p.should_compact(base_rows=100, appended_rows=0, n_runs=1)
@@ -586,6 +661,137 @@ class TestCommitLogCheckpoint:
         cf = eng.column_families["cf"]
         fps = {eng._table(cf, r).dataset_fingerprint() for r in cf.replicas}
         assert len(fps) == 1
+
+
+class TestCommitLogAutoCheckpoint:
+    """Satellite: the count-based trigger (records since last snapshot >
+    k, mirroring CompactionPolicy) collapses a commit log automatically
+    after a flush — replay recovery stays bit-identical across it."""
+
+    def test_records_since_checkpoint_counter(self, rng):
+        log = CommitLog(key_names=("a",), value_names=("m",))
+        assert log.records_since_checkpoint == 0
+        for i in range(3):
+            log.append({"a": np.array([i])}, {"m": np.array([0.1])})
+        assert log.records_since_checkpoint == 3
+        assert log.should_checkpoint(2)
+        assert not log.should_checkpoint(3)  # strict: records > k
+        assert not log.should_checkpoint(0)  # 0 disables
+        log.checkpoint()
+        assert log.records_since_checkpoint == 0 and len(log) == 1
+        # round-tripped logs approximate the counter with record count
+        log.append({"a": np.array([9])}, {"m": np.array([0.9])})
+        back = CommitLog.from_bytes(log.to_bytes())
+        assert back.records_since_checkpoint == 2
+
+    def test_auto_checkpoint_bounds_log_under_sustained_writes(self, rng):
+        kc, vc, schema = generate_simulation(1_500, 3, seed=15)
+        eng = HREngine(n_nodes=4, commitlog_checkpoint_records=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        for _ in range(14):  # write-through: every write flushes
+            eng.write("cf", *_batch(rng, schema, 30))
+            # bounded: at most k records accumulate before a collapse
+            assert eng.stats["commitlog_records"] <= 4 + 1
+        assert eng.stats["commitlog_auto_checkpoints"] >= 2
+        # rows are all retained — only the framing collapsed
+        assert eng.stats["commitlog_rows"] == 1_500 + 14 * 30
+
+    def test_knob_zero_disables(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=15)
+        eng = HREngine(n_nodes=4, commitlog_checkpoint_records=0)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+        )
+        for _ in range(10):
+            eng.write("cf", *_batch(rng, schema, 20))
+        assert eng.stats["commitlog_records"] == 11  # base + every write
+        assert eng.stats["commitlog_auto_checkpoints"] == 0
+        with pytest.raises(ValueError, match="commitlog_checkpoint_records"):
+            HREngine(commitlog_checkpoint_records=-1)
+
+    def test_replay_bit_identity_across_auto_checkpoint(self, rng):
+        """THE auto-checkpoint acceptance criterion: log-replay recovery
+        through an automatically collapsed log rebuilds every replica
+        bit-identical to recovery from the uncollapsed twin."""
+        kc, vc, schema = generate_simulation(2_000, 3, seed=15)
+        engines = {
+            k: HREngine(n_nodes=4, commitlog_checkpoint_records=k)
+            for k in (3, 0)  # auto-checkpointing vs full history
+        }
+        batches = [_batch(rng, schema, 40) for _ in range(9)]
+        for eng in engines.values():
+            eng.create_column_family(
+                "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+            )
+            for bk, bv in batches:
+                eng.write("cf", bk, bv)
+        auto, full = engines[3], engines[0]
+        assert auto.stats["commitlog_auto_checkpoints"] >= 1
+        assert auto.stats["commitlog_records"] < full.stats["commitlog_records"]
+        cf = full.column_families["cf"]
+        victim = cf.replicas[0].node_id
+        for eng in (auto, full):
+            eng.fail_node(victim)
+            eng.recover_node(victim, source="log")
+        for r in cf.replicas:
+            if r.node_id != victim:
+                continue
+            t_a = auto._table(auto.column_families["cf"], r)
+            t_f = full._table(full.column_families["cf"], r)
+            np.testing.assert_array_equal(t_a.packed, t_f.packed)
+            for c in t_a.key_cols:
+                np.testing.assert_array_equal(t_a.key_cols[c], t_f.key_cols[c])
+            np.testing.assert_array_equal(
+                np.asarray(t_a.value_cols["metric"]),
+                np.asarray(t_f.value_cols["metric"]),
+            )
+
+    def test_not_fired_while_any_replica_staged(self, rng):
+        """The documented checkpoint safety condition: a partition whose
+        replicas still hold staged rows is never collapsed — the read
+        barrier flushes only the replica it touches, so siblings keep
+        the per-record history alive until a full drain."""
+        kc, vc, schema = generate_simulation(1_000, 3, seed=15)
+        eng = HREngine(
+            n_nodes=4, memtable_rows=1 << 30, commitlog_checkpoint_records=2
+        )
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        )
+        for _ in range(5):
+            eng.write("cf", *_batch(rng, schema, 25))  # staged everywhere
+        # the read barrier flushes exactly one replica; the other two
+        # still hold staged rows, so no checkpoint may fire
+        eng.read("cf", Query(filters={"k0": Eq(1)}, agg="count"))
+        assert eng.stats["memtable_flushes"] == 1
+        assert eng.stats["commitlog_auto_checkpoints"] == 0
+        assert eng.stats["commitlog_records"] == 6
+        eng.flush_memtables("cf")  # full drain → trigger fires
+        assert eng.stats["commitlog_auto_checkpoints"] == 1
+        assert eng.stats["commitlog_records"] == 1
+
+    def test_partitioned_logs_checkpoint_independently(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=15)
+        eng = HREngine(n_nodes=4, commitlog_checkpoint_records=3)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2], schema=schema,
+            partitions=2,
+        )
+        cf = eng.column_families["cf"]
+        # writes confined to partition 1's token range (leading key in
+        # the upper half of its domain)
+        dom = schema.max_value("k0") + 1
+        for _ in range(6):
+            bk, bv = _batch(rng, schema, 20)
+            bk["k0"] = np.full(20, dom - 1, dtype=np.int64)
+            eng.write("cf", bk, bv)
+        assert eng.stats["commitlog_auto_checkpoints"] >= 1
+        assert len(cf.partitions[0].commitlog) == 1  # untouched: base only
+        assert len(cf.partitions[1].commitlog) <= 4
+        total = sum(p.commitlog.n_rows for p in cf.partitions)
+        assert total == 2_000 + 6 * 20
 
 
 class TestFlushAtomicity:
