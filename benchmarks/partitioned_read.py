@@ -25,18 +25,32 @@ The ``p{P}_qps`` keys feed the CI regression gate
 (``scripts/bench_gate.py``) alongside the batched-read queries/sec;
 the result cache is disabled so repeats measure the storage path, not
 the cache.
+
+The ``--skew`` section (PR 6) is the vnode-ring rebalance exercise: a
+Zipf(``a``)-skewed keyspace is created at ``skew_partitions`` equal
+token splits — piling most rows into the low-token partitions — then
+``HREngine.rebalance()`` moves the boundaries to the observed token
+quantiles. Reported: per-partition max/mean row imbalance before and
+after, rows migrated, and the post-rebalance drain throughput
+(``p{P}_skew_qps``, gated like the uniform keys).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Eq, HREngine, Query, Range
+from repro.core import Eq, HREngine, KeySchema, Query, Range
 from repro.core.tpch import generate_simulation
 
 from .common import record, time_fn
 
 LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _zipf_keys(rng, n_rows: int, bits: int, a: float) -> np.ndarray:
+    """Zipf(a) keys clipped into [0, 2**bits) — mass piles at 0."""
+    dom = 1 << bits
+    return np.minimum(rng.zipf(a, n_rows), dom) - 1
 
 
 def _mixed_batch(rng, schema, batch):
@@ -70,6 +84,8 @@ def run(
     seed: int = 0,
     repeats: int = 3,
     best: bool = False,
+    skew: float | None = None,
+    skew_partitions: int = 8,
 ) -> dict:
     rng = np.random.default_rng(seed)
     kc, vc, schema = generate_simulation(n_rows, 3, seed=seed)
@@ -103,7 +119,75 @@ def run(
             wall / total_q * 1e6,
             f"qps={qps:.0f};rows_scanned={rows}",
         )
+
+    if skew:
+        out.update(
+            _run_skew(
+                n_rows=n_rows,
+                batch=batch,
+                n_batches=n_batches,
+                partitions=skew_partitions,
+                a=skew,
+                seed=seed,
+                repeats=repeats,
+                best=best,
+            )
+        )
     return out
+
+
+def _run_skew(
+    *,
+    n_rows: int,
+    batch: int,
+    n_batches: int,
+    partitions: int,
+    a: float,
+    seed: int,
+    repeats: int,
+    best: bool,
+) -> dict:
+    """Zipf-skewed keyspace: equal splits → measure imbalance →
+    ``rebalance()`` → measure again, then drain the mixed batches on
+    the balanced ring."""
+    rng = np.random.default_rng(seed + 1)
+    bits = 10
+    schema = KeySchema({"k0": bits, "k1": bits, "k2": bits})
+    kc = {f"k{i}": _zipf_keys(rng, n_rows, bits, a) for i in range(3)}
+    vc = {"metric": rng.random(n_rows)}
+    batches = [_mixed_batch(rng, schema, batch) for _ in range(n_batches)]
+    total_q = batch * n_batches
+
+    eng = HREngine(n_nodes=8, result_cache=False)
+    eng.create_column_family(
+        "cf", kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
+        partitions=partitions,
+    )
+    imb_before = eng.partition_imbalance("cf")
+    rb = eng.rebalance("cf")
+
+    def drain():
+        return sum(
+            rep.rows_scanned
+            for qs in batches
+            for _, rep in eng.read_many("cf", qs)
+        )
+
+    wall, rows = time_fn(drain, repeats=repeats, best=best)
+    qps = total_q / max(wall, 1e-12)
+    record(
+        f"partitioned_read/p{partitions}_skew",
+        wall / total_q * 1e6,
+        f"qps={qps:.0f};imb={imb_before:.2f}->{rb['imbalance_after']:.2f}"
+        f";moved={rb['rows_moved']};rows_scanned={rows}",
+    )
+    return {
+        "skew_a": a,
+        "skew_imbalance_before": imb_before,
+        "skew_imbalance_after": rb["imbalance_after"],
+        "skew_rows_moved": rb["rows_moved"],
+        f"p{partitions}_skew_qps": qps,
+    }
 
 
 if __name__ == "__main__":
@@ -113,8 +197,17 @@ if __name__ == "__main__":
     ap.add_argument("--rows", type=int, default=200_000)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--partitions", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument(
+        "--skew", type=float, default=None,
+        help="Zipf exponent for the skewed rebalance section (e.g. 1.3)",
+    )
+    ap.add_argument("--skew-partitions", type=int, default=8)
     args = ap.parse_args()
     for k, v in run(
-        n_rows=args.rows, batch=args.batch, partition_counts=tuple(args.partitions)
+        n_rows=args.rows,
+        batch=args.batch,
+        partition_counts=tuple(args.partitions),
+        skew=args.skew,
+        skew_partitions=args.skew_partitions,
     ).items():
         print(k, v)

@@ -100,7 +100,9 @@ def main() -> None:
     if want("partitioned"):
         # q/s vs partition count at fixed dataset size; the smoke
         # p{P}_qps keys feed the regression gate (best-of-N, same
-        # jitter rationale as the batched gate)
+        # jitter rationale as the batched gate). The Zipf --skew
+        # section also runs at smoke scale so p{P}_skew_qps (the
+        # post-rebalance drain on a vnode ring) is gated too.
         results["partitioned"] = partitioned_read.run(
             n_rows=size(2_000_000, 200_000, 20_000),
             batch=size(256, 64, 16),
@@ -108,6 +110,8 @@ def main() -> None:
             partition_counts=(1, 2, 4) if smoke else (1, 2, 4, 8),
             repeats=11 if smoke else 3,
             best=smoke,
+            skew=1.3,
+            skew_partitions=4 if smoke else 8,
         )
     if want("write_queue"):
         results["write_queue"] = write_queue.run(

@@ -10,7 +10,9 @@ on noisy shared machines). Gated sections: batched-read queries/sec,
 write-queue committed rows/sec (the durable write path + group
 commit), recovery rows/sec (log replay and survivor re-sort), and
 partitioned-read queries/sec (scatter-gather over the token ring at
-each partition count).
+each partition count, plus the ``p{P}_skew_qps`` post-rebalance drain
+on the Zipf-skewed vnode ring — imbalance before/after and rows moved
+ride along as descriptive, ungated keys).
 
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json --update

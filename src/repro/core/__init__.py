@@ -15,7 +15,7 @@ from .ecdf import ColumnStats, TableStats
 from .engine import ColumnFamily, HREngine, Node, ReadReport, ReplicaHandle
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema, pack_columns, pack_tuple, unpack_key
-from .ring import Partition, TokenRing, place_replica
+from .ring import Partition, TokenHistogram, TokenRing, place_replica
 from .storage import CommitLog, CompactionPolicy, LogRecord, Memtable, SortedRun
 from .table import (
     ScanResult,
@@ -40,6 +40,7 @@ __all__ = [
     "ReadReport",
     "ReplicaHandle",
     "Partition",
+    "TokenHistogram",
     "TokenRing",
     "place_replica",
     "HRCAResult",

@@ -183,6 +183,37 @@ class CostModel:
         rows = estimate_rows_many(self.stats, layout, queries)
         return self.cost_fn(len(layout)).many(rows)
 
+    def rank_matrices(
+        self,
+        layouts: Sequence[Sequence[str]],
+        queries: Sequence[Query],
+        *,
+        stats: TableStats | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized Eq (1)–(2) over a layout set × query batch:
+        ``(rows, cost)`` float64 matrices of shape
+        ``[len(layouts), len(queries)]``.
+
+        The scatter-gather planner calls this once per partition with
+        ``stats=partition.stats`` so every partition's replica ranking
+        uses *that partition's* selectivities; with ``stats=None`` the
+        model's own (CF-global) stats apply — bit-identical to stacking
+        :func:`estimate_rows_many` per layout, which is what the
+        single-partition path always did.
+        """
+        st = self.stats if stats is None else stats
+        pre = precompute_query_stats(st, queries, list(st.columns))
+        rows = np.stack(
+            [estimate_rows_many(st, layout, queries, pre) for layout in layouts]
+        )
+        cost = np.stack(
+            [
+                self.cost_fn(len(layout)).many(rows[s])
+                for s, layout in enumerate(layouts)
+            ]
+        )
+        return rows, cost
+
     def min_cost(self, layouts: Sequence[Sequence[str]], query: Query) -> tuple[float, int]:
         """Eq (3): (min cost, argmin replica index)."""
         costs = [self.query_cost(a, query) for a in layouts]

@@ -166,6 +166,24 @@ class ColumnStats:
         if hasattr(self, "_cum_cache"):
             delattr(self, "_cum_cache")
 
+    def merged_with(self, other: "ColumnStats") -> "ColumnStats":
+        """Pure union of two compatible histograms (same domain and
+        binning): bin counts add. The partition-merge stats fast path —
+        two partitions' row sets are disjoint, so their histograms sum
+        to exactly the merged partition's histogram, no re-scan."""
+        if (self.domain, self.bin_width, self.n_bins) != (
+            other.domain,
+            other.bin_width,
+            other.n_bins,
+        ):
+            raise ValueError("cannot merge ColumnStats with different binning")
+        return ColumnStats(
+            domain=self.domain,
+            bin_width=self.bin_width,
+            counts=self.counts + other.counts,
+            total=self.total + other.total,
+        )
+
 
 @dataclasses.dataclass
 class TableStats:
@@ -195,3 +213,17 @@ class TableStats:
         self.n_rows += n
         for name, v in key_cols.items():
             self.columns[name].merge_values(v, device=device)
+
+    def merged_with(self, other: "TableStats") -> "TableStats":
+        """Union of two disjoint row sets' stats (partition merge):
+        per-column histograms add bin-wise — exactly the stats a full
+        re-scan of the union would produce, without the re-scan."""
+        if set(self.columns) != set(other.columns):
+            raise ValueError("cannot merge TableStats with different columns")
+        return TableStats(
+            n_rows=self.n_rows + other.n_rows,
+            columns={
+                name: cs.merged_with(other.columns[name])
+                for name, cs in self.columns.items()
+            },
+        )

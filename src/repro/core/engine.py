@@ -120,8 +120,8 @@ from .cost_model import (
 )
 from .ecdf import TableStats
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
-from .keys import KeySchema
-from .ring import Partition, ReplicaHandle, TokenRing, place_replica
+from .keys import KeySchema, pack_columns
+from .ring import Partition, ReplicaHandle, TokenHistogram, TokenRing, place_replica
 from .storage import CommitLog, CompactionPolicy, Memtable, compact_table
 from .table import ScanResult, SortedTable, merge_partial_scans, slab_bounds_many
 from .workload import Query, Workload
@@ -152,10 +152,15 @@ class ColumnFamily:
     holding a full heterogeneous replica set of that range's rows with
     its own commit log, memtables, compaction policy and round-robin
     counter. ``slot_layouts`` (the HRCA/TR/explicit choice) is shared
-    by every partition — replica ``partition_id * RF + slot`` always
-    serializes in ``slot_layouts[slot]``. Stats and the cost model stay
-    column-family-global: selectivities describe the whole dataset, so
-    one cost matrix ranks every partition's replica set.
+    by every partition — a partition's slot-``s`` replica always
+    serializes in ``slot_layouts[s]``, under global replica id
+    ``vnode_id * RF + s`` (``vnode_id`` is the partition's stable
+    virtual-node identity; equal to its ring position until the first
+    split/merge/rebalance renumbers the ring). ``stats`` and the cost
+    model keep the CF-global selectivities (the P = 1 planner's view
+    and the rebuild fallback); partitioned planning ranks each
+    partition's replicas with ``Partition.stats`` — that slice's own
+    selectivities.
 
     ``replicas``/``commitlog``/``memtables``/``compaction``/
     ``rr_counter`` are flat compatibility views (the single-partition
@@ -179,6 +184,13 @@ class ColumnFamily:
     # group-commit staging threshold (0 = write-through: every write
     # flushes); the per-partition durable state lives on ``partitions``
     memtable_rows: int = 0
+    # observed-token histogram (P > 1 only): fed by CREATE and every
+    # write, read by the rebalance drift trigger and the histogram
+    # boundary proposal
+    token_hist: TokenHistogram | None = None
+    # next unused virtual-node id — vnode ids are never reused, so
+    # migrated partitions' replica ids can never collide with live ones
+    next_vnode: int = 0
 
     @property
     def replication_factor(self) -> int:
@@ -295,6 +307,7 @@ class HREngine:
         memtable_rows: int = 0,
         compaction: CompactionPolicy | None = None,
         commitlog_checkpoint_records: int = 256,
+        rebalance_imbalance: float = 0.0,
     ) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
@@ -329,9 +342,22 @@ class HREngine:
         # since its last snapshot (0 disables; checkpoint_commitlog
         # stays as the manual form)
         self.commitlog_checkpoint_records = commitlog_checkpoint_records
+        # skew-drift auto-rebalance: after a write-path flush, any P > 1
+        # column family whose token histogram puts more than
+        # ``rebalance_imbalance`` × the mean row mass in one partition
+        # is rebalanced in place (0 disables; ``rebalance`` stays as
+        # the manual form)
+        if rebalance_imbalance < 0:
+            raise ValueError("rebalance_imbalance must be >= 0 (0 = manual only)")
+        self.rebalance_imbalance = rebalance_imbalance
         self._flushes = 0
         self._compactions = 0
         self._auto_checkpoints = 0
+        # migration observability (satellite counters)
+        self._partition_splits = 0
+        self._partition_merges = 0
+        self._rebalance_rows_moved = 0
+        self._empty_partition_skips = 0
         # cumulative seconds spent in memtable flushes (incl. the ones
         # a read barrier triggers, which are write-path cost and NOT
         # attributed to any ReadReport.wall_seconds)
@@ -382,6 +408,14 @@ class HREngine:
             ),
             "memtable_flushes": self._flushes,
             "compactions": self._compactions,
+            # ring-migration observability: boundary insertions/removals
+            # and the rows whose partition ownership a migration rebuilt
+            "partition_splits": self._partition_splits,
+            "partition_merges": self._partition_merges,
+            "rebalance_rows_moved": self._rebalance_rows_moved,
+            # (partition, query) launches the scatter path skipped
+            # because the partition provably held no rows in the slab
+            "empty_partition_skips": self._empty_partition_skips,
             # cumulative wall of ALL flushes. Flushes inside write()
             # (write-through or threshold-crossing) also count toward
             # that write's returned wall — don't sum the two. The
@@ -487,6 +521,7 @@ class HREngine:
         memtable_rows: int | None = None,
         compaction: CompactionPolicy | None = None,
         partitions: int = 1,
+        partition_balance: str = "equal",
     ) -> ColumnFamily:
         """CREATE COLUMN FAMILY: choose replica structures, build tables.
 
@@ -523,6 +558,18 @@ class HREngine:
         partial aggregates on the host; writes route rows to the owning
         partitions' logs. ``partitions=1`` (default) is bit-identical
         to the unpartitioned engine.
+
+        ``partition_balance`` picks the initial boundaries: ``"equal"``
+        (default) splits the key *space* evenly — the historical,
+        skew-oblivious form; ``"tokens"`` places the boundaries at
+        exact quantiles of the CREATE dataset's observed tokens, so a
+        Zipf-skewed keyspace starts balanced in *rows* instead
+        (``TokenRing.from_tokens``; ``rebalance`` applies the same
+        boundaries to a live column family). Either way each partition
+        carries its own ``TableStats`` (P > 1) and the planner ranks
+        its replicas with that partition's selectivities; with
+        ``mechanism="HR"`` the HRCA search itself optimizes the
+        row-fraction-weighted blend of per-partition cost models.
         """
         if name in self.column_families:
             raise ValueError(f"column family {name!r} exists")
@@ -533,6 +580,40 @@ class HREngine:
         model = CostModel(stats=stats, cost_fns=dict(cost_fns or {}))
         n = replication_factor
         hrca_result: HRCAResult | None = None
+
+        # ring + per-partition stats come BEFORE the layout choice: the
+        # HR search over a partitioned CF optimizes against each
+        # partition's own selectivities, not the CF-global blend
+        value_names = tuple(value_cols)
+        policy = compaction if compaction is not None else self.compaction
+        tokens = token_hist = None
+        part_stats: list[TableStats | None]
+        if partitions == 1:
+            ring = TokenRing.build(schema, key_names, 1)
+            owner_masks: list = [None]  # whole dataset, no slicing copies
+            part_stats = [None]
+        else:
+            kc_arr = {c: np.asarray(key_cols[c]) for c in key_names}
+            tokens = pack_columns(kc_arr, key_names, schema)
+            if partition_balance == "equal":
+                ring = TokenRing.build(schema, key_names, partitions)
+            elif partition_balance == "tokens":
+                ring = TokenRing.from_tokens(schema, key_names, tokens, partitions)
+            else:
+                raise ValueError(
+                    f"unknown partition_balance {partition_balance!r} "
+                    "(expected 'equal' or 'tokens')"
+                )
+            pids = ring.partition_of_tokens(tokens)
+            owner_masks = [pids == pid for pid in range(partitions)]
+            part_stats = [
+                TableStats.from_columns(
+                    {c: kc_arr[c][mask] for c in key_names}, schema
+                )
+                for mask in owner_masks
+            ]
+            token_hist = TokenHistogram.build(ring.total_bits)
+            token_hist.add_tokens(tokens, device=device_resident)
 
         if layouts is not None:
             chosen = tuple(tuple(a) for a in layouts)
@@ -548,22 +629,24 @@ class HREngine:
             if workload is None:
                 raise ValueError("HR mechanism needs a workload for HRCA")
             kw = dict(hrca_kwargs or {})
-            hrca_result = hrca(model, workload, initial_state(key_names, n), **kw)
+            if partitions == 1:
+                hrca_model = model
+            else:
+                # per-partition models weighted by row fraction — the
+                # shared layout set is optimized for what each
+                # partition actually serves (see hrca._MemoCost)
+                hrca_model = [
+                    (
+                        float(ps.n_rows),
+                        CostModel(stats=ps, cost_fns=dict(cost_fns or {})),
+                    )
+                    for ps in part_stats
+                ]
+            hrca_result = hrca(hrca_model, workload, initial_state(key_names, n), **kw)
             chosen = hrca_result.layouts
         else:
             raise ValueError(f"unknown mechanism {mechanism!r}")
 
-        value_names = tuple(value_cols)
-        policy = compaction if compaction is not None else self.compaction
-        ring = TokenRing.build(schema, key_names, partitions)
-        if partitions == 1:
-            owner_masks = [None]  # whole dataset, no slicing copies
-        else:
-            tokens = ring.tokens(
-                {c: np.asarray(key_cols[c]) for c in key_names}, schema
-            )
-            pids = ring.partition_of_tokens(tokens)
-            owner_masks = [pids == pid for pid in range(partitions)]
         parts: list[Partition] = []
         for pid, mask in enumerate(owner_masks):
             if mask is None:
@@ -587,17 +670,20 @@ class HREngine:
             log = CommitLog(key_names=key_names, value_names=value_names)
             log.append(kc_p, vc_p)  # record 0: the rows this partition owns
             lo, hi = ring.token_range(pid)
-            parts.append(
-                Partition(
-                    partition_id=pid,
-                    token_lo=lo,
-                    token_hi=hi,
-                    replicas=handles,
-                    commitlog=log,
-                    memtables=memtables,
-                    compaction=policy,
-                )
+            part = Partition(
+                partition_id=pid,
+                token_lo=lo,
+                token_hi=hi,
+                replicas=handles,
+                commitlog=log,
+                memtables=memtables,
+                compaction=policy,
+                vnode_id=pid,  # birth identity == ring position at CREATE
+                stats=part_stats[pid],
             )
+            if tokens is not None:
+                part.observe_tokens(tokens[owner_masks[pid]])
+            parts.append(part)
 
         cf = ColumnFamily(
             name=name,
@@ -614,6 +700,8 @@ class HREngine:
             memtable_rows=(
                 self.memtable_rows if memtable_rows is None else memtable_rows
             ),
+            token_hist=token_hist,
+            next_vnode=partitions,
         )
         self.column_families[name] = cf
         return cf
@@ -900,14 +988,21 @@ class HREngine:
         same packing the ring's tokens use — are intersected with the
         ring's contiguous token ranges, giving a contiguous partition
         span per query (an equality filter on the leading canonical key
-        pins one partition; an open scan fans out to all). Per touched
+        pins one partition; an open scan fans out to all). A
+        ``(partition, query)`` pair whose slab is disjoint from the
+        partition's observed committed-token range
+        (``Partition.may_contain`` — append-only writes keep the
+        extrema monotone, so the test is never stale) is dropped before
+        grouping: no device launch and no result-cache probe for a
+        partition that provably contributes zero rows. Per surviving
         partition the Cost Evaluator ranks that partition's *live*
-        replicas with the CF-global cost matrix (stats describe the
-        whole dataset, so the matrix is shared), the RR tie-break draws
-        from the partition's own counter, and each ``(partition,
-        replica)`` group runs the ordinary grouped execution — device-
-        resident partitions answer with the fused locate+scan launch,
-        and the per-replica result cache applies per partition replica.
+        replicas with the partition's own ``TableStats`` (its slice's
+        selectivities — the CF-global stats are only the fallback), the
+        RR tie-break draws from the partition's own counter, and each
+        ``(partition, replica)`` group runs the ordinary grouped
+        execution — device-resident partitions answer with the fused
+        locate+scan launch, and the per-replica result cache applies
+        per partition replica.
 
         **Gather** (host): per query, sum/count partial aggregates add
         up across its partitions in ring order, and select indices
@@ -915,36 +1010,28 @@ class HREngine:
         host-ordered via the table's ``row_map``) are offset into the
         global index space — partitions in ring order, each in its
         chosen replica's serialization order (``merge_partial_scans``).
-        The merged report carries the first touched partition's routing
-        choice and the summed wall/rows_scanned.
+        The merged report carries the first executing partition's
+        routing choice and the summed wall/rows_scanned; a query all of
+        whose partitions were skipped gets a synthetic empty result and
+        a placeholder report (``replica_id == node_id == -1`` — no
+        replica was consulted).
         """
         n_q = len(queries)
         ring = cf.ring
         bounds = slab_bounds_many(queries, cf.key_names, cf.schema)
         p_lo, p_hi = ring.span_partitions(bounds)
 
-        # CF-global cost matrix over the replica slots, shared by every
-        # partition (same vectorized Eq 1-2 as the single-partition path)
-        pre = precompute_query_stats(cf.stats, queries, cf.key_names)
-        rows_mat = np.stack(
-            [
-                estimate_rows_many(cf.stats, layout, queries, pre)
-                for layout in cf.slot_layouts
-            ]
-        )
-        cost_mat = np.stack(
-            [
-                cf.cost_model.cost_fn(len(layout)).many(rows_mat[s])
-                for s, layout in enumerate(cf.slot_layouts)
-            ]
-        )
-
         touched: dict[int, list[int]] = {}
         for qi in range(n_q):
             for pid in range(int(p_lo[qi]), int(p_hi[qi]) + 1):
+                part = cf.partitions[pid]
+                if not part.may_contain(int(bounds[qi, 0]), int(bounds[qi, 1])):
+                    self._empty_partition_skips += 1
+                    continue
                 touched.setdefault(pid, []).append(qi)
 
         rf = cf.replication_factor
+        n_slots = len(cf.slot_layouts)
         partials: dict[int, tuple[list, list]] = {}
         for pid in sorted(touched):
             part = cf.partitions[pid]
@@ -954,7 +1041,20 @@ class HREngine:
                 raise RuntimeError(
                     f"no live replica for partition {pid} of {cf.name!r}"
                 )
-            slots = [r.replica_id - pid * rf for r in live]
+            # this partition's replica ranking, from ITS OWN stats: the
+            # same vectorized Eq 1-2 as the single-partition path, but
+            # the selectivities describe the partition's row slice
+            group = [queries[i] for i in qidx]
+            rows_sub, cost_sub = cf.cost_model.rank_matrices(
+                cf.slot_layouts, group, stats=part.stats
+            )
+            # scatter the group estimates back to full batch width —
+            # _execute_group indexes them by global query index
+            rows_mat = np.zeros((n_slots, n_q))
+            cost_mat = np.zeros((n_slots, n_q))
+            rows_mat[:, qidx] = rows_sub
+            cost_mat[:, qidx] = cost_sub
+            slots = [r.replica_id - part.vnode_id * rf for r in live]
             sub_cost = cost_mat[np.asarray(slots)][:, qidx]  # (live, group)
             order, picks = _schedule_picks(sub_cost, part.rr_counter)
 
@@ -979,9 +1079,36 @@ class HREngine:
         offsets = self._partition_row_offsets(cf)
         out: list[tuple[ScanResult, ReadReport]] = []
         for qi in range(n_q):
-            pids = range(int(p_lo[qi]), int(p_hi[qi]) + 1)
-            scans = [(partials[pid][0][qi], int(offsets[pid])) for pid in pids]
-            reps: list[ReadReport] = [partials[pid][1][qi] for pid in pids]
+            scans = []
+            reps: list[ReadReport] = []
+            for pid in range(int(p_lo[qi]), int(p_hi[qi]) + 1):
+                if pid not in partials or partials[pid][0][qi] is None:
+                    continue  # skipped: provably no rows in this slab
+                scans.append((partials[pid][0][qi], int(offsets[pid])))
+                reps.append(partials[pid][1][qi])
+            if not scans:
+                # every candidate partition was skipped — the query
+                # provably matches nothing; synthesize the empty result
+                # without consulting any replica
+                empty_sel = (
+                    np.empty(0, dtype=np.int64)
+                    if queries[qi].agg == "select"
+                    else None
+                )
+                out.append(
+                    (
+                        ScanResult(0.0, 0, 0, empty_sel),
+                        ReadReport(
+                            replica_id=-1,
+                            node_id=-1,
+                            estimated_rows=0.0,
+                            estimated_cost=0.0,
+                            wall_seconds=0.0,
+                            rows_scanned=0,
+                        ),
+                    )
+                )
+                continue
             merged = merge_partial_scans(scans, queries[qi].agg)
             first = reps[0]
             out.append(
@@ -999,6 +1126,247 @@ class HREngine:
                 )
             )
         return out
+
+    # -- ring migration (vnode split / merge / rebalance) ---------------------
+
+    def partition_imbalance(self, cf_name: str) -> float:
+        """Max/mean committed-row imbalance across the ring (1.0 =
+        perfectly balanced). The exact form of the histogram drift
+        signal — ``rebalance`` reports it before/after."""
+        cf = self.column_families[cf_name]
+        rows = np.array(
+            [p.n_rows_committed for p in cf.partitions], dtype=np.float64
+        )
+        total = rows.sum()
+        if total <= 0:
+            return 1.0
+        return float(rows.max() / (total / rows.size))
+
+    def split_partition(
+        self, cf_name: str, partition_id: int, token: int | None = None
+    ) -> int:
+        """Online split: cut one partition's token range in two at
+        ``token`` (rows with canonical token ≥ ``token`` move to the
+        right child). Default cut: the partition's median committed
+        token — the boundary that halves its *rows*, not its key range.
+        Both children are new vnodes built by replaying token-sliced
+        copies of the parent's commit log (see ``_reshard``); every
+        other partition is untouched. Returns the cut token."""
+        cf = self.column_families[cf_name]
+        part = cf.partitions[partition_id]
+        if token is None:
+            kc, _ = part.commitlog.replay_columns()
+            toks = np.sort(pack_columns(kc, cf.key_names, cf.schema))
+            if toks.size:
+                token = int(toks[toks.size // 2])
+            else:
+                token = (part.token_lo + part.token_hi + 1) // 2
+            # a median equal to the range start cannot form a boundary
+            # (the left child would own nothing of the cut); nudge right
+            token = max(token, part.token_lo + 1)
+        token = int(token)
+        if not part.token_lo < token <= part.token_hi:
+            raise ValueError(
+                f"split token {token} outside partition {partition_id}'s "
+                f"range ({part.token_lo}, {part.token_hi}]"
+            )
+        self._reshard(cf, sorted(cf.ring.starts + (token,)))
+        return token
+
+    def merge_partitions(self, cf_name: str, partition_id: int) -> None:
+        """Online merge: fuse ring-adjacent partitions ``partition_id``
+        and ``partition_id + 1`` into one new vnode whose commit log is
+        the two logs concatenated in ring order (see ``_reshard``).
+        Every other partition is untouched."""
+        cf = self.column_families[cf_name]
+        if partition_id + 1 >= cf.ring.n_partitions:
+            raise ValueError(
+                f"partition {partition_id} has no right neighbor to merge with"
+            )
+        starts = list(cf.ring.starts)
+        del starts[partition_id + 1]
+        self._reshard(cf, starts)
+
+    def rebalance(
+        self,
+        cf_name: str,
+        *,
+        partitions: int | None = None,
+        exact: bool = True,
+    ) -> dict:
+        """Load-aware rebalancing: move the ring boundaries to the
+        observed row-count quantiles, so each partition owns ~1/P of
+        the committed rows (Cassandra's vnode reassignment, done as one
+        ring-wide reshard). ``partitions`` changes the partition count
+        (default: keep P). ``exact=True`` (default) takes quantiles of
+        the exact committed tokens replayed from the partition logs —
+        what the ≤ 1.25× imbalance target needs; ``exact=False`` uses
+        the column family's token *histogram* proposal instead (cheaper,
+        resolution = one histogram bin). Partitions whose range is
+        unchanged keep all state; the rest migrate by log slicing +
+        replay (``_reshard``). Returns an info dict with the imbalance
+        before/after and the rows moved. No-op (zero rows moved) when
+        the boundaries come out unchanged.
+
+        The engine's ``rebalance_imbalance`` knob arms an automatic
+        form: after a write-path flush, a P > 1 column family whose
+        histogram drift exceeds the threshold rebalances itself.
+        """
+        cf = self.column_families[cf_name]
+        P = cf.ring.n_partitions if partitions is None else int(partitions)
+        before = self.partition_imbalance(cf_name)
+        if exact or cf.token_hist is None:
+            toks = np.concatenate(
+                [
+                    pack_columns(
+                        p.commitlog.replay_columns()[0], cf.key_names, cf.schema
+                    )
+                    for p in cf.partitions
+                ]
+            )
+            new_ring = TokenRing.from_tokens(cf.schema, cf.key_names, toks, P)
+        else:
+            new_ring = TokenRing.from_histogram(
+                cf.schema, cf.key_names, cf.token_hist, P
+            )
+        moved = 0
+        if new_ring.starts != cf.ring.starts:
+            moved = self._reshard(cf, new_ring.starts)
+        return {
+            "partitions": P,
+            "imbalance_before": before,
+            "imbalance_after": self.partition_imbalance(cf_name),
+            "rows_moved": moved,
+        }
+
+    def _reshard(self, cf: ColumnFamily, new_starts: Sequence[int]) -> int:
+        """Rebuild the ring around new boundaries; returns rows moved.
+
+        The migration contract (documented in ``repro.core.ring``):
+
+        * a partition whose inclusive ``[lo, hi]`` range appears
+          unchanged in the new ring is KEPT — same vnode, same log,
+          same tables, memtables, stats, caches and RR counter; only
+          its ``partition_id`` (ring position) is renumbered;
+        * every other new range becomes a fresh vnode whose commit log
+          is the token-sliced concatenation (ring order, fresh LSNs) of
+          the overlapping old partitions' logs, and whose replica
+          tables are built by replaying that log — the exact
+          ``recover_node(source="log")`` path, so post-migration
+          log-replay recovery is bit-identical to a surviving peer by
+          construction. Staged-but-unflushed rows ride along for free:
+          they are already log records, so the replay includes them and
+          the fresh memtables start empty;
+        * only migrated replica ids lose node tables and result-cache
+          entries; a replica placed on a dead node is simply not
+          installed (``recover_node`` rebuilds it from the new log).
+
+        Counters: every boundary present in the new ring but not the
+        old is a split, every boundary dropped is a merge, and the
+        committed rows of all rebuilt partitions count as moved.
+        """
+        new_ring = cf.ring.with_starts(new_starts)
+        old_parts = list(cf.partitions)
+        old_ranges = [(p.token_lo, p.token_hi) for p in old_parts]
+        old_by_range = dict(zip(old_ranges, old_parts))
+        new_ranges = [
+            new_ring.token_range(pid) for pid in range(new_ring.n_partitions)
+        ]
+        rf = cf.replication_factor
+
+        new_parts: list[Partition] = []
+        rows_moved = 0
+        for pid, (nlo, nhi) in enumerate(new_ranges):
+            kept = old_by_range.get((nlo, nhi))
+            if kept is not None:
+                kept.partition_id = pid
+                for r in kept.replicas:
+                    r.partition_id = pid
+                new_parts.append(kept)
+                continue
+            overlap = [
+                p
+                for p, (olo, ohi) in zip(old_parts, old_ranges)
+                if not (ohi < nlo or olo > nhi)
+            ]
+
+            def in_range(kc, _lo=nlo, _hi=nhi):
+                t = pack_columns(kc, cf.key_names, cf.schema)
+                return (t >= _lo) & (t <= _hi)
+
+            log = CommitLog.concatenated(
+                [p.commitlog.sliced(in_range) for p in overlap]
+            )
+            kc, vc = log.replay_columns()
+            toks = pack_columns(kc, cf.key_names, cf.schema)
+            # stats: pure-union merges add histograms bin-wise (exact —
+            # disjoint row sets); a range cut inside an old partition
+            # recomputes from the replayed slice
+            if (
+                len(overlap) > 1
+                and overlap[0].token_lo == nlo
+                and overlap[-1].token_hi == nhi
+                and all(p.stats is not None for p in overlap)
+            ):
+                stats_p = overlap[0].stats
+                for p in overlap[1:]:
+                    stats_p = stats_p.merged_with(p.stats)
+            else:
+                stats_p = TableStats.from_columns(kc, cf.schema)
+            vnode = cf.next_vnode
+            cf.next_vnode += 1
+            handles: list[ReplicaHandle] = []
+            memtables: dict[int, Memtable] = {}
+            for slot, layout in enumerate(cf.slot_layouts):
+                rid = vnode * rf + slot
+                node_id = self._place(rid, cf.name)
+                if self.nodes[node_id].alive:
+                    table = SortedTable.from_columns(kc, vc, layout, cf.schema)
+                    if cf.device_resident:
+                        table.place_on_device()
+                    self.nodes[node_id].tables[(cf.name, rid)] = table
+                handles.append(
+                    ReplicaHandle(rid, tuple(layout), node_id, partition_id=pid)
+                )
+                memtables[rid] = Memtable(
+                    layout, cf.schema, cf.key_names, cf.value_names
+                )
+            part = Partition(
+                partition_id=pid,
+                token_lo=nlo,
+                token_hi=nhi,
+                replicas=handles,
+                commitlog=log,
+                memtables=memtables,
+                compaction=overlap[0].compaction if overlap else cf.compaction,
+                vnode_id=vnode,
+                stats=stats_p,
+            )
+            part.observe_tokens(toks)
+            new_parts.append(part)
+            rows_moved += log.n_rows
+
+        # retire the migrated old partitions: their replica ids vanish,
+        # so their node tables and result-cache entries (ONLY theirs —
+        # kept partitions' caches stay warm) go with them
+        kept_ids = {id(p) for p in new_parts}
+        for part in old_parts:
+            if id(part) in kept_ids:
+                continue
+            for r in part.replicas:
+                self.nodes[r.node_id].tables.pop((cf.name, r.replica_id), None)
+                self._result_cache.pop((cf.name, r.replica_id), None)
+                self._cache_sel_bytes.pop((cf.name, r.replica_id), None)
+            part.memtables.clear()
+
+        old_set = set(cf.ring.starts)
+        new_set = set(new_ring.starts)
+        self._partition_splits += len(new_set - old_set)
+        self._partition_merges += len(old_set - new_set)
+        self._rebalance_rows_moved += rows_moved
+        cf.ring = new_ring
+        cf.partitions = new_parts
+        return rows_moved
 
     # -- Write Scheduler (commit log → memtable → sorted runs) ----------------
 
@@ -1050,10 +1418,13 @@ class HREngine:
             parallel = self.parallel_writes
         t0 = time.perf_counter()
         if cf.ring.n_partitions == 1:
-            routed = [(cf.partitions[0], key_cols, value_cols)]
+            routed = [(cf.partitions[0], key_cols, value_cols, None)]
         else:
             kc_arr = {c: np.asarray(key_cols[c]) for c in cf.key_names}
-            pids = cf.ring.partition_of_tokens(cf.ring.tokens(kc_arr, cf.schema))
+            tokens = cf.ring.tokens(kc_arr, cf.schema)
+            pids = cf.ring.partition_of_tokens(tokens)
+            if cf.token_hist is not None:
+                cf.token_hist.add_tokens(tokens, device=cf.device_resident)
             routed = []
             for pid in np.unique(pids):
                 mask = pids == pid
@@ -1065,13 +1436,14 @@ class HREngine:
                             c: np.asarray(value_cols[c])[mask]
                             for c in cf.value_names
                         },
+                        tokens[mask],
                     )
                 )
         # missed writes on dead nodes are repaired by Recovery (the log
         # has every record; dead replicas neither stage nor flush). The
         # record's columns are the log's own immutable copies, so every
         # memtable stages them by reference — one copy per write, not RF
-        for part, kc_p, vc_p in routed:
+        for part, kc_p, vc_p, toks_p in routed:
             part.commitlog.append(kc_p, vc_p)
             rec = part.commitlog.tail
             for r in part.replicas:
@@ -1079,6 +1451,12 @@ class HREngine:
                     part.memtables[r.replica_id].stage(
                         rec.key_cols, rec.value_cols, copy=False
                     )
+            if toks_p is not None:
+                part.observe_tokens(toks_p)
+            if part.stats is not None:
+                # incremental per-partition selectivities: the routed
+                # sub-batch folds into exactly the partition it joined
+                part.stats.merge_rows(rec.key_cols, device=cf.device_resident)
         cf.stats.merge_rows(key_cols, device=cf.device_resident)
         # the threshold check spans ALL live replicas, not just this
         # write's routed partitions: rows staged earlier in a partition
@@ -1092,6 +1470,19 @@ class HREngine:
             )
         if flush:
             self._flush_replicas(cf, live, parallel=parallel)
+            # skew-drift trigger: when the observed-token histogram says
+            # one partition's row mass drifted past the threshold × mean,
+            # rebalance in place (boundaries to observed quantiles).
+            # Post-flush only — migration replays logs, so rebalancing a
+            # freshly flushed CF never races staged state
+            if (
+                self.rebalance_imbalance > 0
+                and cf.ring.n_partitions > 1
+                and cf.token_hist is not None
+                and cf.token_hist.imbalance(cf.ring.starts)
+                > self.rebalance_imbalance
+            ):
+                self.rebalance(cf_name)
         return time.perf_counter() - t0
 
     def _flush_replicas(

@@ -45,27 +45,66 @@ class HRCAResult:
     trace: list[float]  # accepted-cost trajectory (for convergence bench)
 
 
-class _MemoCost:
-    """Eq (4) with per-(layout, query-index) memoization."""
+#: What the search optimizes against: one CF-global model, or a
+#: row-fraction-weighted set of per-partition models (the vnode ring's
+#: view — every partition serves every query with its own selectivities,
+#: so the state cost is the weighted sum of per-partition Eq (4)).
+ModelSpec = "CostModel | Sequence[tuple[float, CostModel]]"
 
-    def __init__(self, model: CostModel, workload: Workload) -> None:
-        self.model = model
+
+def _normalize_models(model) -> list[tuple[float, CostModel]]:
+    if isinstance(model, CostModel):
+        return [(1.0, model)]
+    models = [(float(w), m) for w, m in model]
+    if not models:
+        raise ValueError("need at least one cost model")
+    total = sum(w for w, _ in models)
+    if total <= 0:  # empty partitions everywhere — weight uniformly
+        return [(1.0 / len(models), m) for _, m in models]
+    return [(w / total, m) for w, m in models]
+
+
+class _MemoCost:
+    """Eq (4) with per-(layout, query-index) memoization.
+
+    Accepts a single :class:`CostModel` or a weighted sequence
+    ``[(weight, model), ...]`` (per-partition stats); a query's cost is
+    then the weight-blended cost across models — each partition picks
+    its own cheapest replica at serve time, but the *layout set* is
+    shared ring-wide, so construction optimizes the blend."""
+
+    def __init__(self, model, workload: Workload) -> None:
+        self.models = _normalize_models(model)
         self.workload = workload
         self.weights = workload.normalized_weights()
-        self._cache: dict[tuple[tuple[str, ...], int], float] = {}
+        self._cache: dict[tuple[tuple[str, ...], int], tuple[float, ...]] = {}
 
-    def query_cost(self, layout: tuple[str, ...], qi: int) -> float:
+    def _model_costs(self, layout: tuple[str, ...], qi: int) -> tuple[float, ...]:
+        """Per-model ``weight · Cost(layout, q)`` for one query."""
         key = (layout, qi)
         c = self._cache.get(key)
         if c is None:
-            c = self.model.query_cost(layout, self.workload.queries[qi])
+            q = self.workload.queries[qi]
+            c = tuple(w * m.query_cost(layout, q) for w, m in self.models)
             self._cache[key] = c
         return c
 
+    def query_cost(self, layout: tuple[str, ...], qi: int) -> float:
+        return float(sum(self._model_costs(layout, qi)))
+
     def state_cost(self, state: State) -> float:
+        """Eq (4), generalized: each partition serves each query from
+        *its own* cheapest replica, so the min over the layout set is
+        taken per model, then blended — ``Σ_q w_q Σ_p w_p min_r
+        Cost_p(r, q)``. With a single model this reduces exactly to the
+        paper's ``Σ_q w_q min_r Cost(r, q)``."""
+        n_m = len(self.models)
         total = 0.0
         for qi, w in enumerate(self.weights):
-            total += w * min(self.query_cost(a, qi) for a in state)
+            per_layout = [self._model_costs(a, qi) for a in state]
+            total += w * sum(
+                min(pc[p] for pc in per_layout) for p in range(n_m)
+            )
         return float(total)
 
 
@@ -106,7 +145,7 @@ def _greedy_polish(state: State, memo: _MemoCost) -> tuple[State, float]:
 
 
 def hrca(
-    model: CostModel,
+    model: "CostModel | Sequence[tuple[float, CostModel]]",
     workload: Workload,
     initial: State,
     *,
@@ -118,7 +157,13 @@ def hrca(
     greedy_descent: bool = False,
 ) -> HRCAResult:
     """Algorithm 1. ``t0`` defaults to the initial cost (so early uphill
-    moves of relative size ~1 are accepted with prob ~1/e)."""
+    moves of relative size ~1 are accepted with prob ~1/e).
+
+    ``model`` may be a single :class:`CostModel` or a weighted sequence
+    ``[(weight, model), ...]`` — the vnode ring passes one model per
+    partition, weighted by the partition's row fraction, so the shared
+    layout set is optimized against per-partition selectivities rather
+    than the CF-global blend (see ``_MemoCost.state_cost``)."""
     memo = _MemoCost(model, workload)
     rng = np.random.default_rng(seed)
     start = time.perf_counter()
@@ -158,7 +203,10 @@ def hrca(
 
 
 def exhaustive_search(
-    model: CostModel, workload: Workload, key_cols: Sequence[str], n_replicas: int
+    model: "CostModel | Sequence[tuple[float, CostModel]]",
+    workload: Workload,
+    key_cols: Sequence[str],
+    n_replicas: int,
 ) -> tuple[State, float]:
     """Enumerate all multisets of permutations — the tiny-instance oracle
     used to test HRCA optimality (feasible for m ≤ 4, N ≤ 3)."""

@@ -38,6 +38,60 @@ start tokens, the same pure-arithmetic style as the slab walk itself.
 An equality filter on the leading canonical key pins the query to a
 single partition (Cassandra's partition-key point read); an open query
 fans out to all ``P``.
+
+Virtual nodes, skew, and migration (PR 6)
+-----------------------------------------
+
+Equal token splits balance *key space*, not *rows*: a Zipf-skewed
+keyspace piles most rows into the low-token partitions and starves the
+rest, which both unbalances storage and blunts the Cost Evaluator (a
+CF-global histogram misdescribes every individual partition). Three
+mechanisms fix that, Cassandra-vnode style:
+
+* **Identity.** Each :class:`Partition` carries a stable ``vnode_id``
+  assigned once at birth and never reused; global replica ids are
+  ``vnode_id * RF + slot`` so node-table keys, result-cache keys and
+  crc32 placement survive ring surgery unchanged for partitions that
+  did not move. ``partition_id`` remains the *ring position* (index
+  into ``TokenRing.starts``) and is renumbered after a migration — it
+  is a routing coordinate, not an identity.
+* **Skew-aware boundaries.** :meth:`TokenRing.from_tokens` places the
+  ``P-1`` interior boundaries at exact quantiles of an observed token
+  stream (duplicate-token runs are rounded to whichever side lands the
+  cut closer to the ideal quantile — a boundary token need not be an
+  observed token). :class:`TokenHistogram` is the cheap device-side
+  form: a fixed-width histogram over ``token >> shift`` (≤ 4096 bins,
+  accumulated by the ``ecdf_hist`` Pallas kernel when the rows are
+  device-resident), good for drift *detection*
+  (:meth:`TokenHistogram.imbalance`) and coarse boundary *proposals*
+  (:meth:`TokenRing.from_histogram`, linear interpolation within a
+  bin); the engine's ``rebalance(exact=True)`` default uses exact
+  committed-token quantiles because the ≤ 1.25× imbalance target is
+  tighter than one histogram bin's resolution.
+* **Migration = log surgery, recovery = log replay.** An online split
+  or merge never copies table state. The new partition's commit log is
+  built by token-slicing each overlapping old partition's record
+  stream (per record, preserving intra-log commit order) and
+  concatenating the slices in ring order with fresh contiguous LSNs
+  (``CommitLog.sliced`` / ``CommitLog.concatenated``); record 0 of the
+  leftmost slice survives as the new record 0 so the CREATE-base
+  invariant holds. Every new replica table is then built by *replaying
+  that log* — exactly the ``recover_node(source="log")`` code path —
+  so post-migration log-replay recovery is bit-identical to the
+  surviving-peer re-sort *by construction*, not by audit. (Equal
+  packed keys in any layout imply equal full key tuples, hence equal
+  canonical tokens, hence the same partition: ties can never straddle
+  a boundary, so slicing commutes with the stable sorts everywhere.)
+  Partitions whose ``[lo, hi]`` range is untouched by the new
+  boundaries keep their log, tables, memtables, stats, caches and
+  round-robin state byte-for-byte; only migrated replica ids have
+  their node tables and result-cache entries dropped.
+
+Per-partition statistics ride along: ``Partition.stats`` is the
+:class:`~repro.core.ecdf.TableStats` of exactly the rows the partition
+owns, seeded at CREATE/migration and merged incrementally on every
+routed write, so ``read_many`` ranks each partition's replica set with
+that partition's selectivities rather than CF-global ones.
 """
 
 from __future__ import annotations
@@ -51,10 +105,134 @@ import numpy as np
 
 from .keys import KeySchema, pack_columns
 
+from .ecdf import TableStats
+
 if TYPE_CHECKING:  # imported for annotations only; storage never imports us
     from .storage import CommitLog, CompactionPolicy, Memtable
 
-__all__ = ["TokenRing", "Partition", "ReplicaHandle", "place_replica"]
+__all__ = [
+    "TokenHistogram",
+    "TokenRing",
+    "Partition",
+    "ReplicaHandle",
+    "place_replica",
+]
+
+#: Histogram width cap — matches the ``ecdf_hist`` kernel's bin limit.
+_HIST_MAX_BINS_LOG2 = 12
+
+
+@dataclasses.dataclass
+class TokenHistogram:
+    """Fixed-width histogram over the canonical token space.
+
+    Bin of a token is ``token >> shift`` — a pure shift so the mapping
+    is monotone and the device path stays integer-exact: shifted tokens
+    fit int32 (≤ ``2**_HIST_MAX_BINS_LOG2`` bins) and counts accumulate
+    in float32, exact below 2**24 per kernel call. Used by the engine
+    for cheap skew-drift detection (:meth:`imbalance`) and for coarse
+    quantile boundary proposals (:meth:`quantile_starts`, consumed by
+    :meth:`TokenRing.from_histogram`).
+    """
+
+    total_bits: int
+    shift: int
+    counts: np.ndarray  # float64[n_bins]
+
+    @classmethod
+    def build(cls, total_bits: int) -> "TokenHistogram":
+        bins_log2 = min(int(total_bits), _HIST_MAX_BINS_LOG2)
+        return cls(
+            total_bits=int(total_bits),
+            shift=int(total_bits) - bins_log2,
+            counts=np.zeros(1 << bins_log2, dtype=np.float64),
+        )
+
+    @property
+    def n_bins(self) -> int:
+        return self.counts.size
+
+    @property
+    def total(self) -> float:
+        return float(self.counts.sum())
+
+    def add_tokens(self, tokens: np.ndarray, *, device: bool = False) -> None:
+        """Accumulate a token batch. ``device=True`` routes the bin
+        count through the ``ecdf_hist`` Pallas kernel (float32 one-hot
+        accumulate — exact below 2**24 rows per call); otherwise a host
+        ``bincount``."""
+        tokens = np.asarray(tokens, dtype=np.int64)
+        if tokens.size == 0:
+            return
+        bins = tokens >> self.shift
+        if device and tokens.size < (1 << 24):
+            from repro.kernels import ecdf_hist  # lazy: keeps core import-light
+
+            add = np.asarray(
+                ecdf_hist(bins.astype(np.int32), n_bins=self.n_bins, bin_width=1),
+                dtype=np.float64,
+            )
+        else:
+            add = np.bincount(bins, minlength=self.n_bins).astype(np.float64)
+        self.counts += add
+
+    def partition_masses(self, starts: Sequence[int]) -> np.ndarray:
+        """Approximate row mass per partition under ``starts`` — bin
+        counts split by linear interpolation where a boundary lands
+        inside a bin."""
+        cum = np.concatenate([[0.0], np.cumsum(self.counts)])
+        edges = np.asarray(starts, dtype=np.int64)  # all < 2**total_bits, fit int64
+        bin_of = edges >> self.shift
+        rem = (edges - (bin_of << self.shift)).astype(np.float64)
+        frac = rem / float(1 << self.shift)
+        mass_at = cum[bin_of] + frac * self.counts[bin_of]
+        return np.diff(np.append(mass_at, cum[-1]))
+
+    def imbalance(self, starts: Sequence[int]) -> float:
+        """Max/mean partition row mass under ``starts`` (1.0 = perfectly
+        balanced; the engine's rebalance drift trigger)."""
+        masses = self.partition_masses(starts)
+        total = masses.sum()
+        if total <= 0 or masses.size == 0:
+            return 1.0
+        return float(masses.max() / (total / masses.size))
+
+    def quantile_starts(self, n_partitions: int) -> tuple[int, ...]:
+        """Boundary proposal: ``n_partitions`` start tokens placing the
+        interior boundaries at histogram quantiles (linear interpolation
+        within a bin). Falls back to equal splits on an empty histogram."""
+        space = 1 << self.total_bits
+        if not 1 <= n_partitions <= space:
+            raise ValueError(f"partitions must be in [1, {space}], got {n_partitions}")
+        total = self.counts.sum()
+        if total <= 0:
+            return tuple((space * p) // n_partitions for p in range(n_partitions))
+        cum = np.concatenate([[0.0], np.cumsum(self.counts)])
+        starts = [0]
+        for p in range(1, n_partitions):
+            target = total * p / n_partitions
+            b = int(np.searchsorted(cum, target, side="right")) - 1
+            b = min(max(b, 0), self.n_bins - 1)
+            in_bin = self.counts[b]
+            frac = (target - cum[b]) / in_bin if in_bin > 0 else 0.0
+            starts.append((b << self.shift) + int(frac * (1 << self.shift)))
+        return _monotone_starts(starts, space)
+
+
+def _monotone_starts(starts: Sequence[int], space: int) -> tuple[int, ...]:
+    """Force a boundary proposal strictly increasing inside the token
+    space (duplicate quantiles — e.g. one token value holding more than
+    1/P of the mass — are bumped right; the resulting empty partitions
+    are valid ring members)."""
+    out: list[int] = []
+    prev = -1
+    for s in starts:
+        s = max(int(s), prev + 1)
+        if s >= space:
+            raise ValueError(f"cannot fit {len(starts)} distinct boundaries in [0, {space})")
+        out.append(s)
+        prev = s
+    return tuple(out)
 
 
 def place_replica(cf_name: str, replica_id: int, n_nodes: int) -> int:
@@ -117,6 +295,92 @@ class TokenRing:
         starts = tuple((space * p) // n_partitions for p in range(n_partitions))
         return cls(key_names=key_names, total_bits=total_bits, starts=starts)
 
+    @classmethod
+    def from_tokens(
+        cls,
+        schema: KeySchema,
+        key_names: Sequence[str],
+        tokens: np.ndarray,
+        n_partitions: int,
+    ) -> "TokenRing":
+        """Skew-aware ring: interior boundaries at exact quantiles of an
+        observed token stream, so each partition owns ~``1/P`` of the
+        *rows* rather than of the key space.
+
+        A boundary cannot cut inside a run of equal tokens (equal token
+        ⇒ same partition), so at each ideal cut the run containing the
+        quantile token is rounded to whichever side leaves the realized
+        cut closer to the ideal one — the residual imbalance is bounded
+        by half the largest duplicate-token run. Falls back to equal
+        splits when no tokens were observed.
+        """
+        key_names = tuple(key_names)
+        schema.check_layout(key_names)
+        toks = np.sort(np.asarray(tokens, dtype=np.int64))
+        if toks.size == 0:
+            return cls.build(schema, key_names, n_partitions)
+        total_bits = schema.total_bits(key_names)
+        space = 1 << total_bits
+        if not 1 <= n_partitions <= space:
+            raise ValueError(
+                f"partitions must be in [1, {space}] for a {total_bits}-bit "
+                f"key space, got {n_partitions}"
+            )
+        n = toks.size
+        starts = [0]
+        for p in range(1, n_partitions):
+            cut = (n * p) // n_partitions
+            t = int(toks[min(cut, n - 1)])
+            left = int(np.searchsorted(toks, t, side="left"))
+            right = int(np.searchsorted(toks, t, side="right"))
+            # boundary = t puts the duplicate run of t on the right
+            # (realized cut at ``left``); boundary = t + 1 puts it on
+            # the left (realized cut at ``right``).
+            if abs(left - cut) <= abs(right - cut) or t + 1 >= space:
+                starts.append(t)
+            else:
+                starts.append(t + 1)
+        return cls(
+            key_names=key_names,
+            total_bits=total_bits,
+            starts=_monotone_starts(starts, space),
+        )
+
+    @classmethod
+    def from_histogram(
+        cls,
+        schema: KeySchema,
+        key_names: Sequence[str],
+        hist: TokenHistogram,
+        n_partitions: int,
+    ) -> "TokenRing":
+        """Skew-aware ring from a :class:`TokenHistogram` boundary
+        proposal — the cheap device-friendly variant of
+        :meth:`from_tokens` (resolution = one histogram bin)."""
+        key_names = tuple(key_names)
+        schema.check_layout(key_names)
+        total_bits = schema.total_bits(key_names)
+        if hist.total_bits != total_bits:
+            raise ValueError(
+                f"histogram covers a {hist.total_bits}-bit space, ring needs {total_bits}"
+            )
+        return cls(
+            key_names=key_names,
+            total_bits=total_bits,
+            starts=hist.quantile_starts(n_partitions),
+        )
+
+    def with_starts(self, starts: Sequence[int]) -> "TokenRing":
+        """Same key space, new boundaries (a migration's new ring).
+        Validates ``starts`` is a well-formed ring."""
+        space = 1 << self.total_bits
+        starts = tuple(int(s) for s in starts)
+        if not starts or starts[0] != 0:
+            raise ValueError("ring starts must begin at token 0")
+        if any(b <= a for a, b in zip(starts, starts[1:])) or starts[-1] >= space:
+            raise ValueError("ring starts must be strictly increasing inside the token space")
+        return TokenRing(key_names=self.key_names, total_bits=self.total_bits, starts=starts)
+
     @property
     def n_partitions(self) -> int:
         return len(self.starts)
@@ -176,6 +440,20 @@ class Partition:
     memtables: "dict[int, Memtable]" = dataclasses.field(default_factory=dict)
     compaction: "CompactionPolicy | None" = None
     rr_counter: "itertools.count" = dataclasses.field(default_factory=itertools.count)
+    #: Stable virtual-node identity — assigned at birth, never reused,
+    #: survives ring renumbering. Global replica ids are
+    #: ``vnode_id * RF + slot``.
+    vnode_id: int = 0
+    #: Selectivity stats over exactly this partition's rows (None for
+    #: single-partition CFs, which plan with the CF-global stats).
+    stats: "TableStats | None" = None
+    #: Observed committed-token extrema (None until the first row) —
+    #: the scatter path's empty-range skip test. Monotone under the
+    #: append-only write path, so never stale: a query slab disjoint
+    #: from ``[token_min, token_max]`` cannot match any committed *or*
+    #: staged row (staged rows are in the log too).
+    token_min: "int | None" = None
+    token_max: "int | None" = None
 
     @property
     def n_rows_committed(self) -> int:
@@ -184,3 +462,21 @@ class Partition:
         table length, and independent of staging state, which is what
         the cross-partition select offsets are built from."""
         return self.commitlog.n_rows if self.commitlog is not None else 0
+
+    def observe_tokens(self, tokens: np.ndarray) -> None:
+        """Fold a committed token batch into the token extrema."""
+        if tokens.size == 0:
+            return
+        lo = int(tokens.min())
+        hi = int(tokens.max())
+        self.token_min = lo if self.token_min is None else min(self.token_min, lo)
+        self.token_max = hi if self.token_max is None else max(self.token_max, hi)
+
+    def may_contain(self, slab_lo: int, slab_hi: int) -> bool:
+        """Can any committed/staged row's canonical token fall in the
+        inclusive slab ``[slab_lo, slab_hi]``? False ⇒ the partition is
+        guaranteed to contribute zero matching rows (the scatter path
+        skips the launch and the cache probe entirely)."""
+        if self.token_min is None:
+            return False
+        return not (slab_hi < self.token_min or slab_lo > self.token_max)

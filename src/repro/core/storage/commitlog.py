@@ -229,6 +229,70 @@ class CommitLog:
         self._since_checkpoint = 0
         return lsn
 
+    # -- migration surgery (vnode split/merge lineage) ---------------------
+
+    def sliced(self, row_mask) -> "CommitLog":
+        """Token-slice the record stream: a new log holding, per record
+        and in the same commit order, only the rows where
+        ``row_mask(record.key_cols)`` is True.
+
+        This is the migration half of partition split: the child
+        partition's log is a row-filtered *view of the same history*,
+        re-LSN'd contiguously from 0. Record 0 is always kept (possibly
+        empty) so the CREATE-base invariant holds; later records that
+        filter to zero rows are dropped — they carry no lineage.
+        """
+        out = CommitLog(self._key_names, self._value_names)
+        for i, rec in enumerate(self._records):
+            if rec.n_rows:
+                m = np.asarray(row_mask(rec.key_cols), dtype=bool)
+                kc = {c: v[m] for c, v in rec.key_cols.items()}
+                vc = {c: v[m] for c, v in rec.value_cols.items()}
+            else:
+                kc = {c: v.copy() for c, v in rec.key_cols.items()}
+                vc = {c: v.copy() for c, v in rec.value_cols.items()}
+            if i > 0 and next(iter(kc.values()), np.empty(0)).shape[0] == 0:
+                continue
+            out._records.append(
+                LogRecord(lsn=out._next_lsn, key_cols=kc, value_cols=vc)
+            )
+            out._next_lsn += 1
+        out._since_checkpoint = len(out._records)
+        return out
+
+    @classmethod
+    def concatenated(cls, logs: Sequence["CommitLog"]) -> "CommitLog":
+        """Concatenate record streams (the merge half of partition
+        merge): records of ``logs[0]`` in order, then ``logs[1]``, …,
+        with fresh contiguous LSNs. Pass the logs in ring order so the
+        merged partition's record 0 is the leftmost CREATE base. Empty
+        non-base records are dropped; the first log's record 0 is kept
+        even when empty.
+
+        Replaying the result concatenates exactly the per-log replays
+        in ring order — and because equal packed keys cannot straddle a
+        partition boundary, every replica's stable re-sort of that
+        replay is bit-identical to re-sorting the union (tie runs stay
+        whole, in their original commit order).
+        """
+        if not logs:
+            raise ValueError("need at least one log to concatenate")
+        out = cls(logs[0]._key_names, logs[0]._value_names)
+        for j, log in enumerate(logs):
+            for i, rec in enumerate(log._records):
+                if rec.n_rows == 0 and not (j == 0 and i == 0):
+                    continue
+                out._records.append(
+                    LogRecord(
+                        lsn=out._next_lsn,
+                        key_cols=rec.key_cols,
+                        value_cols=rec.value_cols,
+                    )
+                )
+                out._next_lsn += 1
+        out._since_checkpoint = len(out._records)
+        return out
+
     # -- byte codec --------------------------------------------------------
 
     def to_bytes(self) -> bytes:

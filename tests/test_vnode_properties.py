@@ -1,0 +1,84 @@
+"""Hypothesis property tests for vnode-ring migration (PR 6).
+
+Collected into its own module behind ``pytest.importorskip`` (same
+arrangement as ``test_properties.py``) so the deterministic vnode
+tests in ``test_vnode_ring.py`` run even when hypothesis is not
+installed — the seed image ships without it.
+
+The properties: (1) ANY sequence of online ``split_partition`` /
+``merge_partitions`` / ``rebalance`` calls leaves every read answer —
+sums, counts, and the actual selected row sets — equal to the P = 1
+oracle; (2) after any such program, ``recover_node(source="log")``
+rebuilds the failed node's replicas bit-identically to a survivor
+re-sort, i.e. commit-log lineage survives migration.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tpch import generate_simulation
+
+from test_vnode_ring import (
+    _assert_oracle_equal,
+    _engine,
+    _mixed_queries,
+    apply_migration_ops,
+)
+
+
+@st.composite
+def op_sequences(draw):
+    """Random split/merge/rebalance programs; indices are drawn wide
+    and reduced modulo the live partition count at apply time."""
+    n_ops = draw(st.integers(min_value=1, max_value=5))
+    return [
+        (
+            draw(st.sampled_from(["split", "merge", "rebalance"])),
+            draw(st.integers(min_value=0, max_value=63)),
+        )
+        for _ in range(n_ops)
+    ]
+
+
+class TestMigrationProperties:
+    @settings(max_examples=12, deadline=None)
+    @given(ops=op_sequences(), seed=st.integers(min_value=0, max_value=3))
+    def test_any_split_merge_sequence_equals_p1_oracle(self, ops, seed):
+        kc, vc, schema = generate_simulation(800, 3, seed=seed)
+        rng = np.random.default_rng(seed)
+        eng = _engine(kc, vc, schema, partitions=2, rf=1, n_nodes=4)
+        oracle = _engine(kc, vc, schema, partitions=1, rf=1, n_nodes=4)
+        apply_migration_ops(eng, ops)
+        cf = eng.column_families["cf"]
+        assert sum(p.n_rows_committed for p in cf.partitions) == 800
+        _assert_oracle_equal(
+            eng, oracle, _mixed_queries(rng, schema, n=12), rows=True
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(ops=op_sequences(), seed=st.integers(min_value=0, max_value=2))
+    def test_log_recovery_bit_identical_after_any_sequence(self, ops, seed):
+        kc, vc, schema = generate_simulation(600, 3, seed=seed)
+        eng = _engine(kc, vc, schema, partitions=2, rf=2, n_nodes=4)
+        apply_migration_ops(eng, ops)
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[0].replicas[0].node_id
+        e_log, e_sur = copy.deepcopy(eng), copy.deepcopy(eng)
+        e_log.fail_node(victim)
+        e_log.recover_node(victim, source="log")
+        e_sur.fail_node(victim)
+        e_sur.recover_node(victim, source="survivor")
+        for part in cf.partitions:
+            for r in part.replicas:
+                if r.node_id != victim:
+                    continue
+                t_log = e_log._table(e_log.column_families["cf"], r)
+                t_sur = e_sur._table(e_sur.column_families["cf"], r)
+                np.testing.assert_array_equal(t_log.packed, t_sur.packed)
+                assert t_log.dataset_fingerprint() == t_sur.dataset_fingerprint()

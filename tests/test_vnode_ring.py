@@ -1,0 +1,657 @@
+"""Virtual-node ring: skew-aware partitioning, online split/merge,
+per-partition statistics (PR 6).
+
+The acceptance bar: (1) a Zipf-skewed keyspace created at P = 8 equal
+splits drops to ≤ 1.25× max/mean row imbalance after ``rebalance()``,
+and the post-rebalance ``read_many`` answers are row-identical to the
+P = 1 oracle; (2) any sequence of ``split_partition`` / per-partition
+``merge_partitions`` calls preserves oracle equality (sums, counts,
+and the actual selected rows); (3) after a split,
+``recover_node(source="log")`` rebuilds the migrated partitions'
+replicas bit-identically to a survivor re-sort — the commit-log
+lineage survives migration; (4) partitions owning no rows in a query's
+slab range are skipped without a launch or cache probe; (5) migration
+only touches the migrated partitions — untouched vnodes keep their
+table objects and warm result-cache entries.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Eq,
+    HREngine,
+    KeySchema,
+    Query,
+    Range,
+    TableStats,
+    TokenHistogram,
+    TokenRing,
+)
+from repro.core.keys import pack_columns
+from repro.core.tpch import generate_simulation
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _zipf_columns(rng, n, schema, a=1.3):
+    """Zipf(a)-skewed key columns: mass piles at 0, so equal token
+    splits put almost everything in the first partition."""
+    out = {}
+    for c in schema.bits:
+        dom = schema.max_value(c) + 1
+        out[c] = (np.minimum(rng.zipf(a, n), dom) - 1).astype(np.int64)
+    return out
+
+
+def _mixed_queries(rng, schema, n=24, value_col="metric"):
+    qs = []
+    cols = list(schema.bits)
+    doms = {c: schema.max_value(c) + 1 for c in cols}
+    aggs = ["count", "sum", "select"]
+    for i in range(n):
+        agg = aggs[i % 3]
+        u = rng.random()
+        lead, resid = cols[0], cols[-1]
+        if u < 0.35:
+            f = {lead: Eq(int(rng.integers(0, doms[lead])))}
+        elif u < 0.65:
+            lo = int(rng.integers(0, doms[lead] - 1))
+            width = int(rng.integers(1, max(2, doms[lead] // 3)))
+            f = {lead: Range(lo, min(lo + width, doms[lead]))}
+        else:
+            lo = int(rng.integers(0, doms[resid] - 1))
+            f = {resid: Range(lo, min(lo + 2, doms[resid]))}
+        qs.append(
+            Query(filters=f, agg=agg, value_col=value_col if agg == "sum" else None)
+        )
+    return qs
+
+
+def _engine(kc, vc, schema, *, partitions, rf=3, n_nodes=6, **kw):
+    eng = HREngine(n_nodes=n_nodes, **kw)
+    eng.create_column_family(
+        "cf", kc, vc, replication_factor=rf, layouts=LAYOUTS[:rf],
+        schema=schema, partitions=partitions,
+    )
+    return eng
+
+
+def _selected_rows(eng, cf_name, selected, value_col="metric"):
+    """Materialize global select indices into (keys..., value) rows —
+    the representation-independent form oracle comparisons use (RF = 1
+    pins the serving layout)."""
+    cf = eng.column_families[cf_name]
+    offsets = eng._partition_row_offsets(cf)
+    pids = np.searchsorted(offsets, selected, side="right") - 1
+    rows = []
+    for pid, g in zip(pids, selected):
+        t = eng._table(cf, cf.partitions[int(pid)].replicas[0])
+        li = int(g - offsets[int(pid)])
+        rows.append(
+            tuple(int(t.key_cols[c][li]) for c in cf.key_names)
+            + (float(np.asarray(t.value_cols[value_col])[li]),)
+        )
+    return sorted(rows)
+
+
+def _assert_oracle_equal(eng, oracle, qs, *, rows=False):
+    for q, (a, _), (b, _) in zip(
+        qs, oracle.read_many("cf", qs), eng.read_many("cf", qs)
+    ):
+        assert b.rows_matched == a.rows_matched, q
+        if q.agg == "sum":
+            np.testing.assert_allclose(b.value, a.value, rtol=1e-9)
+        else:
+            assert b.value == a.value, q
+        if rows and q.agg == "select":
+            assert _selected_rows(eng, "cf", b.selected) == _selected_rows(
+                oracle, "cf", a.selected
+            ), q
+
+
+class TestTokenHistogram:
+    def test_masses_partition_the_total(self):
+        hist = TokenHistogram.build(total_bits=16)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, 1 << 16, 5_000)
+        hist.add_tokens(toks)
+        assert hist.total == 5_000
+        ring = TokenRing.build(KeySchema({"a": 8, "b": 8}), ("a", "b"), 4)
+        masses = hist.partition_masses(ring.starts)
+        assert masses.shape == (4,)
+        np.testing.assert_allclose(masses.sum(), 5_000)
+
+    def test_uniform_tokens_balanced_skewed_not(self):
+        hist_u = TokenHistogram.build(16)
+        hist_s = TokenHistogram.build(16)
+        rng = np.random.default_rng(1)
+        starts = TokenRing.build(KeySchema({"a": 8, "b": 8}), ("a", "b"), 4).starts
+        hist_u.add_tokens(rng.integers(0, 1 << 16, 20_000))
+        hist_s.add_tokens(rng.integers(0, 1 << 12, 20_000))  # low 1/16 only
+        assert hist_u.imbalance(starts) < 1.1
+        assert hist_s.imbalance(starts) > 3.0
+
+    def test_quantile_starts_balance_the_masses(self):
+        hist = TokenHistogram.build(20)
+        rng = np.random.default_rng(2)
+        hist.add_tokens(rng.integers(0, 1 << 14, 30_000))  # skewed low
+        starts = hist.quantile_starts(8)
+        assert len(starts) == 8 and starts[0] == 0
+        assert hist.imbalance(starts) < 1.2
+
+    def test_device_accumulation_matches_host(self):
+        h_host = TokenHistogram.build(16)
+        h_dev = TokenHistogram.build(16)
+        rng = np.random.default_rng(3)
+        toks = rng.integers(0, 1 << 16, 4_000)
+        h_host.add_tokens(toks)
+        h_dev.add_tokens(toks, device=True)
+        np.testing.assert_array_equal(h_host.counts, h_dev.counts)
+
+    def test_from_tokens_rounds_duplicate_runs(self):
+        """Exact-quantile boundaries stay within half the largest
+        duplicate run of the ideal cut — heavy hitters cannot push the
+        realized split arbitrarily far off."""
+        schema = KeySchema({"a": 6})
+        toks = np.concatenate(
+            [np.zeros(50, np.int64), np.arange(1, 51, dtype=np.int64)]
+        )
+        ring = TokenRing.from_tokens(schema, ("a",), toks, 2)
+        # ideal cut = 50 rows; boundary 1 puts the 50-row zero run left
+        assert ring.starts == (0, 1)
+
+
+class TestSkewAwareCreate:
+    def test_tokens_balance_beats_equal_splits(self):
+        schema = KeySchema({"k0": 8, "k1": 8, "k2": 8})
+        rng = np.random.default_rng(5)
+        kc = _zipf_columns(rng, 6_000, schema)
+        vc = {"metric": rng.uniform(0, 1, 6_000)}
+        eq = HREngine(n_nodes=6)
+        eq.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2],
+            schema=schema, partitions=4,
+        )
+        tk = HREngine(n_nodes=6)
+        tk.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2],
+            schema=schema, partitions=4, partition_balance="tokens",
+        )
+        assert tk.partition_imbalance("cf") <= 1.25
+        assert tk.partition_imbalance("cf") < eq.partition_imbalance("cf")
+        qs = _mixed_queries(rng, schema, n=18)
+        oracle = HREngine(n_nodes=6)
+        oracle.create_column_family(
+            "cf", kc, vc, replication_factor=2, layouts=LAYOUTS[:2],
+            schema=schema, partitions=1,
+        )
+        _assert_oracle_equal(tk, oracle, qs)
+
+    def test_invalid_balance_rejected(self):
+        kc, vc, schema = generate_simulation(500, 3, seed=0)
+        eng = HREngine(n_nodes=4)
+        with pytest.raises(ValueError, match="partition_balance"):
+            eng.create_column_family(
+                "cf", kc, vc, replication_factor=1, layouts=LAYOUTS[:1],
+                schema=schema, partitions=2, partition_balance="zipf",
+            )
+
+    def test_per_partition_stats_cover_exactly_own_rows(self):
+        kc, vc, schema = generate_simulation(3_000, 3, seed=7)
+        eng = _engine(kc, vc, schema, partitions=4)
+        cf = eng.column_families["cf"]
+        assert all(p.stats is not None for p in cf.partitions)
+        assert (
+            sum(p.stats.n_rows for p in cf.partitions) == 3_000
+        )
+        for p in cf.partitions:
+            assert p.stats.n_rows == p.n_rows_committed
+        # P = 1 keeps the CF-global model (no per-partition stats)
+        e1 = _engine(kc, vc, schema, partitions=1)
+        assert e1.column_families["cf"].partitions[0].stats is None
+
+    def test_stats_track_routed_writes(self):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=8)
+        rng = np.random.default_rng(8)
+        eng = _engine(kc, vc, schema, partitions=3)
+        cf = eng.column_families["cf"]
+        bk = {
+            c: rng.integers(0, schema.max_value(c) + 1, 300).astype(np.int64)
+            for c in ("k0", "k1", "k2")
+        }
+        eng.write("cf", bk, {"metric": rng.uniform(0, 1, 300)})
+        for p in cf.partitions:
+            assert p.stats.n_rows == p.n_rows_committed
+        assert sum(p.stats.n_rows for p in cf.partitions) == 2_300
+
+
+class TestSplitMerge:
+    def _small(self, seed=10, partitions=2, rf=2, **kw):
+        kc, vc, schema = generate_simulation(3_000, 3, seed=seed)
+        eng = _engine(kc, vc, schema, partitions=partitions, rf=rf, **kw)
+        oracle = _engine(kc, vc, schema, partitions=1, rf=rf)
+        return eng, oracle, schema
+
+    def test_split_preserves_oracle_equality_and_counts(self):
+        eng, oracle, schema = self._small()
+        rng = np.random.default_rng(20)
+        token = eng.split_partition("cf", 0)
+        cf = eng.column_families["cf"]
+        assert cf.ring.n_partitions == 3
+        assert token in cf.ring.starts
+        assert eng.stats["partition_splits"] == 1
+        assert eng.stats["partition_merges"] == 0
+        assert eng.stats["rebalance_rows_moved"] > 0
+        # vnode ids: the two children are fresh, the untouched partition
+        # keeps its original vnode identity
+        assert sorted(p.vnode_id for p in cf.partitions) == [1, 2, 3]
+        _assert_oracle_equal(eng, oracle, _mixed_queries(rng, schema, n=18))
+
+    def test_default_split_halves_the_rows(self):
+        eng, _, _ = self._small()
+        cf = eng.column_families["cf"]
+        before = cf.partitions[0].n_rows_committed
+        eng.split_partition("cf", 0)
+        a, b = cf.partitions[0], cf.partitions[1]
+        assert a.n_rows_committed + b.n_rows_committed == before
+        # median cut: neither child owns everything
+        assert 0 < a.n_rows_committed < before
+
+    def test_merge_restores_oracle_equality(self):
+        eng, oracle, schema = self._small(partitions=4)
+        rng = np.random.default_rng(21)
+        eng.merge_partitions("cf", 1)
+        cf = eng.column_families["cf"]
+        assert cf.ring.n_partitions == 3
+        assert eng.stats["partition_merges"] == 1
+        _assert_oracle_equal(eng, oracle, _mixed_queries(rng, schema, n=18))
+
+    def test_split_then_merge_round_trips(self):
+        eng, oracle, schema = self._small(rf=1)
+        rng = np.random.default_rng(22)
+        tok = eng.split_partition("cf", 1)
+        eng.merge_partitions("cf", 1)
+        cf = eng.column_families["cf"]
+        assert cf.ring.n_partitions == 2 and tok not in cf.ring.starts
+        _assert_oracle_equal(
+            eng, oracle, _mixed_queries(rng, schema, n=18), rows=True
+        )
+
+    def test_writes_route_by_new_ring_after_split(self):
+        eng, oracle, schema = self._small()
+        rng = np.random.default_rng(23)
+        eng.split_partition("cf", 0)
+        cf = eng.column_families["cf"]
+        bk = {
+            c: rng.integers(0, schema.max_value(c) + 1, 200).astype(np.int64)
+            for c in ("k0", "k1", "k2")
+        }
+        bv = {"metric": rng.uniform(0, 1, 200)}
+        eng.write("cf", bk, bv)
+        oracle.write("cf", bk, bv)
+        for part in cf.partitions:
+            kc_p, _ = part.commitlog.replay_columns()
+            toks = pack_columns(kc_p, cf.key_names, cf.schema)
+            assert ((toks >= part.token_lo) & (toks <= part.token_hi)).all()
+        _assert_oracle_equal(eng, oracle, _mixed_queries(rng, schema, n=12))
+
+    def test_staged_rows_survive_migration(self):
+        """Rows staged under the group-commit threshold are commit-log
+        records, so they ride the log-slicing migration and stay
+        readable — no pre-split flush required."""
+        eng, oracle, schema = self._small(memtable_rows=1 << 30)
+        rng = np.random.default_rng(24)
+        bk = {
+            c: rng.integers(0, schema.max_value(c) + 1, 150).astype(np.int64)
+            for c in ("k0", "k1", "k2")
+        }
+        bv = {"metric": rng.uniform(0, 1, 150)}
+        eng.write("cf", bk, bv, flush=False)
+        oracle.write("cf", bk, bv, flush=False)
+        assert eng.stats["staged_rows"] > 0
+        eng.split_partition("cf", 0)
+        _assert_oracle_equal(eng, oracle, _mixed_queries(rng, schema, n=12))
+
+    def test_validation(self):
+        eng, _, _ = self._small(partitions=2)
+        cf = eng.column_families["cf"]
+        with pytest.raises(ValueError, match="no right neighbor"):
+            eng.merge_partitions("cf", 1)
+        with pytest.raises(ValueError, match="outside partition"):
+            eng.split_partition("cf", 0, token=cf.partitions[1].token_hi)
+
+    def test_untouched_partitions_keep_tables_and_cache(self):
+        """Migration surgically touches the split partition only: the
+        other vnode keeps its table objects, log, stats, and its warm
+        result-cache entries; the migrated replicas' cache entries are
+        dropped."""
+        eng, _, schema = self._small(partitions=2)
+        cf = eng.column_families["cf"]
+        keep, split = cf.partitions[1], cf.partitions[0]
+        keep_tables = {
+            r.replica_id: eng._table(cf, r) for r in keep.replicas
+        }
+        keep_ids = {r.replica_id for r in keep.replicas}
+        split_ids = {r.replica_id for r in split.replicas}
+        keep_log, keep_stats = keep.commitlog, keep.stats
+        # warm the cache (fan-out query twice — RR may alternate the
+        # serving replica, so both rounds together seed ≥1 entry per
+        # partition)
+        q = Query(filters={"k1": Eq(3)}, agg="count")
+        eng.read_many("cf", [q])
+        eng.read_many("cf", [q])
+        cached_keep = {k for k in eng._result_cache if k[1] in keep_ids}
+        cached_split = {k for k in eng._result_cache if k[1] in split_ids}
+        assert cached_keep and cached_split
+
+        eng.split_partition("cf", 0)
+        # untouched partition: same objects, renumbered position only
+        assert keep in cf.partitions
+        for r in keep.replicas:
+            assert eng._table(cf, r) is keep_tables[r.replica_id]
+        assert cached_keep <= set(eng._result_cache)
+        assert keep.commitlog is keep_log and keep.stats is keep_stats
+        # migrated replicas: tables and cache entries are gone
+        for rid in split_ids:
+            assert ("cf", rid) not in eng._result_cache
+            assert all(
+                (cf.name, rid) not in n.tables for n in eng.nodes
+            )
+
+    def test_rebuilt_partition_stats_match_recompute(self):
+        """Merged stats (bin-wise histogram addition) equal a from-
+        scratch recompute over the merged rows."""
+        eng, _, _ = self._small(partitions=4, rf=1)
+        cf = eng.column_families["cf"]
+        eng.merge_partitions("cf", 2)
+        part = cf.partitions[2]
+        kc_p, _ = part.commitlog.replay_columns()
+        fresh = TableStats.from_columns(kc_p, cf.schema)
+        assert part.stats.n_rows == fresh.n_rows
+        for c in fresh.columns:
+            np.testing.assert_allclose(
+                part.stats.columns[c].counts, fresh.columns[c].counts
+            )
+
+
+class TestRecoveryAfterMigration:
+    def test_log_replay_bit_identical_after_split(self):
+        """THE migration-lineage criterion: after a split, failing a
+        node and recovering from the sliced-and-concatenated logs
+        rebuilds every hosted replica bit-identically to a survivor
+        re-sort."""
+        kc, vc, schema = generate_simulation(4_000, 3, seed=30)
+        rng = np.random.default_rng(30)
+        eng = _engine(kc, vc, schema, partitions=2, rf=2, n_nodes=5)
+        for _ in range(2):
+            bk = {
+                c: rng.integers(0, schema.max_value(c) + 1, 120).astype(np.int64)
+                for c in ("k0", "k1", "k2")
+            }
+            eng.write("cf", bk, {"metric": rng.uniform(0, 1, 120)})
+        eng.split_partition("cf", 0)
+        eng.merge_partitions("cf", 1)
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[0].replicas[0].node_id
+        e_log, e_sur = copy.deepcopy(eng), copy.deepcopy(eng)
+        e_log.fail_node(victim)
+        e_log.recover_node(victim, source="log")
+        e_sur.fail_node(victim)
+        e_sur.recover_node(victim, source="survivor")
+        checked = 0
+        for part in cf.partitions:
+            for r in part.replicas:
+                if r.node_id != victim:
+                    continue
+                t_log = e_log._table(e_log.column_families["cf"], r)
+                t_sur = e_sur._table(e_sur.column_families["cf"], r)
+                np.testing.assert_array_equal(t_log.packed, t_sur.packed)
+                for c in t_log.key_cols:
+                    np.testing.assert_array_equal(
+                        t_log.key_cols[c], t_sur.key_cols[c]
+                    )
+                assert t_log.dataset_fingerprint() == t_sur.dataset_fingerprint()
+                checked += 1
+        assert checked > 0
+
+    def test_split_with_node_down_installs_on_recovery(self):
+        """A reshard while a node is dead does not install tables on it;
+        ``recover_node(source="log")`` later rebuilds the new vnodes'
+        replicas from the migrated logs."""
+        kc, vc, schema = generate_simulation(2_500, 3, seed=31)
+        eng = _engine(kc, vc, schema, partitions=2, rf=2, n_nodes=4)
+        oracle = _engine(kc, vc, schema, partitions=1, rf=2, n_nodes=4)
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[0].replicas[0].node_id
+        eng.fail_node(victim)
+        eng.split_partition("cf", 0)
+        assert eng.nodes[victim].tables == {}
+        eng.recover_node(victim, source="log")
+        for part in cf.partitions:
+            fps = {
+                eng._table(cf, r).dataset_fingerprint() for r in part.replicas
+            }
+            assert len(fps) == 1
+        rng = np.random.default_rng(31)
+        _assert_oracle_equal(eng, oracle, _mixed_queries(rng, schema, n=12))
+
+
+class TestRebalanceAcceptance:
+    """ISSUE 6 acceptance: Zipf keyspace at P = 8 equal splits →
+    ``rebalance()`` → imbalance ≤ 1.25×, reads row-identical to P = 1."""
+
+    def _zipf_family(self, partitions, rf=1, n=12_000, seed=40, **kw):
+        schema = KeySchema({"k0": 8, "k1": 8, "k2": 8})
+        rng = np.random.default_rng(seed)
+        kc = _zipf_columns(rng, n, schema)
+        vc = {"metric": rng.uniform(0, 1, n)}
+        eng = HREngine(n_nodes=8, **kw)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=rf, layouts=LAYOUTS[:rf],
+            schema=schema, partitions=partitions,
+        )
+        return eng, schema, rng
+
+    def test_zipf_p8_rebalances_under_1_25(self):
+        eng, schema, rng = self._zipf_family(8)
+        oracle, _, _ = self._zipf_family(1)
+        before = eng.partition_imbalance("cf")
+        assert before > 2.0  # the skew is real
+        info = eng.rebalance("cf")
+        assert info["imbalance_before"] == before
+        assert info["imbalance_after"] <= 1.25
+        assert eng.partition_imbalance("cf") <= 1.25
+        assert info["rows_moved"] > 0
+        assert eng.column_families["cf"].ring.n_partitions == 8
+        _assert_oracle_equal(
+            eng, oracle, _mixed_queries(rng, schema, n=24), rows=True
+        )
+
+    def test_histogram_rebalance_reduces_imbalance(self):
+        eng, _, _ = self._zipf_family(8)
+        before = eng.partition_imbalance("cf")
+        info = eng.rebalance("cf", exact=False)
+        assert info["imbalance_after"] < before
+
+    def test_rebalance_changes_partition_count(self):
+        eng, schema, rng = self._zipf_family(4, n=6_000)
+        oracle, _, _ = self._zipf_family(1, n=6_000)
+        info = eng.rebalance("cf", partitions=6)
+        assert info["partitions"] == 6
+        assert eng.column_families["cf"].ring.n_partitions == 6
+        assert eng.partition_imbalance("cf") <= 1.25
+        _assert_oracle_equal(eng, oracle, _mixed_queries(rng, schema, n=12))
+
+    def test_rebalance_is_idempotent(self):
+        eng, _, _ = self._zipf_family(8, n=6_000)
+        eng.rebalance("cf")
+        moved_once = eng.stats["rebalance_rows_moved"]
+        info = eng.rebalance("cf")
+        assert info["rows_moved"] == 0
+        assert eng.stats["rebalance_rows_moved"] == moved_once
+
+    def test_auto_rebalance_on_write_drift(self):
+        """The ``rebalance_imbalance`` knob: uniform data stays put;
+        once skewed writes push the token histogram past the threshold,
+        the write path reshards by itself."""
+        kc, vc, schema = generate_simulation(4_000, 3, seed=41)
+        rng = np.random.default_rng(41)
+        eng = _engine(
+            kc, vc, schema, partitions=4, rf=1, rebalance_imbalance=2.0
+        )
+        assert eng.stats["rebalance_rows_moved"] == 0
+        # skewed burst: all writes into one narrow key region
+        for _ in range(4):
+            bk = {
+                c: rng.integers(0, 4, 2_000).astype(np.int64)
+                for c in ("k0", "k1", "k2")
+            }
+            eng.write("cf", bk, {"metric": rng.uniform(0, 1, 2_000)})
+        assert eng.stats["rebalance_rows_moved"] > 0
+        cf = eng.column_families["cf"]
+        assert cf.token_hist.imbalance(cf.ring.starts) <= 2.0
+
+
+class TestEmptyRangeSkip:
+    def _gapped_family(self, rf=2):
+        """k0 ∈ upper half only → partition 0 of a 2-way equal split
+        owns zero rows."""
+        schema = KeySchema({"k0": 4, "k1": 4})
+        rng = np.random.default_rng(50)
+        n = 1_000
+        kc = {
+            "k0": rng.integers(8, 16, n).astype(np.int64),
+            "k1": rng.integers(0, 16, n).astype(np.int64),
+        }
+        vc = {"metric": rng.uniform(0, 1, n)}
+        eng = HREngine(n_nodes=4)
+        eng.create_column_family(
+            "cf", kc, vc, replication_factor=rf,
+            layouts=[("k0", "k1"), ("k1", "k0")][:rf], schema=schema,
+            partitions=2,
+        )
+        return eng, n
+
+    def test_empty_partition_skipped_not_scanned(self):
+        eng, n = self._gapped_family()
+        # fan-out range: the empty partition is pruned by its observed
+        # token extrema, not executed
+        q = Query(filters={"k0": Range(0, 16)}, agg="count")
+        (res, _), = eng.read_many("cf", [q])
+        assert res.value == n
+        assert eng.stats["empty_partition_skips"] >= 1
+
+    def test_fully_skipped_query_yields_empty_result(self):
+        eng, _ = self._gapped_family()
+        skips0 = eng.stats["empty_partition_skips"]
+        # pinned entirely inside the empty partition's range
+        q = Query(filters={"k0": Eq(2)}, agg="select")
+        (res, rep), = eng.read_many("cf", [q])
+        assert res.value == 0 and res.rows_matched == 0
+        assert res.selected is not None and len(res.selected) == 0
+        assert rep.replica_id == -1 and rep.node_id == -1
+        assert eng.stats["empty_partition_skips"] > skips0
+
+    def test_skip_disarms_after_first_routed_write(self):
+        eng, n = self._gapped_family()
+        eng.write(
+            "cf",
+            {"k0": np.array([2, 3]), "k1": np.array([1, 1])},
+            {"metric": np.array([0.5, 0.5])},
+        )
+        (res, _), = eng.read_many(
+            "cf", [Query(filters={"k0": Range(0, 8)}, agg="count")]
+        )
+        assert res.value == 2
+        (res, _), = eng.read_many(
+            "cf", [Query(filters={"k0": Range(0, 16)}, agg="count")]
+        )
+        assert res.value == n + 2
+
+    def test_skip_matches_unskipped_oracle(self):
+        eng, _ = self._gapped_family(rf=1)
+        cf = eng.column_families["cf"]
+        rng = np.random.default_rng(51)
+        qs = _mixed_queries(rng, cf.schema, n=18)
+        oracle = HREngine(n_nodes=4)
+        kc_o, vc_o = cf.partitions[1].commitlog.replay_columns()
+        oracle.create_column_family(
+            "cf", kc_o, vc_o, replication_factor=1, layouts=[("k0", "k1")],
+            schema=cf.schema, partitions=1,
+        )
+        _assert_oracle_equal(eng, oracle, qs)
+
+
+def apply_migration_ops(eng, ops):
+    """Apply (op, index) migration programs, reducing indices modulo
+    the live partition count; shared with the hypothesis module
+    (``test_vnode_properties``)."""
+    applied = []
+    for op, idx in ops:
+        P = eng.column_families["cf"].ring.n_partitions
+        if op == "split":
+            part = eng.column_families["cf"].partitions[idx % P]
+            if part.token_hi > part.token_lo:  # splittable range
+                eng.split_partition("cf", idx % P)
+                applied.append((op, idx % P))
+        elif op == "merge":
+            if P > 1:
+                eng.merge_partitions("cf", idx % (P - 1))
+                applied.append((op, idx % (P - 1)))
+        else:
+            eng.rebalance("cf")
+            applied.append((op, 0))
+    return applied
+
+
+class TestMigrationSequences:
+    """Seeded random split/merge/rebalance programs — the deterministic
+    slice of the property the hypothesis module explores more widely."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_random_sequence_equals_p1_oracle(self, seed):
+        kc, vc, schema = generate_simulation(800, 3, seed=seed)
+        rng = np.random.default_rng(1000 + seed)
+        ops = [
+            (str(rng.choice(["split", "merge", "rebalance"])),
+             int(rng.integers(0, 64)))
+            for _ in range(int(rng.integers(2, 6)))
+        ]
+        eng = _engine(kc, vc, schema, partitions=2, rf=1, n_nodes=4)
+        oracle = _engine(kc, vc, schema, partitions=1, rf=1, n_nodes=4)
+        applied = apply_migration_ops(eng, ops)
+        cf = eng.column_families["cf"]
+        assert sum(p.n_rows_committed for p in cf.partitions) == 800
+        _assert_oracle_equal(
+            eng, oracle, _mixed_queries(rng, schema, n=12), rows=True
+        ), applied
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_log_recovery_bit_identical_after_random_sequence(self, seed):
+        kc, vc, schema = generate_simulation(600, 3, seed=seed)
+        rng = np.random.default_rng(2000 + seed)
+        ops = [
+            (str(rng.choice(["split", "merge", "rebalance"])),
+             int(rng.integers(0, 64)))
+            for _ in range(int(rng.integers(2, 6)))
+        ]
+        eng = _engine(kc, vc, schema, partitions=2, rf=2, n_nodes=4)
+        apply_migration_ops(eng, ops)
+        cf = eng.column_families["cf"]
+        victim = cf.partitions[0].replicas[0].node_id
+        e_log, e_sur = copy.deepcopy(eng), copy.deepcopy(eng)
+        e_log.fail_node(victim)
+        e_log.recover_node(victim, source="log")
+        e_sur.fail_node(victim)
+        e_sur.recover_node(victim, source="survivor")
+        for part in cf.partitions:
+            for r in part.replicas:
+                if r.node_id != victim:
+                    continue
+                t_log = e_log._table(e_log.column_families["cf"], r)
+                t_sur = e_sur._table(e_sur.column_families["cf"], r)
+                np.testing.assert_array_equal(t_log.packed, t_sur.packed)
+                assert t_log.dataset_fingerprint() == t_sur.dataset_fingerprint()
