@@ -1,0 +1,112 @@
+"""Availability layer: hinted-handoff heal speed and the QUORUM tax.
+
+Two measurements:
+
+* **Hint replay vs full log replay.** A 3-node / RF=3 / 8-partition
+  cluster loses one node transiently; the outage writes are keyed so
+  they all land in one partition's token range. ``node_up`` replays
+  only the hinted log tails — one small merge, seven skipped
+  partitions — while ``recover_node(source="log")`` re-sorts every
+  hosted replica from the full log. The wall-clock ratio is the point
+  of hinted handoff: heal cost proportional to what was *missed*, not
+  to what is *stored*.
+
+* **QUORUM vs ONE read throughput.** The same batch of mixed queries
+  at both consistency levels (result cache off, so every read touches
+  replicas). QUORUM pays k−1 extra digest scans per query; the ratio
+  is the price of entropy detection on the read path.
+
+``hint_heal_rows_per_sec`` / ``full_heal_rows_per_sec`` and
+``one_qps`` / ``quorum_qps`` feed the CI regression gate
+(``scripts/bench_gate.py``); ``hint_speedup`` and ``quorum_over_one``
+ride along as descriptive ratios.
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core import HREngine, ONE, QUORUM, random_workload
+from repro.core.tpch import generate_simulation
+from .common import record, time_fn
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _build(kc, vc, schema, *, partitions, result_cache=True):
+    eng = HREngine(n_nodes=3, result_cache=result_cache)
+    eng.create_column_family(
+        "cf", kc, vc, replication_factor=3, layouts=LAYOUTS,
+        schema=schema, partitions=partitions,
+    )
+    return eng
+
+
+def run(
+    n_rows: int = 120_000,
+    outage_rows: int = 2_000,
+    partitions: int = 8,
+    n_queries: int = 16,
+    repeats: int = 5,
+    seed: int = 0,
+) -> dict:
+    kc, vc, schema = generate_simulation(n_rows, 3, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+
+    # -- heal paths: transient outage, writes pinned to one partition --
+    eng = _build(kc, vc, schema, partitions=partitions)
+    victim = 0  # RF = n_nodes: every node hosts a replica of every partition
+    eng.fail_node(victim, transient=True)
+    # constant key -> one token -> every missed write hints exactly one
+    # of the victim's eight partitions
+    const = {c: np.zeros(outage_rows, dtype=np.int64) for c in ("k0", "k1", "k2")}
+    eng.write("cf", const, {"metric": rng.uniform(0, 1, outage_rows)})
+
+    def best_heal(heal):
+        t = float("inf")
+        for _ in range(repeats):
+            e = copy.deepcopy(eng)  # identical outage state per trial
+            t0 = time.perf_counter()
+            heal(e)
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    t_hint = best_heal(lambda e: e.node_up(victim))
+    t_full = best_heal(lambda e: e.recover_node(victim, source="log"))
+    speedup = t_full / max(t_hint, 1e-12)
+    record("availability/hint_replay", t_hint * 1e6, f"{outage_rows} missed rows")
+    record("availability/full_log_replay", t_full * 1e6, f"speedup={speedup:.1f}x")
+
+    # -- read-consistency tax ------------------------------------------------
+    reng = _build(kc, vc, schema, partitions=1, result_cache=False)
+    wl = random_workload(rng, schema, list(kc), n_queries)
+    qs = list(wl.queries)
+
+    def batch(level):
+        return reng.read_many("cf", qs, consistency=level)
+
+    t_one, _ = time_fn(batch, ONE, repeats=repeats, best=True)
+    t_quorum, _ = time_fn(batch, QUORUM, repeats=repeats, best=True)
+    one_qps = n_queries / max(t_one, 1e-12)
+    quorum_qps = n_queries / max(t_quorum, 1e-12)
+    tax = t_quorum / max(t_one, 1e-12)
+    record("availability/read_one", t_one * 1e6, f"{one_qps:,.0f} q/s")
+    record("availability/read_quorum", t_quorum * 1e6, f"tax={tax:.2f}x")
+
+    return {
+        "hint_s": t_hint,
+        "full_s": t_full,
+        "hint_speedup": speedup,
+        "hint_heal_rows_per_sec": outage_rows / max(t_hint, 1e-12),
+        "full_heal_rows_per_sec": n_rows / max(t_full, 1e-12),
+        "one_qps": one_qps,
+        "quorum_qps": quorum_qps,
+        "quorum_over_one": tax,
+    }
+
+
+if __name__ == "__main__":
+    print(run())

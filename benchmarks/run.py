@@ -26,7 +26,7 @@ def main() -> None:
         "--only", default=None,
         help=(
             "comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,"
-            "kernels,batched,write_queue,partitioned"
+            "kernels,batched,write_queue,partitioned,availability"
         ),
     )
     args = ap.parse_args()
@@ -35,6 +35,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from . import (
+        availability,
         batched_read,
         fig4_cost_model,
         fig5a_datasize,
@@ -112,6 +113,16 @@ def main() -> None:
             best=smoke,
             skew=1.3,
             skew_partitions=4 if smoke else 8,
+        )
+    if want("availability"):
+        # hinted-handoff heal vs full log replay, and the QUORUM read
+        # tax; the four throughput keys feed the regression gate while
+        # hint_speedup / quorum_over_one stay descriptive
+        results["availability"] = availability.run(
+            n_rows=size(1_000_000, 120_000, 20_000),
+            outage_rows=size(20_000, 2_000, 500),
+            n_queries=size(64, 16, 8),
+            repeats=11 if smoke else 5,
         )
     if want("write_queue"):
         results["write_queue"] = write_queue.run(

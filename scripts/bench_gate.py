@@ -12,7 +12,9 @@ commit), recovery rows/sec (log replay and survivor re-sort), and
 partitioned-read queries/sec (scatter-gather over the token ring at
 each partition count, plus the ``p{P}_skew_qps`` post-rebalance drain
 on the Zipf-skewed vnode ring — imbalance before/after and rows moved
-ride along as descriptive, ungated keys).
+ride along as descriptive, ungated keys), and availability
+(hinted-handoff heal vs full log replay rows/sec, ONE vs QUORUM
+queries/sec — ``hint_speedup`` / ``quorum_over_one`` stay ungated).
 
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json --update
@@ -69,7 +71,9 @@ def main() -> int:
     # recovery paths. (thread_overlap_speedup and the copy/resort ratios
     # are descriptive — ratios, not throughputs — and stay ungated.)
     flat: dict[str, float] = {}
-    for section in ("batched", "write_queue", "recovery", "partitioned"):
+    for section in (
+        "batched", "write_queue", "recovery", "partitioned", "availability"
+    ):
         flat.update(flatten_qps(smoke.get(section, {}), section))
     # parallel_merge measures thread-pool scheduling, which at smoke
     # scale is dominated by pool startup jitter; the sequential drain

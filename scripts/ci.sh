@@ -13,6 +13,10 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q "$@"
 
+# seeded chaos smoke: crash/torn-tail/corruption/slow-node schedules
+# must leave reads identical to the no-fault oracle (repro/ft/chaos.py)
+python -m repro.ft.chaos --seeds 3 --steps 25
+
 smoke_json="$(mktemp)"
 trap 'rm -f "$smoke_json"' EXIT
 python -m benchmarks.run --smoke --json "$smoke_json"

@@ -12,11 +12,34 @@ from .cost_model import (
     precompute_query_stats,
 )
 from .ecdf import ColumnStats, TableStats
-from .engine import ColumnFamily, HREngine, Node, ReadReport, ReplicaHandle
+from .engine import (
+    ALL,
+    CONSISTENCY_LEVELS,
+    ONE,
+    QUORUM,
+    ColumnFamily,
+    CorruptRunError,
+    HREngine,
+    Node,
+    ReadReport,
+    ReplicaHandle,
+    TransientFault,
+    TransientFlushError,
+    TransientReadError,
+)
 from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema, pack_columns, pack_tuple, unpack_key
 from .ring import Partition, TokenHistogram, TokenRing, place_replica
-from .storage import CommitLog, CompactionPolicy, LogRecord, Memtable, SortedRun
+from .storage import (
+    CommitLog,
+    CompactionPolicy,
+    LogRecord,
+    Memtable,
+    SortedRun,
+    combine_digests,
+    content_digest,
+    run_crc32,
+)
 from .table import (
     ScanResult,
     SortedTable,
@@ -39,6 +62,14 @@ __all__ = [
     "Node",
     "ReadReport",
     "ReplicaHandle",
+    "ONE",
+    "QUORUM",
+    "ALL",
+    "CONSISTENCY_LEVELS",
+    "TransientFault",
+    "TransientReadError",
+    "TransientFlushError",
+    "CorruptRunError",
     "Partition",
     "TokenHistogram",
     "TokenRing",
@@ -56,6 +87,9 @@ __all__ = [
     "LogRecord",
     "Memtable",
     "SortedRun",
+    "combine_digests",
+    "content_digest",
+    "run_crc32",
     "ScanResult",
     "SortedTable",
     "merge_partial_scans",

@@ -99,6 +99,54 @@ appended rows outgrow the base — no manual
 ``place_on_device(rebuild=True)``. Flushes and compactions invalidate
 the affected replica's result-cache entries; counters for log records,
 staged rows, flushes and compactions ride on :attr:`HREngine.stats`.
+
+Availability layer (hints · consistency · detection · scrub)
+------------------------------------------------------------
+Cassandra's availability machinery, fitted to the simulated cluster:
+
+* **Hinted handoff** — ``fail_node(node, transient=True)`` models an
+  outage that loses memory but not disk: the node's tables survive and
+  every hosted partition replica opens a *hint*, the LSN watermark its
+  table was flushed through (``Partition.hints``/``flushed_lsn`` — an
+  LSN range against the partition's own commit log, never a data
+  copy). ``node_up`` then replays only ``[watermark, next_lsn)`` and
+  merges that tail into the surviving table — healing a short outage
+  costs O(missed writes), not O(dataset) — falling back to a full
+  rebuild whenever the tail is gone (a checkpoint collapsed it, or the
+  loss was durable). ``recover_node`` keeps the full-rebuild semantics
+  for durable losses.
+* **Tunable read consistency** — ``read``/``read_many`` accept
+  ``consistency="ONE" | "QUORUM" | "ALL"``. Beyond ONE, each query
+  also executes on the next cost-ranked replicas up to k (RF//2 + 1
+  for QUORUM, RF for ALL) and the k results' *digests* are compared —
+  crc32 over the canonical (layout-independent) ``ScanResult``
+  encoding: the aggregate value (float32-quantized for sums, whose
+  float64 totals differ across layouts only by summation-order noise
+  far below one float32 ulp), the matched-row count, and for selects
+  the sorted canonical packed keys of the selected rows. A mismatch
+  (``digest_mismatches``) triggers **read repair**: minority replicas
+  are rebuilt from the partition log — the ground truth — and the
+  majority answer is returned (``read_repairs``); with no majority
+  every consulted replica is rebuilt and the query re-executes.
+* **Failure detection + graceful degradation** — pass
+  ``failure_detector=FailureDetector()`` (``repro.ft.detector``; any
+  object with ``record``/``record_failure``/``cost_factor`` works) and
+  every executed replica-group scan feeds it. Nodes whose phi crosses
+  the suspect threshold get their ranking costs *multiplied* by the
+  detector's cost factor — soft avoidance, Cassandra's dynamic-snitch
+  badness rule, never hard exclusion. When a scan raises (an injected
+  fault: ``Node.read_fault_budget``), the planner retries the affected
+  queries on the next-ranked untried replica (bounded by the replica
+  count, ``read_retries``), recording the failure with the detector.
+* **Checksums + scrub** — flushed runs carry crc32 (verified before
+  merging) and the engine seals a content crc32 on every table it
+  installs; ``scrub_column_family`` re-verifies every live replica and
+  heals corrupt ones from the partition log (``scrub_repairs``).
+
+``ft/chaos.py`` drives all of it: a seeded schedule of crash /
+torn-log-tail / run-corruption / slow-node / flush-abort events whose
+acceptance property is that after detector-driven repair, reads are
+row-identical to a no-fault oracle engine fed the same writes.
 """
 
 from __future__ import annotations
@@ -106,6 +154,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Mapping, Sequence
 
@@ -123,10 +172,58 @@ from .hrca import HRCAResult, exhaustive_search, hrca, initial_state
 from .keys import KeySchema, pack_columns
 from .ring import Partition, ReplicaHandle, TokenHistogram, TokenRing, place_replica
 from .storage import CommitLog, CompactionPolicy, Memtable, compact_table
+from .storage.memtable import combine_digests, sort_run
 from .table import ScanResult, SortedTable, merge_partial_scans, slab_bounds_many
 from .workload import Query, Workload
 
-__all__ = ["Node", "ReplicaHandle", "ColumnFamily", "ReadReport", "HREngine"]
+__all__ = [
+    "Node",
+    "ReplicaHandle",
+    "ColumnFamily",
+    "ReadReport",
+    "HREngine",
+    "ONE",
+    "QUORUM",
+    "ALL",
+    "CONSISTENCY_LEVELS",
+    "TransientFault",
+    "TransientReadError",
+    "TransientFlushError",
+    "CorruptRunError",
+]
+
+#: Tunable read consistency levels (Cassandra's CL, read side): how
+#: many cost-ranked replicas must answer — and digest-agree — before a
+#: result is returned. ONE trusts the single cheapest replica (the
+#: historical behavior and the default).
+ONE = "ONE"
+QUORUM = "QUORUM"
+ALL = "ALL"
+CONSISTENCY_LEVELS = (ONE, QUORUM, ALL)
+
+
+class TransientFault(RuntimeError):
+    """A scan or flush raised in a retryable way (injected fault / chaos
+    event). Carries the faulting node id; the read planner fails over
+    to the next-ranked replica, writers retry the flush."""
+
+    def __init__(self, node_id: int, what: str) -> None:
+        super().__init__(f"transient {what} fault on node {node_id}")
+        self.node_id = node_id
+
+
+class TransientReadError(TransientFault):
+    def __init__(self, node_id: int) -> None:
+        super().__init__(node_id, "read")
+
+
+class TransientFlushError(TransientFault):
+    def __init__(self, node_id: int) -> None:
+        super().__init__(node_id, "flush")
+
+
+class CorruptRunError(RuntimeError):
+    """A flushed run failed its crc32 verification before merging."""
 
 
 @dataclasses.dataclass
@@ -135,6 +232,11 @@ class Node:
     alive: bool = True
     slowdown: float = 1.0  # >1 = straggler (ft.straggler injects this)
     tables: dict[tuple[str, int], SortedTable] = dataclasses.field(default_factory=dict)
+    # injected fault budgets (chaos harness): each >0 count makes the
+    # next scan / flush on this node raise a TransientFault, modeling a
+    # slow-failing or flapping node rather than a clean death
+    read_fault_budget: int = 0
+    flush_fault_budget: int = 0
 
     def bytes_stored(self) -> int:
         total = 0
@@ -281,6 +383,41 @@ def _group_by_pick(picks: np.ndarray, qidx: list[int]) -> dict[int, list[int]]:
     return groups
 
 
+def _result_digest(
+    scan: ScanResult,
+    table: SortedTable,
+    key_names: tuple[str, ...],
+    schema: KeySchema,
+) -> int:
+    """Layout-independent digest of a ``ScanResult`` — what QUORUM/ALL
+    reads compare across replicas (the digest-read half of Cassandra's
+    read path). crc32 over:
+
+    * ``rows_matched`` (int64) — exact and identical across layouts;
+    * the aggregate value quantized to float32 — sum totals differ
+      across serializations only by float summation order (~1e-15
+      relative), far below float32 resolution, while a corrupted
+      exponent/high bit shifts the total by orders of magnitude;
+    * for selects, the *canonical* packed keys of the selected rows,
+      sorted — each replica reports its own serialization order, but
+      the selected row set (and hence its sorted canonical key multiset)
+      is layout-independent.
+
+    ``rows_scanned`` is deliberately excluded: it is a property of the
+    serving layout, not of the answer.
+    """
+    h = zlib.crc32(np.int64(scan.rows_matched).tobytes())
+    with np.errstate(over="ignore"):  # corrupt totals may exceed float32
+        h = zlib.crc32(np.float32(scan.value).tobytes(), h)
+    if scan.selected is not None and np.asarray(scan.selected).size:
+        sel = np.asarray(scan.selected)
+        keys = pack_columns(
+            {c: table.key_cols[c][sel] for c in key_names}, key_names, schema
+        )
+        h = zlib.crc32(np.ascontiguousarray(np.sort(keys)), h)
+    return h
+
+
 class HREngine:
     """Simulated-cluster HR engine (Request Agency facade).
 
@@ -308,6 +445,9 @@ class HREngine:
         compaction: CompactionPolicy | None = None,
         commitlog_checkpoint_records: int = 256,
         rebalance_imbalance: float = 0.0,
+        failure_detector=None,
+        checksums: bool = True,
+        read_retry_limit: int | None = None,
     ) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
@@ -350,6 +490,23 @@ class HREngine:
         if rebalance_imbalance < 0:
             raise ValueError("rebalance_imbalance must be >= 0 (0 = manual only)")
         self.rebalance_imbalance = rebalance_imbalance
+        # availability layer: optional accrual failure detector (duck-
+        # typed — record/record_failure/cost_factor; see ft.detector),
+        # content checksums on installed tables (scrub's witness), and
+        # the failover bound for transient read faults (None = one
+        # attempt per live replica)
+        self.failure_detector = failure_detector
+        self.checksums = bool(checksums)
+        self.read_retry_limit = read_retry_limit
+        self._hints_queued = 0
+        self._hint_replays = 0
+        self._hint_rows_replayed = 0
+        self._hint_fallbacks = 0
+        self._digest_mismatches = 0
+        self._read_repairs = 0
+        self._read_retries = 0
+        self._scrub_checks = 0
+        self._scrub_repairs = 0
         self._flushes = 0
         self._compactions = 0
         self._auto_checkpoints = 0
@@ -416,6 +573,20 @@ class HREngine:
             # (partition, query) launches the scatter path skipped
             # because the partition provably held no rows in the slab
             "empty_partition_skips": self._empty_partition_skips,
+            # availability layer: writes that accrued a hint for a
+            # transiently-down replica; node-up heals served from the
+            # hinted tail vs. full-rebuild fallbacks; digest reads;
+            # failover retries; scrub activity
+            "hints_open": sum(len(p.hints) for p in parts),
+            "hints_queued": self._hints_queued,
+            "hint_replays": self._hint_replays,
+            "hint_rows_replayed": self._hint_rows_replayed,
+            "hint_fallbacks": self._hint_fallbacks,
+            "digest_mismatches": self._digest_mismatches,
+            "read_repairs": self._read_repairs,
+            "read_retries": self._read_retries,
+            "scrub_checks": self._scrub_checks,
+            "scrub_repairs": self._scrub_repairs,
             # cumulative wall of ALL flushes. Flushes inside write()
             # (write-through or threshold-crossing) also count toward
             # that write's returned wall — don't sum the two. The
@@ -656,11 +827,17 @@ class HREngine:
                 vc_p = {c: np.asarray(value_cols[c])[mask] for c in value_names}
             handles: list[ReplicaHandle] = []
             memtables: dict[int, Memtable] = {}
-            for slot, layout in enumerate(chosen):
+            part_digest: int | None = None  # layout-independent: one
+            for slot, layout in enumerate(chosen):  # digest per partition
                 rid = pid * n + slot
                 table = SortedTable.from_columns(kc_p, vc_p, layout, schema)
                 if device_resident:
                     table.place_on_device()
+                if self.checksums:
+                    if part_digest is None:
+                        part_digest = table.seal_checksum().stored_digest
+                    else:
+                        table.stored_digest = part_digest
                 node_id = self._place(rid, name)
                 self.nodes[node_id].tables[(name, rid)] = table
                 handles.append(
@@ -680,6 +857,9 @@ class HREngine:
                 compaction=policy,
                 vnode_id=pid,  # birth identity == ring position at CREATE
                 stats=part_stats[pid],
+                # every replica table holds exactly record 0 — complete
+                # through the log's current tail
+                flushed_lsn={r.replica_id: log.next_lsn for r in handles},
             )
             if tokens is not None:
                 part.observe_tokens(tokens[owner_masks[pid]])
@@ -724,83 +904,130 @@ class HREngine:
         return self.nodes[r.node_id].tables[(cf.name, r.replica_id)]
 
     def _ranked_replicas(self, cf: ColumnFamily, query: Query) -> list[_Ranked]:
-        """Replicas on live nodes ranked by estimated cost (Eq 2–3)."""
+        """Replicas on live nodes ranked by estimated cost (Eq 2–3),
+        multiplied by the failure detector's per-node cost factor when
+        one is attached (suspected nodes are down-ranked, not excluded)."""
+        det = self.failure_detector
         ranked: list[_Ranked] = []
         for r in cf.replicas:
             if not self.nodes[r.node_id].alive:
                 continue
             rows = estimate_rows(cf.stats, r.layout, query)
-            ranked.append((cf.cost_model.cost_fn(len(r.layout))(rows), rows, r))
+            cost = cf.cost_model.cost_fn(len(r.layout))(rows)
+            if det is not None:
+                cost *= det.cost_factor(r.node_id)
+            ranked.append((cost, rows, r))
         if not ranked:
             raise RuntimeError(f"no live replica for {cf.name!r}")
         ranked.sort(key=lambda t: t[0])
         return ranked
 
-    def _execute_on(
-        self, cf: ColumnFamily, entry: _Ranked, query: Query, hedged: bool
-    ) -> tuple[ScanResult, ReadReport]:
-        est_cost, est_rows, r = entry
-        # staged-but-unflushed writes must be visible (and must not let
-        # a stale cache entry answer): flush before the cache lookup
-        self._ensure_flushed(cf, r)
-        table = self._table(cf, r)
-        cache = ckey = None
-        if self._cache_enabled:
-            cache = self._result_cache.setdefault((cf.name, r.replica_id), {})
-            (ckey,) = self._cache_keys([query])
-        t0 = time.perf_counter()
-        if cache is not None and ckey in cache:
-            result = cache[ckey]
-            self._cache_hits += 1
-        else:
-            result = table.execute(query)
-            if cache is not None:
-                self._cache_store((cf.name, r.replica_id), cache, ckey, result)
-                self._cache_misses += 1
-        wall = (time.perf_counter() - t0) * self.nodes[r.node_id].slowdown
-        report = ReadReport(
-            replica_id=r.replica_id,
-            node_id=r.node_id,
-            estimated_rows=est_rows,
-            estimated_cost=est_cost,
-            wall_seconds=wall,
-            rows_scanned=result.rows_scanned,
-            hedged=hedged,
-        )
-        return result, report
+    def _live_cost_factors(self, live: list[ReplicaHandle]) -> np.ndarray | None:
+        """Per-live-replica detector cost factors (None when no detector
+        is attached — the cost matrices then stay bit-identical to the
+        detector-free engine)."""
+        det = self.failure_detector
+        if det is None:
+            return None
+        return np.array([det.cost_factor(r.node_id) for r in live], dtype=np.float64)
 
     def read(
-        self, cf_name: str, query: Query, *, hedge: bool = False, hedge_ratio: float = 2.0
+        self,
+        cf_name: str,
+        query: Query,
+        *,
+        hedge: bool = False,
+        hedge_ratio: float = 2.0,
+        consistency: str = ONE,
     ) -> tuple[ScanResult, ReadReport]:
         """Route to the cheapest live replica; ties broken round-robin
         (load balance). With ``hedge=True`` a read landing on a straggler
         node (slowdown > hedge_ratio) is duplicated on the next-cheapest
         replica on a *different* node; the faster copy wins.
+        ``consistency`` beyond ``ONE`` adds digest reads on the next
+        cost-ranked replicas with read repair on mismatch (module
+        docstring, availability layer).
 
-        On a partitioned column family (``partitions > 1``) the scalar
-        read runs the batched scatter-gather planner at Q = 1, so
-        sequential and batched reads stay identical by construction.
+        The common case (single partition, ``consistency=ONE``) runs a
+        scalar fast path: one ``_ranked_replicas`` pass instead of the
+        batched planner's full cost/order matrices — same costs, same
+        tie rule, same RR counter, so routing stays identical to
+        ``read_many`` at Q = 1 (parity-tested) at a fraction of the
+        per-call planning cost. Partitioned CFs and higher consistency
+        levels delegate to the batched planner at Q = 1.
         """
+        if consistency not in CONSISTENCY_LEVELS:
+            raise ValueError(
+                f"consistency must be one of {CONSISTENCY_LEVELS}, "
+                f"got {consistency!r}"
+            )
         cf = self.column_families[cf_name]
-        if cf.ring.n_partitions > 1:
-            return self._read_many_partitioned(
-                cf, [query], hedge=hedge, hedge_ratio=hedge_ratio
+        if cf.ring.n_partitions > 1 or consistency != ONE:
+            return self.read_many(
+                cf_name,
+                [query],
+                hedge=hedge,
+                hedge_ratio=hedge_ratio,
+                consistency=consistency,
             )[0]
         ranked = self._ranked_replicas(cf, query)
         best_cost = ranked[0][0]
         ties = [t for t in ranked if t[0] <= _tie_threshold(best_cost)]
-        pick = ties[next(cf.rr_counter) % len(ties)]
+        entry = ties[next(cf.rr_counter) % len(ties)]
 
-        result, report = self._execute_on(cf, pick, query, hedged=False)
-        if hedge and len(ranked) > 1 and self.nodes[pick[2].node_id].slowdown > hedge_ratio:
+        # same failover semantics as _run_groups: a transient fault
+        # advances to the next-ranked untried replica, bounded by the
+        # live count (or read_retry_limit)
+        limit = len(ranked) if self.read_retry_limit is None else self.read_retry_limit
+        tried: set[int] = set()
+        while True:
+            tried.add(entry[2].replica_id)
+            try:
+                result, report = self._execute_scalar(cf, entry, query, hedged=False)
+                break
+            except TransientFault:
+                self._read_retries += 1
+                entry = next(
+                    (t for t in ranked if t[2].replica_id not in tried), None
+                )
+                if entry is None or len(tried) >= limit:
+                    raise RuntimeError(
+                        f"no live replica answered query 0 of {cf.name!r} "
+                        f"after {len(tried)} attempts"
+                    ) from None
+
+        if hedge and len(ranked) > 1 and self.nodes[report.node_id].slowdown > hedge_ratio:
             alt = next(
-                (t for t in ranked if t[2].node_id != pick[2].node_id), None
+                (t for t in ranked if t[2].node_id != report.node_id), None
             )
             if alt is not None:
-                r2, rep2 = self._execute_on(cf, alt, query, hedged=True)
-                if rep2.wall_seconds < report.wall_seconds:
-                    return r2, rep2
+                try:
+                    r2, rep2 = self._execute_scalar(cf, alt, query, hedged=True)
+                except TransientFault:
+                    pass  # best-effort duplicate; the primary stands
+                else:
+                    # ties go to the hedge — cache hits serve at zero
+                    # attributed wall on both sides (see _execute_group)
+                    if rep2.wall_seconds <= report.wall_seconds:
+                        return r2, rep2
         return result, report
+
+    def _execute_scalar(
+        self, cf: ColumnFamily, entry: _Ranked, query: Query, *, hedged: bool
+    ) -> tuple[ScanResult, ReadReport]:
+        """Execute one query on one replica through the shared
+        cache/fault/detector path (``_scan_with_cache``)."""
+        est_cost, est_rows, r = entry
+        scans, walls = self._scan_with_cache(cf, r, [query])
+        return scans[0], ReadReport(
+            replica_id=r.replica_id,
+            node_id=r.node_id,
+            estimated_rows=est_rows,
+            estimated_cost=est_cost,
+            wall_seconds=walls[0],
+            rows_scanned=scans[0].rows_scanned,
+            hedged=hedged,
+        )
 
     def read_many(
         self,
@@ -809,21 +1036,36 @@ class HREngine:
         *,
         hedge: bool = False,
         hedge_ratio: float = 2.0,
+        consistency: str = ONE,
     ) -> list[tuple[ScanResult, ReadReport]]:
         """Batched ``read``: one scheduler pass and one grouped storage
         scan for the whole batch (see module docstring for semantics).
 
         Returns per-query ``(ScanResult, ReadReport)`` in batch order;
         results and routing decisions are identical to calling ``read``
-        on each query in sequence.
+        on each query in sequence. ``consistency="QUORUM"``/``"ALL"``
+        additionally executes every query on the next cost-ranked
+        replicas up to the level's k, compares layout-independent result
+        digests and repairs divergent replicas from the commit log
+        (read repair); the returned result is always the digest-majority
+        answer.
         """
+        if consistency not in CONSISTENCY_LEVELS:
+            raise ValueError(
+                f"unknown consistency {consistency!r} "
+                f"(expected one of {CONSISTENCY_LEVELS})"
+            )
         cf = self.column_families[cf_name]
         queries = list(queries)
         if not queries:
             return []
         if cf.ring.n_partitions > 1:
             return self._read_many_partitioned(
-                cf, queries, hedge=hedge, hedge_ratio=hedge_ratio
+                cf,
+                queries,
+                hedge=hedge,
+                hedge_ratio=hedge_ratio,
+                consistency=consistency,
             )
         live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
         if not live:
@@ -843,32 +1085,154 @@ class HREngine:
                 for k, r in enumerate(live)
             ]
         )
+        factors = self._live_cost_factors(live)
+        if factors is not None:
+            cost_mat = cost_mat * factors[:, None]
 
         # Request Scheduler: per-query cheapest replica, RR tie-break
         # (one draw per query in batch order, so a batch matches a
-        # sequential read loop); then one batched scan per chosen group
+        # sequential read loop); then one batched scan per chosen group,
+        # with bounded failover onto the next-ranked replica when a scan
+        # raises a transient fault
         order_mat, picks = _schedule_picks(cost_mat, cf.rr_counter)
         all_q = list(range(n_q))
         results: list[ScanResult | None] = [None] * n_q
         reports: list[ReadReport | None] = [None] * n_q
-        for k, qidx in _group_by_pick(picks, all_q).items():
-            self._execute_group(
-                cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
-                results, reports, hedged=False,
-            )
+        self._run_groups(
+            cf, live, order_mat, picks, all_q, queries, rows_mat, cost_mat,
+            results, reports,
+        )
 
         if hedge and len(live) > 1:
             # duplicate straggler-bound queries onto the next-cheapest
-            # replica on a different node (same alternate ``read`` picks)
+            # replica on a different node (same alternate ``read`` picks);
+            # hedges are best-effort duplicates — a faulting hedge is
+            # dropped, never failed over (the primary result stands)
             for k, qidx in self._hedge_groups(
                 live, order_mat, picks, all_q, hedge_ratio
             ).items():
-                self._execute_group(
-                    cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
-                    results, reports, hedged=True,
-                )
+                try:
+                    self._execute_group(
+                        cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
+                        results, reports, hedged=True,
+                    )
+                except TransientFault:
+                    continue
+
+        if consistency != ONE:
+            self._consistency_pass(
+                cf, cf.partitions[0], live, order_mat, picks, all_q,
+                queries, results, reports, consistency,
+            )
 
         return list(zip(results, reports))  # type: ignore[arg-type]
+
+    def _run_groups(
+        self,
+        cf: ColumnFamily,
+        live: list[ReplicaHandle],
+        order: np.ndarray,
+        picks: np.ndarray,
+        qidx: list[int],
+        queries: list[Query],
+        rows_live: np.ndarray,
+        cost_live: np.ndarray,
+        results: list,
+        reports: list,
+    ) -> None:
+        """Primary grouped execution with bounded failover: queries
+        whose group raises a :class:`TransientFault` advance to the
+        next replica in their cost order that was not yet tried
+        (``read_retries`` counts each re-routed query), up to
+        ``read_retry_limit`` attempts per query (default: one per live
+        replica). Scheduler column ``j`` of ``order`` corresponds to
+        global query index ``qidx[j]``."""
+        col_of = {qi: j for j, qi in enumerate(qidx)}
+        limit = (
+            len(live) if self.read_retry_limit is None else self.read_retry_limit
+        )
+        tried: dict[int, set[int]] = {qi: set() for qi in qidx}
+        queue = list(_group_by_pick(picks, qidx).items())
+        while queue:
+            k, sub = queue.pop(0)
+            for qi in sub:
+                tried[qi].add(k)
+            try:
+                self._execute_group(
+                    cf, live[k], sub, queries, rows_live[k], cost_live[k],
+                    results, reports, hedged=False,
+                )
+            except TransientFault:
+                self._read_retries += len(sub)
+                retry: dict[int, list[int]] = {}
+                for qi in sub:
+                    nxt = (
+                        next(
+                            (
+                                int(x)
+                                for x in order[:, col_of[qi]]
+                                if int(x) not in tried[qi]
+                            ),
+                            None,
+                        )
+                        if len(tried[qi]) < limit
+                        else None
+                    )
+                    if nxt is None:
+                        raise RuntimeError(
+                            f"no live replica answered query {qi} of "
+                            f"{cf.name!r} after {len(tried[qi])} attempts"
+                        )
+                    retry.setdefault(nxt, []).append(qi)
+                queue.extend(retry.items())
+
+    def _scan_with_cache(
+        self, cf: ColumnFamily, r: ReplicaHandle, group: list[Query]
+    ) -> tuple[list[ScanResult], list[float]]:
+        """Core scan for one replica's query group: read-barrier flush,
+        injected-fault check, result cache, one ``execute_many`` for
+        the misses, failure-detector feed. Returns per-query
+        ``(scans, walls)`` aligned with ``group``; cache hits carry
+        zero attributed wall. Raises :class:`TransientReadError` /
+        :class:`TransientFlushError` *before* producing any result, so
+        a faulting group is retried whole."""
+        self._ensure_flushed(cf, r)  # may raise TransientFlushError
+        table = self._table(cf, r)
+        cache = ckeys = None
+        if self._cache_enabled:
+            cache = self._result_cache.setdefault((cf.name, r.replica_id), {})
+            ckeys = self._cache_keys(group)
+        hit_j = set() if cache is None else {j for j, k in enumerate(ckeys) if k in cache}
+        miss_j = [j for j in range(len(group)) if j not in hit_j]
+        node = self.nodes[r.node_id]
+        if miss_j and node.read_fault_budget > 0:
+            node.read_fault_budget -= 1
+            if self.failure_detector is not None:
+                self.failure_detector.record_failure(node.node_id)
+            raise TransientReadError(node.node_id)
+        t0 = time.perf_counter()
+        miss_scans = table.execute_many([group[j] for j in miss_j]) if miss_j else []
+        wall = (time.perf_counter() - t0) * node.slowdown
+        if miss_j and self.failure_detector is not None:
+            # one latency sample per executed group — cache hits are
+            # not operations the node performed
+            self.failure_detector.record(node.node_id, wall)
+        per_q_wall = wall / len(miss_j) if miss_j else 0.0
+        scans: list[ScanResult | None] = [None] * len(group)
+        walls = [0.0] * len(group)
+        # read the hits out BEFORE storing misses: a store can FIFO-evict
+        # a key that was a hit when hit_j was computed
+        for j in hit_j:
+            scans[j] = cache[ckeys[j]]
+        for j, sr in zip(miss_j, miss_scans):
+            scans[j] = sr
+            walls[j] = per_q_wall
+            if cache is not None:
+                self._cache_store((cf.name, r.replica_id), cache, ckeys[j], sr)
+        if cache is not None:
+            self._cache_hits += len(hit_j)
+            self._cache_misses += len(miss_j)
+        return scans, walls  # type: ignore[return-value]
 
     def _execute_group(
         self,
@@ -887,38 +1251,15 @@ class HREngine:
         wall time (× node slowdown) is split evenly across the queries
         that actually executed — result-cache hits are served at zero
         attributed wall. Hedged runs only replace a query's primary
-        result when faster."""
-        self._ensure_flushed(cf, r)  # pending writes first (see _execute_on)
-        table = self._table(cf, r)
+        result when at least as fast (ties — e.g. both served from
+        cache at zero wall — go to the hedge: the duplicate answered
+        first or simultaneously, which is what ``hedged`` reports)."""
         group = [queries[i] for i in qidx]
-        cache = ckeys = None
-        if self._cache_enabled:
-            cache = self._result_cache.setdefault((cf.name, r.replica_id), {})
-            ckeys = self._cache_keys(group)
-        hit_j = set() if cache is None else {j for j, k in enumerate(ckeys) if k in cache}
-        miss_j = [j for j in range(len(group)) if j not in hit_j]
-        t0 = time.perf_counter()
-        miss_scans = table.execute_many([group[j] for j in miss_j]) if miss_j else []
-        wall = (time.perf_counter() - t0) * self.nodes[r.node_id].slowdown
-        per_q_wall = wall / len(miss_j) if miss_j else 0.0
-        scans: list[ScanResult | None] = [None] * len(group)
-        walls = [0.0] * len(group)
-        # read the hits out BEFORE storing misses: a store can FIFO-evict
-        # a key that was a hit when hit_j was computed
-        for j in hit_j:
-            scans[j] = cache[ckeys[j]]
-        for j, sr in zip(miss_j, miss_scans):
-            scans[j] = sr
-            walls[j] = per_q_wall
-            if cache is not None:
-                self._cache_store((cf.name, r.replica_id), cache, ckeys[j], sr)
-        if cache is not None:
-            self._cache_hits += len(hit_j)
-            self._cache_misses += len(miss_j)
+        scans, walls = self._scan_with_cache(cf, r, group)
         for j, i in enumerate(qidx):
             sr = scans[j]
             if hedged and not (
-                reports[i] is None or walls[j] < reports[i].wall_seconds
+                reports[i] is None or walls[j] <= reports[i].wall_seconds
             ):
                 continue
             results[i] = sr
@@ -931,6 +1272,168 @@ class HREngine:
                 rows_scanned=sr.rows_scanned,
                 hedged=hedged,
             )
+
+    # -- tunable consistency (digest reads + read repair) ---------------------
+
+    @staticmethod
+    def _consistency_k(consistency: str, rf: int) -> int:
+        """Replicas that must answer at a consistency level (read k)."""
+        if consistency == ONE:
+            return 1
+        if consistency == QUORUM:
+            return rf // 2 + 1
+        if consistency == ALL:
+            return rf
+        raise ValueError(
+            f"unknown consistency {consistency!r} "
+            f"(expected one of {CONSISTENCY_LEVELS})"
+        )
+
+    def _consistency_pass(
+        self,
+        cf: ColumnFamily,
+        part: Partition,
+        live: list[ReplicaHandle],
+        order: np.ndarray,
+        picks: np.ndarray,
+        qidx: list[int],
+        queries: list[Query],
+        results: list,
+        reports: list,
+        consistency: str,
+    ) -> None:
+        """Digest reads: execute each query on the next cost-ranked
+        replicas until k distinct replicas (primary included) answered,
+        compare the layout-independent digests, and on mismatch repair
+        divergent replicas from the partition log. Majority digest wins
+        (the returned result is re-pointed at a majority replica when
+        the primary was the outlier); with no majority — e.g. a 1–1
+        split at k = 2 — the log is the ground truth: every consulted
+        replica is rebuilt and the query re-executes on the primary."""
+        k = self._consistency_k(consistency, len(part.replicas))
+        if k <= 1:
+            return
+        if len(live) < k:
+            raise RuntimeError(
+                f"consistency {consistency} needs {k} live replicas of "
+                f"partition {part.partition_id} of {cf.name!r}, "
+                f"have {len(live)}"
+            )
+        col_of = {qi: j for j, qi in enumerate(qidx)}
+        row_of_rid = {r.replica_id: i for i, r in enumerate(live)}
+        # alternates: per query the k-1 cheapest ranked replicas other
+        # than the one that served the primary (hedging may have moved
+        # it off picks[j])
+        consulted: dict[int, set[int]] = {}
+        alt_groups: dict[int, list[int]] = {}
+        for j, qi in enumerate(qidx):
+            primary_row = row_of_rid.get(reports[qi].replica_id)
+            consulted[qi] = {primary_row} if primary_row is not None else set()
+            chosen: list[int] = []
+            for x in order[:, j]:
+                x = int(x)
+                if x in consulted[qi]:
+                    continue
+                chosen.append(x)
+                if len(chosen) >= k - 1:
+                    break
+            for x in chosen:
+                alt_groups.setdefault(x, []).append(qi)
+        # execute the digest reads, failing over like the primary pass
+        alt_scans: dict[int, list[tuple[ReplicaHandle, ScanResult]]] = {}
+        queue = list(alt_groups.items())
+        while queue:
+            x, sub = queue.pop(0)
+            for qi in sub:
+                consulted[qi].add(x)
+            try:
+                scans, _walls = self._scan_with_cache(
+                    cf, live[x], [queries[qi] for qi in sub]
+                )
+            except TransientFault:
+                self._read_retries += len(sub)
+                retry: dict[int, list[int]] = {}
+                for qi in sub:
+                    nxt = next(
+                        (
+                            int(y)
+                            for y in order[:, col_of[qi]]
+                            if int(y) not in consulted[qi]
+                        ),
+                        None,
+                    )
+                    if nxt is None:
+                        raise RuntimeError(
+                            f"consistency {consistency}: fewer than {k} live "
+                            f"replicas answered for {cf.name!r}"
+                        )
+                    retry.setdefault(nxt, []).append(qi)
+                queue.extend(retry.items())
+                continue
+            for qi, sr in zip(sub, scans):
+                alt_scans.setdefault(qi, []).append((live[x], sr))
+
+        repaired: set[int] = set()  # replica ids healed earlier in this pass
+
+        def _fresh(h: ReplicaHandle, qi: int, sr: ScanResult) -> ScanResult:
+            # a scan taken before this pass repaired its replica is
+            # stale evidence — re-read (the repair invalidated the cache)
+            if h.replica_id not in repaired:
+                return sr
+            return self._scan_with_cache(cf, h, [queries[qi]])[0][0]
+
+        handle_of_rid = {r.replica_id: r for r in part.replicas}
+        for qi in qidx:
+            alts = alt_scans.get(qi)
+            if not alts:
+                continue
+            prim = handle_of_rid[reports[qi].replica_id]
+            entries = [(prim, _fresh(prim, qi, results[qi]))] + [
+                (h, _fresh(h, qi, sr)) for h, sr in alts
+            ]
+            digs = [
+                _result_digest(sr, self._table(cf, h), cf.key_names, cf.schema)
+                for h, sr in entries
+            ]
+            if len(set(digs)) == 1:
+                if entries[0][1] is not results[qi]:
+                    results[qi] = entries[0][1]  # refreshed primary
+                continue
+            self._digest_mismatches += 1
+            counts: dict[int, int] = {}
+            for d in digs:
+                counts[d] = counts.get(d, 0) + 1
+            best_d, best_n = max(counts.items(), key=lambda t: t[1])
+            if best_n * 2 > len(digs):
+                # majority wins: heal the minority from the log and
+                # answer from a majority replica
+                for (h, _sr), d in zip(entries, digs):
+                    if d != best_d:
+                        self._repair_replica(cf, part, h)
+                        repaired.add(h.replica_id)
+                        self._read_repairs += 1
+                win, win_scan = next(
+                    e for e, d in zip(entries, digs) if d == best_d
+                )
+                results[qi] = win_scan
+                reports[qi] = dataclasses.replace(
+                    reports[qi],
+                    replica_id=win.replica_id,
+                    node_id=win.node_id,
+                    rows_scanned=win_scan.rows_scanned,
+                )
+            else:
+                # no majority: rebuild every consulted replica from the
+                # log (the ground truth) and re-execute on the primary
+                for h, _sr in entries:
+                    self._repair_replica(cf, part, h)
+                    repaired.add(h.replica_id)
+                    self._read_repairs += 1
+                scan = self._scan_with_cache(cf, prim, [queries[qi]])[0][0]
+                results[qi] = scan
+                reports[qi] = dataclasses.replace(
+                    reports[qi], rows_scanned=scan.rows_scanned
+                )
 
     def _hedge_groups(
         self,
@@ -980,6 +1483,7 @@ class HREngine:
         *,
         hedge: bool,
         hedge_ratio: float,
+        consistency: str = ONE,
     ) -> list[tuple[ScanResult, ReadReport]]:
         """Scatter-gather ``read_many`` over a partitioned column family.
 
@@ -1055,24 +1559,39 @@ class HREngine:
             rows_mat[:, qidx] = rows_sub
             cost_mat[:, qidx] = cost_sub
             slots = [r.replica_id - part.vnode_id * rf for r in live]
+            factors = self._live_cost_factors(live)
+            if factors is not None:
+                # penalize suspected nodes' rows in place so ranking,
+                # failover order and reported est_cost all agree
+                for k, s in enumerate(slots):
+                    cost_mat[s] *= factors[k]
             sub_cost = cost_mat[np.asarray(slots)][:, qidx]  # (live, group)
             order, picks = _schedule_picks(sub_cost, part.rr_counter)
 
             res_p: list[ScanResult | None] = [None] * n_q
             rep_p: list[ReadReport | None] = [None] * n_q
-            for k, sub in _group_by_pick(picks, qidx).items():
-                self._execute_group(
-                    cf, live[k], sub, queries, rows_mat[slots[k]],
-                    cost_mat[slots[k]], res_p, rep_p, hedged=False,
-                )
+            rows_live = rows_mat[np.asarray(slots)]
+            cost_live = cost_mat[np.asarray(slots)]
+            self._run_groups(
+                cf, live, order, picks, qidx, queries, rows_live, cost_live,
+                res_p, rep_p,
+            )
             if hedge and len(live) > 1:
                 for k, sub in self._hedge_groups(
                     live, order, picks, qidx, hedge_ratio
                 ).items():
-                    self._execute_group(
-                        cf, live[k], sub, queries, rows_mat[slots[k]],
-                        cost_mat[slots[k]], res_p, rep_p, hedged=True,
-                    )
+                    try:
+                        self._execute_group(
+                            cf, live[k], sub, queries, rows_live[k],
+                            cost_live[k], res_p, rep_p, hedged=True,
+                        )
+                    except TransientFault:
+                        continue  # best-effort duplicate
+            if consistency != ONE:
+                self._consistency_pass(
+                    cf, part, live, order, picks, qidx, queries,
+                    res_p, rep_p, consistency,
+                )
             partials[pid] = (res_p, rep_p)
 
         # gather: merge each query's per-partition partials in ring order
@@ -1317,6 +1836,7 @@ class HREngine:
             cf.next_vnode += 1
             handles: list[ReplicaHandle] = []
             memtables: dict[int, Memtable] = {}
+            flushed_lsn: dict[int, int] = {}
             for slot, layout in enumerate(cf.slot_layouts):
                 rid = vnode * rf + slot
                 node_id = self._place(rid, cf.name)
@@ -1324,7 +1844,13 @@ class HREngine:
                     table = SortedTable.from_columns(kc, vc, layout, cf.schema)
                     if cf.device_resident:
                         table.place_on_device()
+                    if self.checksums:
+                        table.seal_checksum()
                     self.nodes[node_id].tables[(cf.name, rid)] = table
+                    # rebuilt from the new log's full replay, so the
+                    # watermark starts at its tail; replicas on dead
+                    # nodes get theirs when recovery installs them
+                    flushed_lsn[rid] = log.next_lsn
                 handles.append(
                     ReplicaHandle(rid, tuple(layout), node_id, partition_id=pid)
                 )
@@ -1341,6 +1867,7 @@ class HREngine:
                 compaction=overlap[0].compaction if overlap else cf.compaction,
                 vnode_id=vnode,
                 stats=stats_p,
+                flushed_lsn=flushed_lsn,
             )
             part.observe_tokens(toks)
             new_parts.append(part)
@@ -1442,7 +1969,9 @@ class HREngine:
         # missed writes on dead nodes are repaired by Recovery (the log
         # has every record; dead replicas neither stage nor flush). The
         # record's columns are the log's own immutable copies, so every
-        # memtable stages them by reference — one copy per write, not RF
+        # memtable stages them by reference — one copy per write, not RF.
+        # A dead replica with an open hint just grows its hinted tail —
+        # the hint is an LSN watermark into this same log, never a copy
         for part, kc_p, vc_p, toks_p in routed:
             part.commitlog.append(kc_p, vc_p)
             rec = part.commitlog.tail
@@ -1451,6 +1980,8 @@ class HREngine:
                     part.memtables[r.replica_id].stage(
                         rec.key_cols, rec.value_cols, copy=False
                     )
+                elif r.replica_id in part.hints:
+                    self._hints_queued += 1
             if toks_p is not None:
                 part.observe_tokens(toks_p)
             if part.stats is not None:
@@ -1507,9 +2038,32 @@ class HREngine:
             # merged table is installed below, so an exception here (or
             # in a sibling thread) never loses committed rows — the
             # staged buffers and the old table both survive a retry
+            node = self.nodes[r.node_id]
+            if node.flush_fault_budget > 0:
+                node.flush_fault_budget -= 1
+                if self.failure_detector is not None:
+                    self.failure_detector.record_failure(node.node_id)
+                raise TransientFlushError(node.node_id)
             run = self._memtable(cf, r).peek_run()
-            table = self.nodes[r.node_id].tables[(cf.name, r.replica_id)]
-            return r, table.merge_run(run)
+            if self.checksums and not run.verify():
+                raise CorruptRunError(
+                    f"flush of {cf.name!r} replica {r.replica_id}: sorted "
+                    f"run failed its checksum"
+                )
+            table = node.tables[(cf.name, r.replica_id)]
+            merged = table.merge_run(run)
+            if self.checksums:
+                # extend the seal with the run's digest — O(run), and
+                # derived from durable history, never from the (possibly
+                # corrupted) base arrays: a bit flip in the base stays
+                # detectable by scrub after any number of flushes
+                if table.stored_digest is not None:
+                    merged.stored_digest = combine_digests(
+                        table.stored_digest, run.digest
+                    )
+                else:
+                    merged.seal_checksum()
+            return r, merged
 
         if parallel and len(pending) > 1:
             merged_tables = list(self._executor.map(_flush, pending))
@@ -1521,16 +2075,26 @@ class HREngine:
             self.nodes[r.node_id].tables[(cf.name, r.replica_id)] = merged
             self._memtable(cf, r).clear()
             self._flushes += 1
+            part = cf.partitions[r.partition_id]
+            if part.commitlog is not None:
+                # hinted-handoff watermark: this replica's table now
+                # reflects every log record below the tail
+                part.flushed_lsn[r.replica_id] = part.commitlog.next_lsn
             self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
-            policy = cf.partitions[r.partition_id].compaction
+            policy = part.compaction
             if policy is not None and compact_table(merged, policy):
+                # content unchanged by compaction, so the sealed
+                # multiset digest carries over as-is
                 self._compactions += 1
                 self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
         # count-based auto-checkpoint: once a flushed partition's log
         # has accumulated more than the engine's record threshold since
         # its last snapshot AND the partition is fully drained (every
         # replica flushed through the tail — the documented safety
-        # condition of CommitLog.checkpoint), collapse its history
+        # condition of CommitLog.checkpoint), collapse its history.
+        # Deferred while any hint is open: a checkpoint re-LSNs the
+        # record the hint watermark points into, forcing node_up onto
+        # the full-rebuild fallback — cheaper to wait the outage out
         k = self.commitlog_checkpoint_records
         if k:
             for pid in sorted({r.partition_id for r, _ in merged_tables}):
@@ -1539,9 +2103,14 @@ class HREngine:
                 if (
                     log is not None
                     and log.should_checkpoint(k)
+                    and not part.hints
                     and not any(mt.n_staged for mt in part.memtables.values())
                 ):
                     log.checkpoint()
+                    # every drained replica is flushed through the new
+                    # snapshot record by construction
+                    for rid in list(part.flushed_lsn):
+                        part.flushed_lsn[rid] = log.next_lsn
                     self._auto_checkpoints += 1
         self._flush_wall += time.perf_counter() - t0
 
@@ -1574,30 +2143,220 @@ class HREngine:
         collapse per partition after a flush."""
         cf = self.column_families[cf_name]
         self.flush_memtables(cf_name)
-        return max(part.commitlog.checkpoint() for part in cf.partitions)
+        top = 0
+        for part in cf.partitions:
+            top = max(top, part.commitlog.checkpoint())
+            # every flushed replica is complete through the snapshot —
+            # advance the hinted-handoff watermarks past it so a later
+            # short outage still heals by tail replay
+            for rid in list(part.flushed_lsn):
+                part.flushed_lsn[rid] = part.commitlog.next_lsn
+        return top
 
     # -- Recovery ----------------------------------------------------------------
 
-    def fail_node(self, node_id: int) -> None:
-        """Node loss: the node's disk (every partition replica it
-        hosted, across all column families) and memtables are gone;
-        partitions the node held no replica of are untouched. The
-        per-partition commit logs are the durable copy."""
+    def fail_node(self, node_id: int, *, transient: bool = False) -> None:
+        """Take a node down. The default models *node loss*: the node's
+        disk (every partition replica it hosted, across all column
+        families) and memtables are gone; partitions the node held no
+        replica of are untouched; the per-partition commit logs are the
+        durable copy ``recover_node`` rebuilds from.
+
+        ``transient=True`` models a *short outage* (process restart,
+        network partition): the replica tables survive on disk, only
+        the staged memtable rows are lost — and those are already log
+        records. Each hosted partition opens a **hint**: the replica's
+        flushed-LSN watermark, recording exactly where its table's
+        knowledge of the log ends. Writes committed during the outage
+        just grow the log past the watermark; ``node_up`` replays only
+        that tail (hinted handoff — O(missed writes), not O(dataset)).
+
+        Failing a node that is already down is an explicit no-op — the
+        first failure's hints keep their (older, still correct)
+        watermarks. An out-of-range ``node_id`` raises ``ValueError``.
+        """
+        if not 0 <= node_id < len(self.nodes):
+            raise ValueError(
+                f"unknown node {node_id} (cluster has {len(self.nodes)})"
+            )
         node = self.nodes[node_id]
+        if not node.alive:
+            return  # already down; earlier hints/loss state stands
         node.alive = False
-        node.tables = {}  # disk lost
         for cf_name, cf in self.column_families.items():
             for part in cf.partitions:
                 for r in part.replicas:
-                    if r.node_id == node_id and r.replica_id in part.memtables:
-                        # the memtable dies with its node; the commit log
-                        # is the durable copy every staged row replays from
-                        part.memtables[r.replica_id].clear()
+                    if r.node_id != node_id:
+                        continue
+                    rid = r.replica_id
+                    if transient:
+                        if part.commitlog is not None:
+                            # hint = LSN watermark into the shared log,
+                            # never a data copy
+                            part.hints[rid] = part.flushed_lsn.get(rid, 0)
+                    else:
+                        part.hints.pop(rid, None)
+                        part.flushed_lsn.pop(rid, None)
+                    if rid in part.memtables:
+                        # the memtable dies with its node either way; the
+                        # commit log is the durable copy every staged row
+                        # replays from
+                        part.memtables[rid].clear()
             self._invalidate_result_cache(cf_name, node_id=node_id)
+        if not transient:
+            node.tables = {}  # disk lost
+
+    # -- replica rebuild/install helpers (recovery, read repair, scrub) ------
+
+    def _rebuild_replica_table(
+        self,
+        cf: ColumnFamily,
+        part: Partition,
+        r: ReplicaHandle,
+        *,
+        source: str = "log",
+    ) -> SortedTable:
+        """Rebuild one partition replica's full table in its own layout:
+        replay the owning partition's commit log (``source="log"``, the
+        ground truth) or re-sort a surviving live peer
+        (``source="survivor"``, also the fallback when the partition has
+        no log)."""
+        log = part.commitlog
+        if source == "log" and log is not None and len(log):
+            kc, vc = log.replay_columns()
+            rebuilt = SortedTable.from_columns(kc, vc, r.layout, cf.schema)
+        else:
+            survivor = next(
+                (
+                    s
+                    for s in part.replicas
+                    if s.replica_id != r.replica_id
+                    and self.nodes[s.node_id].alive
+                    and (cf.name, s.replica_id) in self.nodes[s.node_id].tables
+                ),
+                None,
+            )
+            if survivor is None:
+                raise RuntimeError(
+                    f"data loss: no survivor for {cf.name!r} partition "
+                    f"{part.partition_id} replica {r.replica_id}"
+                )
+            self._ensure_flushed(cf, survivor)  # staged rows too
+            src = self.nodes[survivor.node_id].tables[
+                (cf.name, survivor.replica_id)
+            ]
+            rebuilt = src.resorted(r.layout)
+        if cf.device_resident:
+            rebuilt.place_on_device()
+        if self.checksums:
+            rebuilt.seal_checksum()
+        return rebuilt
+
+    def _install_rebuilt(
+        self,
+        cf: ColumnFamily,
+        part: Partition,
+        r: ReplicaHandle,
+        table: SortedTable,
+    ) -> None:
+        """Install a fully rebuilt replica table: fresh memtable (a full
+        rebuild IS flushed state), hint discharged, watermark at the log
+        tail, stale cached results dropped."""
+        rid = r.replica_id
+        self.nodes[r.node_id].tables[(cf.name, rid)] = table
+        part.memtables[rid] = Memtable(
+            r.layout, cf.schema, cf.key_names, cf.value_names
+        )
+        part.hints.pop(rid, None)
+        if part.commitlog is not None:
+            part.flushed_lsn[rid] = part.commitlog.next_lsn
+        self._invalidate_result_cache(cf.name, replica_id=rid)
+
+    def _repair_replica(
+        self, cf: ColumnFamily, part: Partition, r: ReplicaHandle
+    ) -> None:
+        """Heal one *live* replica in place from the partition log — the
+        read-repair / scrub action. Only this replica's table, memtable
+        and cached results are replaced; the caller bumps the counter
+        that names the trigger (``read_repairs`` / ``scrub_repairs``)."""
+        self._install_rebuilt(
+            cf, part, r, self._rebuild_replica_table(cf, part, r)
+        )
+
+    def node_up(self, node_id: int) -> float:
+        """Bring a transiently failed node back, healing each hosted
+        partition replica by **hinted handoff**: replay only the log
+        tail past the hint watermark and merge it into the surviving
+        table — one sorted run of exactly the missed rows. A partition
+        that committed nothing during the outage costs nothing (the
+        common case that makes short outages cheap). Falls back to the
+        full ``recover_node`` rebuild — counted in ``hint_fallbacks`` —
+        when the table is gone (durable failure), the watermark predates
+        a checkpoint collapse (``CommitLog.can_replay_from``), or no
+        hint was recorded. Returns wall seconds; bringing up a live node
+        is a no-op returning 0.0."""
+        if not 0 <= node_id < len(self.nodes):
+            raise ValueError(
+                f"unknown node {node_id} (cluster has {len(self.nodes)})"
+            )
+        node = self.nodes[node_id]
+        if node.alive:
+            return 0.0
+        t0 = time.perf_counter()
+        node.alive = True
+        for cf_name in self.column_families:
+            self._invalidate_result_cache(cf_name, node_id=node_id)
+        for cf in self.column_families.values():
+            for part in cf.partitions:
+                for r in part.replicas:
+                    if r.node_id != node_id:
+                        continue
+                    rid = r.replica_id
+                    log = part.commitlog
+                    table = node.tables.get((cf.name, rid))
+                    hint = part.hints.pop(rid, None)
+                    if (
+                        table is None
+                        or hint is None
+                        or log is None
+                        or not log.can_replay_from(hint)
+                    ):
+                        self._hint_fallbacks += 1
+                        self._install_rebuilt(
+                            cf, part, r, self._rebuild_replica_table(cf, part, r)
+                        )
+                        continue
+                    kc, vc = log.replay_columns(start_lsn=hint)
+                    n_rows = next(iter(kc.values())).shape[0] if kc else 0
+                    if n_rows:
+                        run = sort_run(kc, vc, r.layout, cf.schema)
+                        merged = table.merge_run(run)
+                        if cf.device_resident and not merged.device_resident:
+                            merged.place_on_device()
+                        if self.checksums:
+                            if table.stored_digest is not None:
+                                merged.stored_digest = combine_digests(
+                                    table.stored_digest, run.digest
+                                )
+                            else:
+                                merged.seal_checksum()
+                        node.tables[(cf.name, rid)] = merged
+                        self._hint_replays += 1
+                        self._hint_rows_replayed += n_rows
+                    # zero missed rows: the surviving table is already
+                    # complete — no merge, no re-seal, no device work
+                    part.flushed_lsn[rid] = log.next_lsn
+                    part.memtables[rid] = Memtable(
+                        r.layout, cf.schema, cf.key_names, cf.value_names
+                    )
+        return time.perf_counter() - t0
 
     def recover_node(self, node_id: int, *, source: str = "log") -> float:
         """Rebuild every replica the node hosted, in that replica's own
-        heterogeneous layout. Returns wall seconds (§5.4 bench).
+        heterogeneous layout. Returns wall seconds (§5.4 bench);
+        recovering a node that is already live is a no-op returning 0.0
+        (its tables are intact — use ``node_up`` for hinted heal after
+        a transient failure, or ``scrub_column_family`` to audit).
 
         Recovery is partition-aware: only the partition replicas the
         node actually hosted are rebuilt, each from *its own
@@ -1622,7 +2381,13 @@ class HREngine:
         """
         if source not in ("log", "survivor"):
             raise ValueError(f"unknown recovery source {source!r}")
+        if not 0 <= node_id < len(self.nodes):
+            raise ValueError(
+                f"unknown node {node_id} (cluster has {len(self.nodes)})"
+            )
         node = self.nodes[node_id]
+        if node.alive:
+            return 0.0
         t0 = time.perf_counter()
         node.alive = True
         for cf_name in self.column_families:
@@ -1632,43 +2397,50 @@ class HREngine:
                 for r in part.replicas:
                     if r.node_id != node_id:
                         continue
-                    log = part.commitlog
-                    if source == "log" and log is not None and len(log):
-                        kc, vc = log.replay_columns()
-                        rebuilt = SortedTable.from_columns(
-                            kc, vc, r.layout, cf.schema
-                        )
-                    else:
-                        survivor = next(
-                            (
-                                s
-                                for s in part.replicas
-                                if s.replica_id != r.replica_id
-                                and self.nodes[s.node_id].alive
-                                and (cf.name, s.replica_id)
-                                in self.nodes[s.node_id].tables
-                            ),
-                            None,
-                        )
-                        if survivor is None:
-                            raise RuntimeError(
-                                f"data loss: no survivor for {cf.name!r} "
-                                f"partition {part.partition_id} replica "
-                                f"{r.replica_id}"
-                            )
-                        self._ensure_flushed(cf, survivor)  # staged rows too
-                        src = self.nodes[survivor.node_id].tables[
-                            (cf.name, survivor.replica_id)
-                        ]
-                        rebuilt = src.resorted(r.layout)
-                    if cf.device_resident:
-                        rebuilt.place_on_device()
-                    node.tables[(cf.name, r.replica_id)] = rebuilt
-                    # fresh memtable: a log rebuild is fully flushed state
-                    part.memtables[r.replica_id] = Memtable(
-                        r.layout, cf.schema, cf.key_names, cf.value_names
+                    self._install_rebuilt(
+                        cf,
+                        part,
+                        r,
+                        self._rebuild_replica_table(cf, part, r, source=source),
                     )
         return time.perf_counter() - t0
+
+    def scrub_column_family(self, cf_name: str, *, repair: bool = True) -> dict:
+        """Audit every live replica's content checksum (sealed at
+        install time) against its arrays and heal mismatches from the
+        partition log. The anti-entropy sweep of the availability layer:
+        silent corruption that digest reads have not yet tripped over is
+        found and repaired here. Returns
+        ``{"replicas_checked", "corrupt", "repaired"}``; with
+        ``repair=False`` corruption is only reported. Replicas without a
+        sealed checksum (``checksums=False`` engines) verify trivially.
+        """
+        cf = self.column_families[cf_name]
+        checked = 0
+        corrupt: list[int] = []
+        repaired = 0
+        for part in cf.partitions:
+            for r in part.replicas:
+                node = self.nodes[r.node_id]
+                if not node.alive:
+                    continue
+                table = node.tables.get((cf.name, r.replica_id))
+                if table is None:
+                    continue
+                checked += 1
+                self._scrub_checks += 1
+                if table.verify_checksum():
+                    continue
+                corrupt.append(r.replica_id)
+                if repair:
+                    self._repair_replica(cf, part, r)
+                    self._scrub_repairs += 1
+                    repaired += 1
+        return {
+            "replicas_checked": checked,
+            "corrupt": corrupt,
+            "repaired": repaired,
+        }
 
     # -- introspection -------------------------------------------------------------
 

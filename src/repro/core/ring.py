@@ -454,6 +454,17 @@ class Partition:
     #: staged row (staged rows are in the log too).
     token_min: "int | None" = None
     token_max: "int | None" = None
+    #: Hinted handoff (per replica id): ``flushed_lsn[rid]`` is the
+    #: exclusive log LSN through which the replica's *table* is
+    #: complete (maintained by the engine at CREATE/flush/recovery),
+    #: and ``hints[rid]`` — present only while the replica's node is
+    #: transiently down — freezes that watermark at failure time. A
+    #: hint is an LSN range against the partition's own commit log, not
+    #: a data copy: node-up replays just ``[hints[rid], next_lsn)`` and
+    #: merges it into the surviving table instead of rebuilding from
+    #: record 0.
+    flushed_lsn: "dict[int, int]" = dataclasses.field(default_factory=dict)
+    hints: "dict[int, int]" = dataclasses.field(default_factory=dict)
 
     @property
     def n_rows_committed(self) -> int:

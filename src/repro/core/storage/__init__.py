@@ -27,7 +27,13 @@ partition replicas it hosted.
 
 from .commitlog import CommitLog, LogRecord
 from .compaction import CompactionPolicy, compact_table
-from .memtable import Memtable, SortedRun
+from .memtable import (
+    Memtable,
+    SortedRun,
+    combine_digests,
+    content_digest,
+    run_crc32,
+)
 
 __all__ = [
     "CommitLog",
@@ -36,4 +42,7 @@ __all__ = [
     "compact_table",
     "Memtable",
     "SortedRun",
+    "combine_digests",
+    "content_digest",
+    "run_crc32",
 ]

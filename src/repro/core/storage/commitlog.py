@@ -110,6 +110,12 @@ class CommitLog:
         # record count after truncate/from_bytes, where the true append
         # history is unknown)
         self._since_checkpoint = 0
+        # LSN of the last snapshot record (None = never checkpointed).
+        # A checkpoint collapses history into one fresh-LSN record, so
+        # per-record replay from any cursor at or below it is impossible
+        # — hinted-handoff watermarks must fall back to a full rebuild
+        # (see can_replay_from).
+        self._snapshot_lsn: int | None = None
 
     # -- append ------------------------------------------------------------
 
@@ -155,6 +161,23 @@ class CommitLog:
         return sum(r.n_rows for r in self._records)
 
     @property
+    def next_lsn(self) -> int:
+        """The LSN the next ``append`` will take — the exclusive upper
+        bound of the committed history. A replica flushed through every
+        current record is complete up to (excluding) this LSN, which is
+        exactly the hinted-handoff watermark the engine stores."""
+        return self._next_lsn
+
+    def can_replay_from(self, start_lsn: int) -> bool:
+        """Can the per-record suffix ``lsn >= start_lsn`` alone bring a
+        replica that is complete below ``start_lsn`` up to date? False
+        once a checkpoint collapsed records at-or-after the watermark
+        into a snapshot (the snapshot holds the *whole* dataset — the
+        tail is no longer separable), in which case the caller must
+        rebuild from a full replay instead."""
+        return self._snapshot_lsn is None or start_lsn > self._snapshot_lsn
+
+    @property
     def records_since_checkpoint(self) -> int:
         """Appends since the last :meth:`checkpoint` (what the
         count-based auto-checkpoint trigger measures — per-record
@@ -177,12 +200,18 @@ class CommitLog:
                 yield rec
 
     def replay_columns(
-        self, end_lsn: int | None = None
+        self, end_lsn: int | None = None, *, start_lsn: int = 0
     ) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
-        """All rows of records with ``lsn < end_lsn`` (default: all),
-        concatenated in commit order — the input any replica rebuild
-        sorts into its own layout."""
-        recs = [r for r in self._records if end_lsn is None or r.lsn < end_lsn]
+        """All rows of records with ``start_lsn <= lsn < end_lsn``
+        (default: all), concatenated in commit order — the input any
+        replica rebuild sorts into its own layout. A nonzero
+        ``start_lsn`` is the hinted-handoff tail replay: only valid when
+        :meth:`can_replay_from` holds for it."""
+        recs = [
+            r
+            for r in self._records
+            if r.lsn >= start_lsn and (end_lsn is None or r.lsn < end_lsn)
+        ]
         if not recs:
             kn, vn = self._key_names or (), self._value_names or ()
             return (
@@ -227,6 +256,7 @@ class CommitLog:
         self._next_lsn += 1
         self._records = [LogRecord(lsn=lsn, key_cols=kc, value_cols=vc)]
         self._since_checkpoint = 0
+        self._snapshot_lsn = lsn  # tail-only replay below here is gone
         return lsn
 
     # -- migration surgery (vnode split/merge lineage) ---------------------
@@ -331,4 +361,9 @@ class CommitLog:
             log._next_lsn = lsn + 1
             off += _HEADER.size + plen
         log._since_checkpoint = len(log._records)
+        # conservative snapshot marker: a first record with lsn > 0 can
+        # only come from a checkpoint collapse (appends start at 0), so
+        # hint watermarks at or below it must fall back to full rebuild
+        if log._records and log._records[0].lsn > 0:
+            log._snapshot_lsn = log._records[0].lsn
         return log

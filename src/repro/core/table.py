@@ -202,6 +202,12 @@ class SortedTable:
     # device-resident column cache (repro.kernels.build_device_state) —
     # populated by place_on_device(); never part of table identity
     _device: dict | None = dataclasses.field(default=None, repr=False, compare=False)
+    # multiset content digest sealed at CREATE/recovery and *extended*
+    # (never recomputed from memory) by each flush — see
+    # ``storage.content_digest``; scrub recomputes from the arrays and
+    # compares to detect at-rest bit flips. Not table identity — two
+    # equal tables may differ only in whether a digest was sealed
+    stored_digest: int | None = dataclasses.field(default=None, repr=False, compare=False)
 
     # -- construction ------------------------------------------------------
 
@@ -237,6 +243,31 @@ class SortedTable:
         """Same dataset, different serialization — the HR recovery path
         (rebuild a lost replica by re-sorting a survivor, paper §4)."""
         return SortedTable.from_columns(self.key_cols, self.value_cols, layout, self.schema)
+
+    # -- content checksums (scrub) ------------------------------------------
+
+    def content_digest(self) -> int:
+        """Order/layout-independent multiset digest of the key + value
+        columns (see ``storage.content_digest``): every replica of the
+        same row set agrees on it regardless of serialization."""
+        from .storage.memtable import content_digest
+
+        return content_digest(self.key_cols, self.value_cols)
+
+    def seal_checksum(self) -> "SortedTable":
+        """Record the current content digest in ``stored_digest``. The
+        engine seals at CREATE and recovery; a flush *extends* the seal
+        with the run's digest instead (``combine_digests``), so the
+        sealed value always derives from the durable history — merging
+        on top of a corrupted array can't launder the corruption into a
+        fresh seal. Returns ``self`` for chaining."""
+        self.stored_digest = self.content_digest()
+        return self
+
+    def verify_checksum(self) -> bool:
+        """True when the sealed digest still matches the content (or no
+        digest was ever sealed — nothing to verify against)."""
+        return self.stored_digest is None or self.content_digest() == self.stored_digest
 
     # -- device residency ----------------------------------------------------
 

@@ -1,0 +1,419 @@
+"""Deterministic chaos harness for the availability layer.
+
+Jepsen-style fault scheduling scaled to the in-process cluster: a
+seeded :class:`ChaosSchedule` draws a sequence of fault events —
+transient node crashes, torn commit-log tails, bit-flip run corruption,
+straggler slowdowns, aborted flushes — and :class:`ChaosHarness` applies
+them to a *victim* engine while feeding the identical write/query
+stream to a fault-free *oracle* engine. Between faults the harness
+keeps reading at ``QUORUM`` so digest comparison, read repair,
+failover retry and the accrual failure detector all run under fire.
+
+The acceptance property (the whole point): **for any seeded fault
+schedule, after the heal phase — hinted-handoff ``node_up`` for every
+crashed node, a drain of aborted flushes, one ``scrub_column_family``
+sweep — the victim's replicas are mutually row-identical and every
+partition's dataset fingerprint equals the oracle's, and a full QUORUM
+probe battery returns the oracle's answers.** Everything is
+deterministic: same seed → same schedule → same repairs → same report.
+
+``python -m repro.ft.chaos --seeds 3 --steps 25`` runs the property
+over several seeds (the CI smoke); a nonzero exit code means a seed
+violated it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (
+    CommitLog,
+    HREngine,
+    KeySchema,
+    QUORUM,
+    TransientFault,
+    random_workload,
+)
+from repro.ft.detector import FailureDetector
+from repro.ft.straggler import clear_slowdowns, inject_slowdown
+
+__all__ = ["ChaosEvent", "ChaosSchedule", "ChaosHarness", "ChaosReport", "KINDS"]
+
+KINDS = ("crash", "torn_tail", "corrupt_run", "slow_node", "flush_abort")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One scheduled fault. Fields are kind-specific: ``node_id`` for
+    crash/slow_node/flush_abort, ``partition_id`` for torn_tail /
+    corrupt_run, ``magnitude`` the slowdown factor or the corruption
+    placement salt, ``duration`` the outage/slowdown length in steps."""
+
+    step: int
+    kind: str
+    node_id: int = -1
+    partition_id: int = -1
+    magnitude: float = 0.0
+    duration: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """Seed-deterministic event sequence over a fixed step horizon."""
+
+    seed: int
+    n_steps: int
+    n_nodes: int
+    n_partitions: int
+    events: tuple[ChaosEvent, ...]
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        *,
+        n_steps: int = 30,
+        n_nodes: int = 6,
+        n_partitions: int = 4,
+        rate: float = 0.35,
+    ) -> "ChaosSchedule":
+        """Draw one fault at each step with probability ``rate``. Crash
+        outages are kept non-overlapping (at most one node down at a
+        time) so an RF=3 partition always retains a read quorum — the
+        regime hinted handoff is designed for; overlapping outages are
+        ``recover_node``'s territory, tested separately."""
+        rng = np.random.default_rng(seed)
+        events: list[ChaosEvent] = []
+        down: list[tuple[int, int]] = []  # inclusive crash intervals
+        for step in range(n_steps):
+            if rng.random() >= rate:
+                continue
+            kind = KINDS[int(rng.integers(len(KINDS)))]
+            if kind == "crash":
+                dur = int(rng.integers(1, 4))
+                if any(not (step + dur < s or e < step) for s, e in down):
+                    continue  # would overlap an open outage
+                down.append((step, step + dur))
+                events.append(
+                    ChaosEvent(
+                        step,
+                        "crash",
+                        node_id=int(rng.integers(n_nodes)),
+                        duration=dur,
+                    )
+                )
+            elif kind == "torn_tail":
+                events.append(
+                    ChaosEvent(
+                        step,
+                        "torn_tail",
+                        partition_id=int(rng.integers(n_partitions)),
+                    )
+                )
+            elif kind == "corrupt_run":
+                events.append(
+                    ChaosEvent(
+                        step,
+                        "corrupt_run",
+                        partition_id=int(rng.integers(n_partitions)),
+                        magnitude=float(rng.random()),
+                    )
+                )
+            elif kind == "slow_node":
+                events.append(
+                    ChaosEvent(
+                        step,
+                        "slow_node",
+                        node_id=int(rng.integers(n_nodes)),
+                        magnitude=float(rng.uniform(20.0, 200.0)),
+                        duration=int(rng.integers(2, 6)),
+                    )
+                )
+            else:
+                events.append(
+                    ChaosEvent(
+                        step,
+                        "flush_abort",
+                        node_id=int(rng.integers(n_nodes)),
+                    )
+                )
+        return cls(
+            seed=int(seed),
+            n_steps=int(n_steps),
+            n_nodes=int(n_nodes),
+            n_partitions=int(n_partitions),
+            events=tuple(events),
+        )
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    seed: int
+    ok: bool
+    failures: list[str]
+    n_events: int
+    stats: dict
+
+
+_CF = "chaos"
+_REL_TOL = 1e-6  # replica layouts sum in different orders
+
+
+class ChaosHarness:
+    """Victim-vs-oracle chaos run (see module docstring)."""
+
+    def __init__(
+        self,
+        seed: int,
+        *,
+        n_steps: int = 30,
+        n_nodes: int = 6,
+        n_partitions: int = 4,
+        rate: float = 0.35,
+        n_rows: int = 3000,
+        write_rows: int = 120,
+        n_probes: int = 8,
+        probe_every: int = 5,
+        memtable_rows: int = 200,
+    ) -> None:
+        self.schedule = ChaosSchedule.generate(
+            seed,
+            n_steps=n_steps,
+            n_nodes=n_nodes,
+            n_partitions=n_partitions,
+            rate=rate,
+        )
+        self.write_rows = write_rows
+        self.probe_every = probe_every
+        rng = np.random.default_rng(seed + 1_000_003)  # data stream seed
+
+        bits = {"k0": 12, "k1": 10, "k2": 8}
+        self._dom = {c: 2**b for c, b in bits.items()}
+        kc = {
+            c: rng.integers(0, d, n_rows).astype(np.int64)
+            for c, d in self._dom.items()
+        }
+        vc = {"metric": rng.uniform(0.0, 1.0, n_rows)}
+        schema = KeySchema(bits=bits)
+        self.probes = random_workload(
+            rng, schema, list(kc), n_probes, value_col="metric"
+        ).queries
+        self._rng = rng
+
+        cf_kwargs = dict(
+            replication_factor=3,
+            mechanism="HR",
+            workload=random_workload(
+                np.random.default_rng(0), schema, list(kc), 16, value_col="metric"
+            ),
+            schema=schema,
+            hrca_kwargs={"k_max": 200, "seed": 0},
+            partitions=n_partitions,
+            memtable_rows=memtable_rows,
+        )
+        self.victim = HREngine(
+            n_nodes=n_nodes, failure_detector=FailureDetector()
+        )
+        self.oracle = HREngine(n_nodes=n_nodes)
+        self.victim.create_column_family(_CF, kc, vc, **cf_kwargs)
+        self.oracle.create_column_family(_CF, kc, vc, **cf_kwargs)
+
+        self._pending_up: dict[int, int] = {}  # node -> step to bring up
+        self._slow_until: dict[int, int] = {}
+
+    # -- event application --------------------------------------------------
+
+    def _apply(self, ev: ChaosEvent) -> None:
+        eng = self.victim
+        cf = eng.column_families[_CF]
+        if ev.kind == "crash":
+            eng.fail_node(ev.node_id, transient=True)
+            self._pending_up[ev.node_id] = ev.step + ev.duration
+        elif ev.kind == "torn_tail":
+            # reserialize the partition log with a torn frame appended:
+            # the byte codec must drop exactly the torn tail
+            part = cf.partitions[ev.partition_id]
+            tear = CommitLog()
+            tear.append({"k": np.array([0], np.int64)}, {})
+            blob = part.commitlog.to_bytes() + tear.to_bytes()[:-3]
+            restored = CommitLog.from_bytes(blob)
+            if len(restored) != len(part.commitlog):
+                raise AssertionError("torn tail ate a committed record")
+            part.commitlog = restored
+        elif ev.kind == "corrupt_run":
+            part = cf.partitions[ev.partition_id]
+            salt = int(ev.magnitude * 1e9)
+            cands = [
+                r
+                for r in part.replicas
+                if eng.nodes[r.node_id].alive
+                and (cf.name, r.replica_id) in eng.nodes[r.node_id].tables
+            ]
+            if not cands:
+                return
+            r = cands[salt % len(cands)]
+            arr = eng._table(cf, r).value_cols["metric"]
+            if arr.size == 0 or arr.dtype != np.float64:
+                return
+            # one exponent-bit flip: silent on-disk corruption the
+            # checksum (scrub) and value digests (QUORUM) must catch
+            arr.view(np.int64)[salt % arr.size] ^= np.int64(1) << np.int64(62)
+        elif ev.kind == "slow_node":
+            inject_slowdown(eng, ev.node_id, ev.magnitude)
+            self._slow_until[ev.node_id] = ev.step + ev.duration
+        elif ev.kind == "flush_abort":
+            eng.nodes[ev.node_id].flush_fault_budget += 1
+        else:  # pragma: no cover - schedule only emits known kinds
+            raise ValueError(f"unknown chaos kind {ev.kind!r}")
+
+    def _write_batch(self) -> None:
+        n = self.write_rows
+        kc = {
+            c: self._rng.integers(0, d, n).astype(np.int64)
+            for c, d in self._dom.items()
+        }
+        vc = {"metric": self._rng.uniform(0.0, 1.0, n)}
+        self.oracle.write(_CF, kc, vc)
+        try:
+            self.victim.write(_CF, kc, vc)
+        except TransientFault:
+            # an aborted flush: the rows are already committed to the
+            # log and staged — a later flush (or the heal drain) lands
+            # them
+            pass
+
+    def _probe(self, failures: list[str], tag: str) -> None:
+        for qi, q in enumerate(self.probes):
+            want, _ = self.oracle.read(_CF, q)
+            try:
+                got, _ = self.victim.read(_CF, q, consistency=QUORUM)
+            except (TransientFault, RuntimeError) as exc:
+                failures.append(f"{tag} probe {qi}: raised {exc!r}")
+                continue
+            if got.rows_matched != want.rows_matched:
+                failures.append(
+                    f"{tag} probe {qi}: rows {got.rows_matched} != "
+                    f"{want.rows_matched}"
+                )
+            tol = _REL_TOL * max(1.0, abs(want.value))
+            if abs(got.value - want.value) > tol:
+                failures.append(
+                    f"{tag} probe {qi}: value {got.value!r} != {want.value!r}"
+                )
+
+    # -- the run -------------------------------------------------------------
+
+    def run(self) -> ChaosReport:
+        sched = self.schedule
+        by_step: dict[int, list[ChaosEvent]] = {}
+        for ev in sched.events:
+            by_step.setdefault(ev.step, []).append(ev)
+        failures: list[str] = []
+
+        for step in range(sched.n_steps):
+            # due recoveries first: a node can return the same step
+            # another event lands
+            for nid, up_at in list(self._pending_up.items()):
+                if step >= up_at:
+                    self.victim.node_up(nid)
+                    del self._pending_up[nid]
+            for nid, until in list(self._slow_until.items()):
+                if step >= until:
+                    self.victim.nodes[nid].slowdown = 1.0
+                    del self._slow_until[nid]
+            for ev in by_step.get(step, ()):
+                self._apply(ev)
+            self._write_batch()
+            if step and step % self.probe_every == 0:
+                self._probe(failures, f"step {step}")
+
+        # heal phase: hinted handoff for every open outage, straggler
+        # flags cleared, aborted flushes drained, one scrub sweep
+        for nid in range(sched.n_nodes):
+            self.victim.node_up(nid)
+        clear_slowdowns(self.victim)
+        for node in self.victim.nodes:  # chaos window closed
+            node.flush_fault_budget = 0
+            node.read_fault_budget = 0
+        self.victim.flush_memtables(_CF)
+        self.oracle.flush_memtables(_CF)
+        self.victim.scrub_column_family(_CF)
+
+        # the oracle property
+        cf_v = self.victim.column_families[_CF]
+        cf_o = self.oracle.column_families[_CF]
+        for part_v, part_o in zip(cf_v.partitions, cf_o.partitions):
+            if (part_v.token_lo, part_v.token_hi) != (
+                part_o.token_lo,
+                part_o.token_hi,
+            ):
+                failures.append(
+                    f"partition {part_v.partition_id}: ring diverged"
+                )
+                continue
+            fps = {
+                self.victim._table(cf_v, r).dataset_fingerprint()
+                for r in part_v.replicas
+            }
+            if len(fps) != 1:
+                failures.append(
+                    f"partition {part_v.partition_id}: replicas disagree "
+                    f"({len(fps)} distinct fingerprints)"
+                )
+                continue
+            want_fp = self.oracle._table(
+                cf_o, part_o.replicas[0]
+            ).dataset_fingerprint()
+            if fps != {want_fp}:
+                failures.append(
+                    f"partition {part_v.partition_id}: fingerprint != oracle"
+                )
+        self._probe(failures, "final")
+
+        return ChaosReport(
+            seed=sched.seed,
+            ok=not failures,
+            failures=failures,
+            n_events=len(sched.events),
+            stats=self.victim.stats,
+        )
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, default=3, help="run seeds 0..N-1")
+    ap.add_argument("--seed", type=int, default=None, help="run one seed")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--rate", type=float, default=0.35)
+    args = ap.parse_args(argv)
+
+    seeds = [args.seed] if args.seed is not None else list(range(args.seeds))
+    bad = 0
+    for seed in seeds:
+        report = ChaosHarness(seed, n_steps=args.steps, rate=args.rate).run()
+        keys = (
+            "hints_queued",
+            "hint_replays",
+            "hint_fallbacks",
+            "digest_mismatches",
+            "read_repairs",
+            "read_retries",
+            "scrub_repairs",
+        )
+        counters = ", ".join(f"{k}={report.stats[k]}" for k in keys)
+        print(
+            f"seed {seed}: {'OK' if report.ok else 'FAIL'} "
+            f"({report.n_events} events; {counters})"
+        )
+        for f in report.failures:
+            print(f"  - {f}")
+        bad += not report.ok
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,6 +5,14 @@ duplicates a read that landed on a slow node onto the next-cheapest
 replica on a different node — the paper's load-balance property made
 into a tail-latency tool. ``inject_slowdown`` marks nodes as stragglers;
 ``measure_tail`` quantifies p50/p95/p99 with and without hedging.
+
+Hedging is the *fast* half of the availability story: it races a
+duplicate without declaring anyone unhealthy. Its slow half lives in
+``ft.detector`` (phi-accrual suspicion that down-ranks a persistently
+slow node in the cost matrices before the pick is even made) and
+``ft.failures``/``ft.chaos`` (outage injection and the seeded
+multi-fault harness that checks the whole stack against a no-fault
+oracle).
 """
 
 from __future__ import annotations

@@ -322,6 +322,29 @@ class TestPartitionedReadEquivalence:
         finally:
             clear_slowdowns(eng)
 
+    def test_hedge_fires_and_lands_off_straggler(self):
+        from repro.ft.straggler import clear_slowdowns, inject_slowdown
+
+        kc, vc, schema = generate_simulation(3_000, 3, seed=2)
+        rng = np.random.default_rng(4)
+        qs = _mixed_queries(rng, schema, n=24)
+        eng = _engine(kc, vc, schema, partitions=2, result_cache=False)
+        victim = eng.column_families["cf"].partitions[0].replicas[0].node_id
+        inject_slowdown(eng, victim, 1e4)
+        try:
+            out = eng.read_many("cf", qs, hedge=True, hedge_ratio=1.5)
+        finally:
+            clear_slowdowns(eng)
+        hedged = [rep for _, rep in out if rep.hedged]
+        # RR routing must send some of 24 mixed queries to the victim's
+        # rows, and a 1e4x straggler always trips a 1.5x hedge ratio
+        assert hedged, "no hedge fired against a 1e4x straggler"
+        # hedges only fire against the slowed node, the victim hosts
+        # exactly one replica (6 nodes, 2x3 replicas), and a cold-cache
+        # hedge always beats a 1e4x wall — so every answer, hedged or
+        # not, must be served off-victim
+        assert all(rep.node_id != victim for _, rep in out)
+
 
 class TestPartitionedWriteRouting:
     def test_rows_land_in_owning_partition_logs(self):
