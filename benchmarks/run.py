@@ -26,7 +26,7 @@ def main() -> None:
         "--only", default=None,
         help=(
             "comma list: fig4,fig5a,fig5b,fig5c,table1,recovery,hrca,"
-            "kernels,batched,write_queue,partitioned,availability"
+            "kernels,batched,write_queue,partitioned,availability,serving"
         ),
     )
     args = ap.parse_args()
@@ -45,6 +45,7 @@ def main() -> None:
         kernel_bench,
         partitioned_read,
         recovery_bench,
+        serving_latency,
         table1_write,
         write_queue,
     )
@@ -123,6 +124,18 @@ def main() -> None:
             outage_rows=size(20_000, 2_000, 500),
             n_queries=size(64, 16, 8),
             repeats=11 if smoke else 5,
+        )
+    if want("serving"):
+        # open-loop front-door latency vs offered load; the smoke
+        # passthrough/direct q/s and per-load p99 keys feed the
+        # regression gate (p99 gated lower-is-better, see bench_gate)
+        results["serving"] = serving_latency.run(
+            n_rows=size(1_000_000, 120_000, 20_000),
+            batch=size(64, 64, 16),
+            n_requests=size(2_000, 400, 120),
+            loads=(0.25, 2.0) if smoke else (0.25, 1.0, 2.0),
+            repeats=11 if smoke else 5,
+            best=smoke,
         )
     if want("write_queue"):
         results["write_queue"] = write_queue.run(

@@ -1,0 +1,202 @@
+"""Open-loop serving latency through the front door.
+
+The headline serving metric: p50/p99 request latency and shed/degrade
+rates versus offered load. A seeded Poisson arrival stream is pushed
+through :class:`~repro.serving.frontdoor.FrontDoor` at fractions of
+the engine's measured closed-loop capacity; latencies are virtual-time
+(arrival → completion on the front door's discrete-event clock), so
+queue waits are included — the quantity a client actually observes,
+not the engine's per-call wall.
+
+Three sections:
+
+* **Passthrough** — every request arrives at t=0 with admission guards
+  open, so the front door degenerates to batched ``read_many`` calls;
+  its q/s against the direct closed-loop ``read_many`` q/s prices the
+  batching layer itself (the acceptance bar: within 15%).
+* **Load sweep** — offered load at 0.25×/1×/2× capacity. Below
+  saturation p99 tracks service time; past it, deadlines and the
+  degradation ladder must hold p99 near the budget while shed/degrade
+  rates climb — *bounded* latency, explicit refusals, no unbounded
+  queue.
+* **Gate keys** — ``passthrough_qps`` / ``direct_qps`` (higher is
+  better) and the per-load ``*_p99_us`` (lower is better) feed
+  ``scripts/bench_gate.py``; shed/degrade/ok rates ride along as
+  descriptive keys.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HREngine, QUORUM, random_workload
+from repro.core.tpch import generate_simulation
+from repro.serving.frontdoor import FrontDoor, Request
+
+from .common import record
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+_CF = "cf"
+
+
+def _build(kc, vc, schema, *, partitions):
+    # result cache off: serving latency must price actual scans, not
+    # repeat-hit lookups of a benchmark's recycled queries
+    eng = HREngine(n_nodes=6, result_cache=False)
+    eng.create_column_family(
+        _CF, kc, vc, replication_factor=3, layouts=LAYOUTS,
+        schema=schema, partitions=partitions,
+    )
+    return eng
+
+
+def _percentiles_us(latencies_s):
+    lat = np.asarray(latencies_s)
+    return (
+        float(np.percentile(lat, 50) * 1e6),
+        float(np.percentile(lat, 99) * 1e6),
+    )
+
+
+def run(
+    n_rows: int = 120_000,
+    batch: int = 64,
+    n_requests: int = 400,
+    loads: tuple[float, ...] = (0.25, 1.0, 2.0),
+    deadline_s: float = 50e-3,
+    quorum_frac: float = 0.25,
+    partitions: int = 4,
+    repeats: int = 5,
+    best: bool = False,
+    seed: int = 0,
+) -> dict:
+    kc, vc, schema = generate_simulation(n_rows, 3, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    eng = _build(kc, vc, schema, partitions=partitions)
+    queries = list(
+        random_workload(rng, schema, list(kc), n_requests).queries
+    )
+    out: dict = {}
+
+    # -- closed-loop capacity vs zero-load passthrough ----------------------
+    # all arrivals at t=0 with guards open: continuous batching
+    # degenerates to the same full read_many batches, so the q/s gap is
+    # the front-door layer's own tax. The two are timed INTERLEAVED,
+    # one pair per repeat: clock-frequency drift between two separate
+    # timing blocks otherwise dwarfs the tax being measured.
+    def direct():
+        for i in range(0, len(queries), batch):
+            eng.read_many(_CF, queries[i : i + batch])
+
+    pass_reqs = [Request(_CF, q) for q in queries]
+
+    def passthrough():
+        fd = FrontDoor(
+            eng, max_batch=batch, max_wait=1e-3,
+            max_queue=n_requests, shed_fill=1.0,
+        )
+        t0 = time.perf_counter()
+        resps = fd.serve(pass_reqs)
+        wall = time.perf_counter() - t0
+        assert all(r.ok for r in resps)
+        return wall
+
+    ts_direct, ts_pass = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        direct()
+        ts_direct.append(time.perf_counter() - t0)
+        ts_pass.append(passthrough())
+    agg = min if best else (lambda xs: float(np.median(xs)))
+    t_direct, t_pass = agg(ts_direct), agg(ts_pass)
+    direct_qps = n_requests / max(t_direct, 1e-12)
+    out["direct_qps"] = direct_qps
+    record("serving/direct_read_many", t_direct * 1e6, f"{direct_qps:,.0f} q/s")
+    pass_qps = n_requests / max(t_pass, 1e-12)
+    # overhead from WITHIN-pair ratios: each repeat's passthrough is
+    # divided by the direct run adjacent to it in time, so slow drift
+    # (thermal/frequency) cancels instead of masquerading as tax; the
+    # MEDIAN pair (never the min — a ratio's min is biased fast) is
+    # the representative number
+    overhead = float(
+        np.median([p / max(d, 1e-12) for p, d in zip(ts_pass, ts_direct)])
+    ) - 1.0
+    out["passthrough_qps"] = pass_qps
+    out["passthrough_overhead"] = overhead
+    record(
+        "serving/frontdoor_passthrough", t_pass * 1e6,
+        f"{pass_qps:,.0f} q/s (overhead {overhead * 100:+.1f}%)",
+    )
+
+    # -- open-loop sweep: Poisson arrivals at fractions of capacity ---------
+    # each sweep's queue buildup depends on the ratio of the engine's
+    # speed DURING the sweep to the capacity measured above, so a
+    # single shot is hostage to transient machine load; the sweep runs
+    # `repeats` times (fresh arrival draws + fresh FrontDoor) and the
+    # gated p99 is the median across runs
+    for frac in loads:
+        rate = frac * direct_qps
+        p50s, p99s = [], []
+        n_total = n_ok = n_degraded = 0
+        max_depth = 0
+        for _ in range(repeats):
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+            reqs = [
+                Request(
+                    _CF,
+                    q,
+                    arrival_s=float(arrivals[i]),
+                    deadline_s=deadline_s,
+                    priority=int(rng.integers(0, 3)),
+                    consistency=QUORUM if rng.random() < quorum_frac else "ONE",
+                )
+                for i, q in enumerate(queries)
+            ]
+            fd = FrontDoor(eng, max_batch=batch, max_wait=2e-3, max_queue=256)
+            resps = fd.serve(reqs)
+            s = fd.stats
+            ok = [r for r in resps if r.ok]
+            n_total += n_requests
+            n_ok += len(ok)
+            n_degraded += s["consistency_degraded"]
+            max_depth = max(max_depth, s["max_queue_depth"])
+            if ok:
+                p50, p99 = _percentiles_us([r.latency_s for r in ok])
+                p50s.append(p50)
+                p99s.append(p99)
+        if not p99s:
+            # a machine slow enough to shed everything still reports —
+            # log the degenerate sweep instead of crashing the gate run
+            record(f"serving/load_{frac:g}x", 0.0, "no request survived")
+            continue
+        # best=True (smoke/CI) gates the MIN across sweep runs: ambient
+        # machine load only ever inflates a sweep's tail, so the min is
+        # the clean-machine tail — same best-of-N rationale as the
+        # throughput gates; the median is the honest default elsewhere
+        p50_us = float(agg(p50s))
+        p99_us = float(agg(p99s))
+        shed_rate = (n_total - n_ok) / n_total
+        degrade_rate = n_degraded / n_total
+        label = f"{frac:g}x"
+        out[f"load_{label}"] = {
+            "offered_rate": rate,  # an input, not a result: keep un-gated
+            "p50_us": p50_us,
+            "p99_us": p99_us,
+            "ok_rate": n_ok / n_total,
+            "shed_rate": shed_rate,
+            "degrade_rate": degrade_rate,
+            "max_queue_depth": max_depth,
+        }
+        record(
+            f"serving/load_{label}", p99_us,
+            f"p50={p50_us:,.0f}us p99={p99_us:,.0f}us "
+            f"shed={shed_rate * 100:.0f}% "
+            f"degraded={degrade_rate * 100:.0f}%",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

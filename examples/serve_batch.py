@@ -14,6 +14,15 @@ replica, and answers each group with a single vectorized slab scan —
 compare its queries/sec against the sequential ``read`` loop:
 
     PYTHONPATH=src python examples/serve_batch.py --hr --batch 64
+
+``--frontdoor`` goes one layer up: an *open-loop* Poisson arrival
+stream (requests carry deadlines, priorities, and mixed consistency)
+is pushed through the serving front door, which coalesces arrivals
+into dynamic ``read_many`` batches and sheds/degrades under pressure.
+Prints client-observed p50/p99 (queue wait included) and the refusal
+breakdown against the closed-loop ``read_many`` capacity:
+
+    PYTHONPATH=src python examples/serve_batch.py --frontdoor --load 2
 """
 
 import argparse
@@ -78,21 +87,93 @@ def run_hr(args) -> None:
     print(f"routing: {per_replica} (queries per replica), Σvalue={total:,.0f}")
 
 
+def run_frontdoor(args) -> None:
+    import numpy as np
+
+    from repro.core import HREngine, QUORUM
+    from repro.core.tpch import generate_orders, orders_schema, q1_q2_workload
+    from repro.serving.frontdoor import FrontDoor, Request
+
+    n_rows = args.rows
+    print(f"front-door serving demo: {n_rows} orders rows, "
+          f"{args.requests} requests at {args.load:g}x capacity")
+    kc, vc = generate_orders(1.0, seed=0, rows_per_sf=n_rows)
+    wl = q1_q2_workload(args.requests, seed=1, n_rows=n_rows)
+    eng = HREngine(n_nodes=6, result_cache=False)
+    eng.create_column_family(
+        "orders", kc, vc, replication_factor=3, mechanism="HR", workload=wl,
+        schema=orders_schema(), hrca_kwargs={"k_max": 2500, "seed": 0},
+    )
+    queries = list(wl.queries)
+
+    # closed-loop capacity: back-to-back full read_many batches — the
+    # baseline the open-loop offered load is expressed against
+    t0 = time.perf_counter()
+    for i in range(0, len(queries), args.batch):
+        eng.read_many("orders", queries[i : i + args.batch])
+    t_closed = time.perf_counter() - t0
+    closed_qps = len(queries) / t_closed
+    print(f"closed-loop read_many: {closed_qps:,.0f} q/s "
+          f"({t_closed * 1e3:.1f} ms)")
+
+    rng = np.random.default_rng(2)
+    rate = args.load * closed_qps
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, len(queries)))
+    reqs = [
+        Request(
+            "orders", q, arrival_s=float(arrivals[i]),
+            deadline_s=args.deadline * 1e-3,
+            priority=int(rng.integers(0, 3)),
+            consistency=QUORUM if rng.random() < 0.25 else "ONE",
+        )
+        for i, q in enumerate(queries)
+    ]
+    fd = FrontDoor(eng, max_batch=args.batch, max_wait=2e-3, max_queue=256)
+    resps = fd.serve(reqs)
+    s = fd.stats
+
+    ok = [r for r in resps if r.ok]
+    if ok:
+        lat = np.asarray([r.latency_s for r in ok])
+        p50, p99 = np.percentile(lat, 50) * 1e3, np.percentile(lat, 99) * 1e3
+        print(f"open-loop through front door: {len(ok)}/{len(reqs)} ok, "
+              f"p50={p50:.2f} ms p99={p99:.2f} ms (queue wait included)")
+    else:
+        print(f"open-loop through front door: 0/{len(reqs)} ok")
+    print(f"refusals: shed_overload={s['shed_overload']} "
+          f"shed_deadline={s['shed_deadline']} "
+          f"rejected_queue_full={s['rejected_queue_full']}")
+    print(f"degradation: consistency_degraded={s['consistency_degraded']} "
+          f"hedged_batches={s['hedged_batches']} "
+          f"degrade_recoveries={s['degrade_recoveries']}")
+    print(f"batches={s['batches']} max_queue_depth={s['max_queue_depth']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--hr", action="store_true",
                     help="serve a query batch via HREngine.read_many")
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="open-loop arrivals through the serving front door")
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--batch", type=int, default=None,
-                    help="default: 4 (model mode), 64 (--hr mode)")
+                    help="default: 4 (model mode), 64 (--hr/--frontdoor)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--rows", type=int, default=120_000,
-                    help="orders rows for --hr mode")
+                    help="orders rows for --hr/--frontdoor mode")
+    ap.add_argument("--requests", type=int, default=400,
+                    help="open-loop request count (--frontdoor)")
+    ap.add_argument("--load", type=float, default=2.0,
+                    help="offered load as a multiple of closed-loop capacity")
+    ap.add_argument("--deadline", type=float, default=50.0,
+                    help="per-request deadline in ms (--frontdoor)")
     args = ap.parse_args()
     if args.batch is None:
-        args.batch = 64 if args.hr else 4
-    if args.hr:
+        args.batch = 64 if (args.hr or args.frontdoor) else 4
+    if args.frontdoor:
+        run_frontdoor(args)
+    elif args.hr:
         run_hr(args)
     else:
         run_model(args)

@@ -12,9 +12,15 @@ commit), recovery rows/sec (log replay and survivor re-sort), and
 partitioned-read queries/sec (scatter-gather over the token ring at
 each partition count, plus the ``p{P}_skew_qps`` post-rebalance drain
 on the Zipf-skewed vnode ring — imbalance before/after and rows moved
-ride along as descriptive, ungated keys), and availability
+ride along as descriptive, ungated keys), availability
 (hinted-handoff heal vs full log replay rows/sec, ONE vs QUORUM
-queries/sec — ``hint_speedup`` / ``quorum_over_one`` stay ungated).
+queries/sec — ``hint_speedup`` / ``quorum_over_one`` stay ungated),
+and serving (front-door passthrough vs direct ``read_many`` q/s, plus
+the open-loop per-load ``*_p99_us`` latencies — the one family gated
+LOWER-is-better: a p99 more than 2x ``--tol`` above baseline fails
+(tails are noisier than best-of-N throughputs, and the regressions
+worth catching inflate them 5-10x); shed/degrade/ok rates stay
+descriptive).
 
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json --update
@@ -34,18 +40,27 @@ import sys
 
 def flatten_qps(d: dict, prefix: str = "") -> dict[str, float]:
     """Flat {'64/hr_batch_qps': v, 'device/16/fused_qps': v, ...} from
-    the nested benchmark result; only *_qps / *_rows_per_sec leaves are
-    gated (ratios and row counts are descriptive)."""
+    the nested benchmark result; only *_qps / *_rows_per_sec
+    (throughputs, higher is better) and *_p99_us (tail latencies,
+    lower is better) leaves are gated — ratios, rates and row counts
+    are descriptive."""
     out: dict[str, float] = {}
     for k, v in d.items():
         key = f"{prefix}/{k}" if prefix else str(k)
         if isinstance(v, dict):
             out.update(flatten_qps(v, key))
         elif isinstance(v, (int, float)) and (
-            str(k).endswith("_qps") or str(k).endswith("_rows_per_sec")
+            str(k).endswith("_qps")
+            or str(k).endswith("_rows_per_sec")
+            or str(k).endswith("p99_us")
         ):
             out[key] = float(v)
     return out
+
+
+def lower_is_better(key: str) -> bool:
+    """Latency keys regress by going UP; throughput keys by going down."""
+    return key.endswith("p99_us")
 
 
 def main() -> int:
@@ -72,7 +87,8 @@ def main() -> int:
     # are descriptive — ratios, not throughputs — and stay ungated.)
     flat: dict[str, float] = {}
     for section in (
-        "batched", "write_queue", "recovery", "partitioned", "availability"
+        "batched", "write_queue", "recovery", "partitioned", "availability",
+        "serving",
     ):
         flat.update(flatten_qps(smoke.get(section, {}), section))
     # parallel_merge measures thread-pool scheduling, which at smoke
@@ -107,7 +123,19 @@ def main() -> int:
             skipped += 1
             continue
         checked += 1
-        if flat[key] < base * (1.0 - args.tol):
+        if lower_is_better(key):
+            # tail latencies get 2x the throughput tolerance: even a
+            # min-of-N p99 swings ~1.4x with ambient machine load,
+            # while the regressions this gate exists to catch (a broken
+            # degradation ladder, unbounded queueing) inflate it 5-10x
+            ptol = 2.0 * args.tol
+            if flat[key] > base * (1.0 + ptol):
+                failures.append(
+                    f"  {key}: {flat[key]:,.0f} > baseline {base:,.0f} "
+                    f"(+{(flat[key] / base - 1.0) * 100.0:.0f}% > "
+                    f"{ptol * 100:.0f}%)"
+                )
+        elif flat[key] < base * (1.0 - args.tol):
             failures.append(
                 f"  {key}: {flat[key]:,.0f} < baseline {base:,.0f} "
                 f"(-{(1.0 - flat[key] / base) * 100.0:.0f}% > {args.tol * 100:.0f}%)"

@@ -17,6 +17,11 @@ python -m pytest -x -q "$@"
 # must leave reads identical to the no-fault oracle (repro/ft/chaos.py)
 python -m repro.ft.chaos --seeds 3 --steps 25
 
+# front-door overload smoke: a seeded Poisson burst + slow-drain run
+# where every request must answer identically to the oracle or be
+# explicitly shed/rejected (the shed-or-exact property)
+python -m repro.ft.chaos --overload --seeds 2
+
 smoke_json="$(mktemp)"
 trap 'rm -f "$smoke_json"' EXIT
 python -m benchmarks.run --smoke --json "$smoke_json"

@@ -19,6 +19,7 @@ from .engine import (
     QUORUM,
     ColumnFamily,
     CorruptRunError,
+    DeadlineExceeded,
     HREngine,
     Node,
     ReadReport,
@@ -70,6 +71,7 @@ __all__ = [
     "TransientReadError",
     "TransientFlushError",
     "CorruptRunError",
+    "DeadlineExceeded",
     "Partition",
     "TokenHistogram",
     "TokenRing",

@@ -190,6 +190,7 @@ __all__ = [
     "TransientReadError",
     "TransientFlushError",
     "CorruptRunError",
+    "DeadlineExceeded",
 ]
 
 #: Tunable read consistency levels (Cassandra's CL, read side): how
@@ -224,6 +225,46 @@ class TransientFlushError(TransientFault):
 
 class CorruptRunError(RuntimeError):
     """A flushed run failed its crc32 verification before merging."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A read's latency budget (``deadline_s``) was spent before the
+    answer was complete. Raised instead of continuing to scan, retry or
+    digest-read past the budget: a request that cannot answer in time
+    is shed *explicitly*, never served silently slow. Deliberately not
+    a :class:`TransientFault` — failover must not swallow it."""
+
+    def __init__(self, budget_s: float | None = None) -> None:
+        what = (
+            "read deadline budget spent before the answer completed"
+            if budget_s is None
+            else f"read deadline budget of {budget_s * 1e3:.3f} ms spent "
+            "before the answer completed"
+        )
+        super().__init__(what)
+        self.budget_s = budget_s
+
+
+def _deadline_at(deadline_s: float | None) -> float | None:
+    """Absolute ``perf_counter`` cutoff for a per-call latency budget
+    (None = unbounded). A zero/negative budget yields an already-spent
+    cutoff, so the caller sheds before doing any work."""
+    if deadline_s is None:
+        return None
+    return time.perf_counter() + deadline_s
+
+
+def _check_deadline(deadline_at: float | None, budget_s: float | None) -> None:
+    """Raise :class:`DeadlineExceeded` once the budget is spent. Called
+    before each unit of *required* work (a replica-group scan, a
+    failover retry, a digest read); optional work (hedges) is skipped
+    instead of raising — the primary answer stands."""
+    if deadline_at is not None and time.perf_counter() >= deadline_at:
+        raise DeadlineExceeded(budget_s)
+
+
+def _deadline_spent(deadline_at: float | None) -> bool:
+    return deadline_at is not None and time.perf_counter() >= deadline_at
 
 
 @dataclasses.dataclass
@@ -497,6 +538,16 @@ class HREngine:
         # attempt per live replica)
         self.failure_detector = failure_detector
         self.checksums = bool(checksums)
+        # the limit counts ATTEMPTS (first try included), so anything
+        # below 1 is nonsense: 0 used to slip through both retry loops
+        # as "zero attempts allowed", turning the first transient fault
+        # into an immediate unanswerable-query RuntimeError
+        if read_retry_limit is not None and read_retry_limit < 1:
+            raise ValueError(
+                "read_retry_limit must be >= 1 (attempts, first try "
+                "included; None = one attempt per live replica), got "
+                f"{read_retry_limit}"
+            )
         self.read_retry_limit = read_retry_limit
         self._hints_queued = 0
         self._hint_replays = 0
@@ -939,6 +990,7 @@ class HREngine:
         hedge: bool = False,
         hedge_ratio: float = 2.0,
         consistency: str = ONE,
+        deadline_s: float | None = None,
     ) -> tuple[ScanResult, ReadReport]:
         """Route to the cheapest live replica; ties broken round-robin
         (load balance). With ``hedge=True`` a read landing on a straggler
@@ -947,6 +999,15 @@ class HREngine:
         ``consistency`` beyond ``ONE`` adds digest reads on the next
         cost-ranked replicas with read repair on mismatch (module
         docstring, availability layer).
+
+        ``deadline_s`` is a latency *budget* for this call: required
+        work (the primary scan, failover retries, digest reads) checks
+        the remaining budget before launching and raises
+        :class:`DeadlineExceeded` once it is spent — the request is shed
+        explicitly instead of served late; optional work (the hedge
+        duplicate) is silently skipped when no budget remains. ``None``
+        (default) is unbounded; a non-positive budget sheds before any
+        scan.
 
         The common case (single partition, ``consistency=ONE``) runs a
         scalar fast path: one ``_ranked_replicas`` pass instead of the
@@ -969,7 +1030,10 @@ class HREngine:
                 hedge=hedge,
                 hedge_ratio=hedge_ratio,
                 consistency=consistency,
+                deadline_s=deadline_s,
             )[0]
+        deadline = _deadline_at(deadline_s)
+        _check_deadline(deadline, deadline_s)
         ranked = self._ranked_replicas(cf, query)
         best_cost = ranked[0][0]
         ties = [t for t in ranked if t[0] <= _tie_threshold(best_cost)]
@@ -987,6 +1051,7 @@ class HREngine:
                 break
             except TransientFault:
                 self._read_retries += 1
+                _check_deadline(deadline, deadline_s)
                 entry = next(
                     (t for t in ranked if t[2].replica_id not in tried), None
                 )
@@ -996,7 +1061,12 @@ class HREngine:
                         f"after {len(tried)} attempts"
                     ) from None
 
-        if hedge and len(ranked) > 1 and self.nodes[report.node_id].slowdown > hedge_ratio:
+        if (
+            hedge
+            and len(ranked) > 1
+            and self.nodes[report.node_id].slowdown > hedge_ratio
+            and not _deadline_spent(deadline)  # hedging is optional work
+        ):
             alt = next(
                 (t for t in ranked if t[2].node_id != report.node_id), None
             )
@@ -1037,6 +1107,7 @@ class HREngine:
         hedge: bool = False,
         hedge_ratio: float = 2.0,
         consistency: str = ONE,
+        deadline_s: float | None = None,
     ) -> list[tuple[ScanResult, ReadReport]]:
         """Batched ``read``: one scheduler pass and one grouped storage
         scan for the whole batch (see module docstring for semantics).
@@ -1048,7 +1119,12 @@ class HREngine:
         replicas up to the level's k, compares layout-independent result
         digests and repairs divergent replicas from the commit log
         (read repair); the returned result is always the digest-majority
-        answer.
+        answer. ``deadline_s`` bounds the whole batch's latency budget:
+        required work (replica-group scans, failover retries, digest
+        reads) raises :class:`DeadlineExceeded` once the budget is
+        spent, while optional work (hedge duplicates) is silently
+        skipped — the call either answers within budget or fails
+        loudly, never silently slow.
         """
         if consistency not in CONSISTENCY_LEVELS:
             raise ValueError(
@@ -1059,6 +1135,8 @@ class HREngine:
         queries = list(queries)
         if not queries:
             return []
+        deadline = _deadline_at(deadline_s)
+        _check_deadline(deadline, deadline_s)
         if cf.ring.n_partitions > 1:
             return self._read_many_partitioned(
                 cf,
@@ -1066,6 +1144,8 @@ class HREngine:
                 hedge=hedge,
                 hedge_ratio=hedge_ratio,
                 consistency=consistency,
+                deadline_at=deadline,
+                budget_s=deadline_s,
             )
         live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
         if not live:
@@ -1100,10 +1180,10 @@ class HREngine:
         reports: list[ReadReport | None] = [None] * n_q
         self._run_groups(
             cf, live, order_mat, picks, all_q, queries, rows_mat, cost_mat,
-            results, reports,
+            results, reports, deadline_at=deadline, budget_s=deadline_s,
         )
 
-        if hedge and len(live) > 1:
+        if hedge and len(live) > 1 and not _deadline_spent(deadline):
             # duplicate straggler-bound queries onto the next-cheapest
             # replica on a different node (same alternate ``read`` picks);
             # hedges are best-effort duplicates — a faulting hedge is
@@ -1123,6 +1203,7 @@ class HREngine:
             self._consistency_pass(
                 cf, cf.partitions[0], live, order_mat, picks, all_q,
                 queries, results, reports, consistency,
+                deadline_at=deadline, budget_s=deadline_s,
             )
 
         return list(zip(results, reports))  # type: ignore[arg-type]
@@ -1139,6 +1220,9 @@ class HREngine:
         cost_live: np.ndarray,
         results: list,
         reports: list,
+        *,
+        deadline_at: float | None = None,
+        budget_s: float | None = None,
     ) -> None:
         """Primary grouped execution with bounded failover: queries
         whose group raises a :class:`TransientFault` advance to the
@@ -1146,7 +1230,8 @@ class HREngine:
         (``read_retries`` counts each re-routed query), up to
         ``read_retry_limit`` attempts per query (default: one per live
         replica). Scheduler column ``j`` of ``order`` corresponds to
-        global query index ``qidx[j]``."""
+        global query index ``qidx[j]``. A spent ``deadline_at`` budget
+        raises :class:`DeadlineExceeded` before the next group scan."""
         col_of = {qi: j for j, qi in enumerate(qidx)}
         limit = (
             len(live) if self.read_retry_limit is None else self.read_retry_limit
@@ -1154,6 +1239,7 @@ class HREngine:
         tried: dict[int, set[int]] = {qi: set() for qi in qidx}
         queue = list(_group_by_pick(picks, qidx).items())
         while queue:
+            _check_deadline(deadline_at, budget_s)
             k, sub = queue.pop(0)
             for qi in sub:
                 tried[qi].add(k)
@@ -1301,6 +1387,9 @@ class HREngine:
         results: list,
         reports: list,
         consistency: str,
+        *,
+        deadline_at: float | None = None,
+        budget_s: float | None = None,
     ) -> None:
         """Digest reads: execute each query on the next cost-ranked
         replicas until k distinct replicas (primary included) answered,
@@ -1343,6 +1432,10 @@ class HREngine:
         alt_scans: dict[int, list[tuple[ReplicaHandle, ScanResult]]] = {}
         queue = list(alt_groups.items())
         while queue:
+            # digest reads are REQUIRED work at QUORUM/ALL — a spent
+            # budget sheds the whole call rather than quietly answering
+            # at a weaker level than the caller asked for
+            _check_deadline(deadline_at, budget_s)
             x, sub = queue.pop(0)
             for qi in sub:
                 consulted[qi].add(x)
@@ -1484,6 +1577,8 @@ class HREngine:
         hedge: bool,
         hedge_ratio: float,
         consistency: str = ONE,
+        deadline_at: float | None = None,
+        budget_s: float | None = None,
     ) -> list[tuple[ScanResult, ReadReport]]:
         """Scatter-gather ``read_many`` over a partitioned column family.
 
@@ -1538,6 +1633,7 @@ class HREngine:
         n_slots = len(cf.slot_layouts)
         partials: dict[int, tuple[list, list]] = {}
         for pid in sorted(touched):
+            _check_deadline(deadline_at, budget_s)
             part = cf.partitions[pid]
             qidx = touched[pid]
             live = [r for r in part.replicas if self.nodes[r.node_id].alive]
@@ -1574,9 +1670,9 @@ class HREngine:
             cost_live = cost_mat[np.asarray(slots)]
             self._run_groups(
                 cf, live, order, picks, qidx, queries, rows_live, cost_live,
-                res_p, rep_p,
+                res_p, rep_p, deadline_at=deadline_at, budget_s=budget_s,
             )
-            if hedge and len(live) > 1:
+            if hedge and len(live) > 1 and not _deadline_spent(deadline_at):
                 for k, sub in self._hedge_groups(
                     live, order, picks, qidx, hedge_ratio
                 ).items():
@@ -1591,6 +1687,7 @@ class HREngine:
                 self._consistency_pass(
                     cf, part, live, order, picks, qidx, queries,
                     res_p, rep_p, consistency,
+                    deadline_at=deadline_at, budget_s=budget_s,
                 )
             partials[pid] = (res_p, rep_p)
 

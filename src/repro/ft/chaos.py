@@ -20,6 +20,22 @@ deterministic: same seed → same schedule → same repairs → same report.
 ``python -m repro.ft.chaos --seeds 3 --steps 25`` runs the property
 over several seeds (the CI smoke); a nonzero exit code means a seed
 violated it.
+
+:class:`OverloadHarness` (``--overload``) is the serving-layer sibling:
+instead of storage faults it drives a seeded Poisson arrival stream —
+with burst windows (arrival rate × ~10) and slow-drain windows (node
+slowdowns injected mid-run through the front door's virtual timeline) —
+through a :class:`~repro.serving.frontdoor.FrontDoor` over the victim.
+Its acceptance property: **every request either answers identically to
+the no-fault oracle or is *explicitly* refused** (rejected / shed /
+deadline, each typed and counted in ``frontdoor.stats``), the
+accounting balances, the queue never exceeds its bound, and the
+overload is non-vacuous (at least one refusal actually happened) — no
+silent slow requests, no unbounded queue growth. Unlike the storage
+harness, its *counters* are not byte-stable across runs: the front
+door's virtual clock consumes measured engine walls, so the split
+between refusal kinds shifts with machine speed. The arrival stream
+and the acceptance property are what a seed pins down.
 """
 
 from __future__ import annotations
@@ -39,7 +55,15 @@ from repro.core import (
 from repro.ft.detector import FailureDetector
 from repro.ft.straggler import clear_slowdowns, inject_slowdown
 
-__all__ = ["ChaosEvent", "ChaosSchedule", "ChaosHarness", "ChaosReport", "KINDS"]
+__all__ = [
+    "ChaosEvent",
+    "ChaosSchedule",
+    "ChaosHarness",
+    "ChaosReport",
+    "OverloadHarness",
+    "OverloadReport",
+    "KINDS",
+]
 
 KINDS = ("crash", "torn_tail", "corrupt_run", "slow_node", "flush_abort")
 
@@ -381,6 +405,182 @@ class ChaosHarness:
         )
 
 
+@dataclasses.dataclass
+class OverloadReport:
+    seed: int
+    ok: bool
+    failures: list[str]
+    n_requests: int
+    stats: dict
+
+
+class OverloadHarness:
+    """Front-door overload chaos: Poisson arrivals with burst and
+    slow-drain windows, checked shed-or-exact against a no-fault oracle
+    (see module docstring).
+
+    Only *slowdown* faults are injected — never corruption: under queue
+    pressure the front door degrades QUORUM to ONE, and a degraded read
+    of a corrupted replica could legitimately diverge from the oracle.
+    Overload correctness (every answer exact or explicitly refused) and
+    corruption repair (:class:`ChaosHarness`) are separate properties.
+    """
+
+    def __init__(
+        self,
+        seed: int,
+        *,
+        n_requests: int = 400,
+        n_rows: int = 3000,
+        n_nodes: int = 6,
+        n_partitions: int = 4,
+        base_interarrival_s: float = 200e-6,
+        burst_factor: float = 10.0,
+        slowdown: float = 50.0,
+        deadline_s: float = 50e-3,
+        quorum_frac: float = 0.3,
+    ) -> None:
+        from repro.serving.frontdoor import FrontDoor, Request
+
+        self.seed = int(seed)
+        rng = np.random.default_rng(seed + 7_000_037)
+        bits = {"k0": 12, "k1": 10, "k2": 8}
+        dom = {c: 2**b for c, b in bits.items()}
+        kc = {
+            c: rng.integers(0, d, n_rows).astype(np.int64)
+            for c, d in dom.items()
+        }
+        vc = {"metric": rng.uniform(0.0, 1.0, n_rows)}
+        schema = KeySchema(bits=bits)
+        cf_kwargs = dict(
+            replication_factor=3,
+            mechanism="HR",
+            workload=random_workload(
+                np.random.default_rng(0), schema, list(kc), 16, value_col="metric"
+            ),
+            schema=schema,
+            hrca_kwargs={"k_max": 200, "seed": 0},
+            partitions=n_partitions,
+        )
+        self.victim = HREngine(
+            n_nodes=n_nodes,
+            failure_detector=FailureDetector(),
+            result_cache=False,
+        )
+        self.oracle = HREngine(n_nodes=n_nodes, result_cache=False)
+        self.victim.create_column_family(_CF, kc, vc, **cf_kwargs)
+        self.oracle.create_column_family(_CF, kc, vc, **cf_kwargs)
+
+        queries = random_workload(
+            rng, schema, list(kc), n_requests, value_col="metric"
+        ).queries
+
+        # Poisson arrivals; the middle third of the run is a burst
+        # window (rate × burst_factor). Gaps are seeded draws, so the
+        # whole stream replays bit-identically per seed.
+        t = 0.0
+        arrivals: list[float] = []
+        burst_lo, burst_hi = n_requests // 3, 2 * n_requests // 3
+        for i in range(n_requests):
+            mean = base_interarrival_s / (
+                burst_factor if burst_lo <= i < burst_hi else 1.0
+            )
+            t += float(rng.exponential(mean))
+            arrivals.append(t)
+
+        self.requests = [
+            Request(
+                _CF,
+                q,
+                arrival_s=arrivals[i],
+                deadline_s=deadline_s,
+                priority=int(rng.integers(0, 3)),
+                consistency=QUORUM if rng.random() < quorum_frac else "ONE",
+            )
+            for i, q in enumerate(queries)
+        ]
+        # slow-drain window: while the burst is still queued, straggle
+        # half the nodes; cleared later so the tail of the run recovers
+        slow_at = arrivals[burst_lo]
+        clear_at = arrivals[min(burst_hi + n_requests // 6, n_requests - 1)]
+        slow_nodes = list(range(0, n_nodes, 2))
+        self.timeline = [
+            (
+                slow_at,
+                lambda: [
+                    inject_slowdown(self.victim, n, slowdown) for n in slow_nodes
+                ],
+            ),
+            (clear_at, lambda: clear_slowdowns(self.victim)),
+        ]
+        self.frontdoor = FrontDoor(
+            self.victim,
+            max_batch=16,
+            max_wait=base_interarrival_s * 4,
+            max_queue=96,
+            bulkhead_inflight=64,
+        )
+
+    def run(self) -> OverloadReport:
+        failures: list[str] = []
+        responses = self.frontdoor.serve(self.requests, timeline=self.timeline)
+        stats = self.frontdoor.stats
+        refused = 0
+        for i, (req, resp) in enumerate(zip(self.requests, responses)):
+            if resp is None:
+                failures.append(f"request {i}: no response at all")
+                continue
+            if resp.ok:
+                want, _ = self.oracle.read(_CF, req.query)
+                tol = _REL_TOL * max(1.0, abs(want.value))
+                if (
+                    resp.result.rows_matched != want.rows_matched
+                    or abs(resp.result.value - want.value) > tol
+                ):
+                    failures.append(
+                        f"request {i}: served {resp.result.value!r} != "
+                        f"oracle {want.value!r}"
+                    )
+                if (
+                    req.deadline_s is not None
+                    and resp.latency_s > req.deadline_s
+                ):
+                    failures.append(
+                        f"request {i}: silently slow ok answer "
+                        f"({resp.latency_s * 1e3:.1f} ms > budget)"
+                    )
+            else:
+                refused += 1
+                if resp.status not in ("rejected", "shed", "deadline"):
+                    failures.append(
+                        f"request {i}: unknown terminal status {resp.status!r}"
+                    )
+                if not resp.error:
+                    failures.append(f"request {i}: untyped refusal")
+        answered = sum(1 for r in responses if r is not None and r.ok)
+        if answered + refused != len(self.requests):
+            failures.append(
+                f"accounting leak: {answered} ok + {refused} refused != "
+                f"{len(self.requests)} submitted"
+            )
+        if stats["max_queue_depth"] > self.frontdoor.max_queue:
+            failures.append(
+                f"queue grew past its bound "
+                f"({stats['max_queue_depth']} > {self.frontdoor.max_queue})"
+            )
+        if refused == 0:
+            failures.append(
+                "vacuous run: the overload never forced a single refusal"
+            )
+        return OverloadReport(
+            seed=self.seed,
+            ok=not failures,
+            failures=failures,
+            n_requests=len(self.requests),
+            stats=stats,
+        )
+
+
 def main(argv: list[str] | None = None) -> int:
     import argparse
 
@@ -389,10 +589,41 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--seed", type=int, default=None, help="run one seed")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--rate", type=float, default=0.35)
+    ap.add_argument(
+        "--overload",
+        action="store_true",
+        help="front-door overload scenario (shed-or-exact property) "
+        "instead of the storage-fault schedule",
+    )
     args = ap.parse_args(argv)
 
     seeds = [args.seed] if args.seed is not None else list(range(args.seeds))
     bad = 0
+    if args.overload:
+        for seed in seeds:
+            report = OverloadHarness(seed).run()
+            s = report.stats
+            counters = ", ".join(
+                f"{k}={int(s[k])}"
+                for k in (
+                    "served_ok",
+                    "rejected_queue_full",
+                    "rejected_bulkhead",
+                    "shed_overload",
+                    "shed_deadline",
+                    "consistency_degraded",
+                    "hedged_batches",
+                    "batches",
+                )
+            )
+            print(
+                f"overload seed {seed}: {'OK' if report.ok else 'FAIL'} "
+                f"({report.n_requests} requests; {counters})"
+            )
+            for f in report.failures:
+                print(f"  - {f}")
+            bad += not report.ok
+        return 1 if bad else 0
     for seed in seeds:
         report = ChaosHarness(seed, n_steps=args.steps, rate=args.rate).run()
         keys = (

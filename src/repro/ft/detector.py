@@ -35,12 +35,58 @@ from __future__ import annotations
 import math
 from collections import deque
 
-__all__ = ["FailureDetector"]
+__all__ = ["FailureDetector", "LatencyEWMA"]
 
 #: sigma floor as a fraction of the peer mean: scan walls are heavy-
 #: tailed at microsecond scale, and a near-zero fitted sigma would let
 #: scheduler jitter alone push phi past any threshold.
 _SIGMA_FLOOR_FRAC = 0.25
+
+
+class LatencyEWMA:
+    """Exponentially-weighted latency tracker: mean plus mean absolute
+    deviation of a stream of wall-time samples.
+
+    The serving front door feeds it per-request queue waits and reads
+    it to decide when to *hedge* — the same observed-latency idea as
+    the phi detector above, but over the front door's own queue rather
+    than per-node scan walls, and with a threshold the caller owns
+    (``mean() > k × max_wait`` style) instead of a suspicion level.
+    Deterministic: the state is a pure fold over the recorded samples.
+    """
+
+    def __init__(self, *, alpha: float = 0.2) -> None:
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = float(alpha)
+        self._mean: float | None = None
+        self._dev: float = 0.0
+        self._count: int = 0
+
+    def record(self, latency_s: float) -> None:
+        """Fold one wall-seconds sample into the running estimates."""
+        x = float(latency_s)
+        if self._mean is None:
+            self._mean = x
+        else:
+            err = abs(x - self._mean)
+            self._dev += self.alpha * (err - self._dev)
+            self._mean += self.alpha * (x - self._mean)
+        self._count += 1
+
+    def mean(self) -> float:
+        """Smoothed mean latency (0.0 before any sample)."""
+        return 0.0 if self._mean is None else self._mean
+
+    def deviation(self) -> float:
+        """Smoothed mean absolute deviation — a cheap spread estimate
+        for "how far past the mean is surprising"."""
+        return self._dev
+
+    @property
+    def count(self) -> int:
+        """Samples recorded so far (thresholds often want a warm-up)."""
+        return self._count
 
 
 class FailureDetector:

@@ -1,0 +1,530 @@
+"""Overload-safe serving front door: continuous batching with admission
+control, deadlines, and graceful degradation.
+
+Everything below :meth:`HREngine.read_many` is batched and
+fault-tolerant, but callers hand it pre-built query lists. This module
+is the missing serving layer: single queries arrive with per-request
+deadlines and priorities, the front door coalesces them into dynamic
+``read_many`` batches (continuous batching — a batch launches when
+``max_batch`` fills or ``max_wait`` expires, and requests arriving
+while a batch is in flight join the *next* batch), and a stack of
+overload guards keeps the engine answerable when offered load exceeds
+capacity.
+
+The degradation ladder
+======================
+
+Pressure is measured in queue-wait units of ``max_wait`` (the knob the
+operator already reasons in). Each rung engages at a higher threshold
+and disengages automatically when the queue drains — recovery needs no
+operator action:
+
+1. **Hedge** (``queue-wait EWMA > hedge_wait_factor × max_wait``,
+   default 1.5×): batches launch with hedged reads so one straggler
+   node stops stretching every batch. Observed queue latency — the
+   :class:`~repro.ft.detector.LatencyEWMA` feed — drives this, not a
+   static per-call ``hedge_ratio``.
+2. **Degrade** (``oldest queued wait > degrade_wait_factor ×
+   max_wait``, default 4×): QUORUM/ALL requests in the batch are
+   served at ONE, each counted in ``stats["consistency_degraded"]``
+   and flagged ``degraded=True`` on its response. Latency is bought
+   with consistency, openly (Zhu et al.; McKenzie et al. — the
+   consistency level as a latency dial).
+3. **Shed** (``queue depth > shed_fill × max_queue``, default 0.9×):
+   the lowest-priority, youngest requests are dropped with an explicit
+   ``shed`` response until the backlog is back at the threshold.
+   Priority decides who pays for overload; nobody waits unboundedly.
+4. **Deadline** (always on): a request whose budget is already spent
+   at launch is shed before wasting engine work; the remaining batch
+   budget is threaded into the engine (``deadline_s``), where required
+   work raises :class:`~repro.core.DeadlineExceeded` and optional work
+   (hedges) is skipped; a request whose answer lands after its budget
+   gets a ``deadline`` response, not a silently slow answer.
+
+Ahead of the ladder sit the admission guards
+(:mod:`repro.serving.admission`): a token bucket (rate + burst) and
+per-``(column family, pinned partition)`` bulkheads, both rejecting
+with :class:`~repro.serving.admission.RetryAfter` instead of queuing
+without bound; a full queue likewise rejects at admission. Every
+decision on every rung increments a ``frontdoor.stats`` counter.
+
+Determinism
+===========
+
+The front door runs a single-threaded discrete-event loop over a
+*virtual* clock: requests carry arrival timestamps, queue waits and
+latency percentiles are virtual-time quantities, and a ``timeline`` of
+``(virtual_time, callback)`` events injects faults mid-run (the chaos
+harness drives node slowdowns this way). Engine calls are real — a
+batch's virtual service time is the larger of its measured wall and
+the engine-reported per-query walls, so an injected straggler slows
+the virtual drain exactly as it inflates reported walls. Given a
+fixed arrival stream and fixed service times every scheduling,
+admission, degradation, and shedding decision is reproducible — but
+service times are *measured*, so counters shift with machine speed
+between runs; what is invariant is the acceptance contract (every
+request answers correctly or is explicitly refused), not the exact
+split between refusal kinds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+from repro.core import (
+    CONSISTENCY_LEVELS,
+    DeadlineExceeded,
+    HREngine,
+    ONE,
+    Query,
+    ReadReport,
+    ScanResult,
+    slab_bounds_many,
+)
+from repro.ft.detector import LatencyEWMA
+from repro.serving.admission import Bulkhead, RetryAfter, TokenBucket
+
+__all__ = ["FrontDoor", "Request", "Response"]
+
+#: response statuses — every request ends in exactly one of these
+OK = "ok"
+REJECTED = "rejected"  # refused at admission (RetryAfter)
+SHED = "shed"  # dropped under overload (priority shed)
+DEADLINE = "deadline"  # budget spent (DeadlineExceeded)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One client query: what to read, when it arrived, how long it may
+    take (``deadline_s`` is a budget relative to arrival; None =
+    unbounded), and how important it is (higher ``priority`` sheds
+    last)."""
+
+    cf_name: str
+    query: Query
+    arrival_s: float = 0.0
+    deadline_s: float | None = None
+    priority: int = 0
+    consistency: str = ONE
+
+    def __post_init__(self) -> None:
+        if self.consistency not in CONSISTENCY_LEVELS:
+            raise ValueError(
+                f"unknown consistency {self.consistency!r} "
+                f"(expected one of {CONSISTENCY_LEVELS})"
+            )
+        if self.arrival_s < 0.0:
+            raise ValueError(f"arrival_s must be >= 0, got {self.arrival_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """The front door's answer: a result or an *explicit* refusal.
+    ``status`` is one of ``ok`` / ``rejected`` / ``shed`` /
+    ``deadline``; there is no silent path."""
+
+    status: str
+    result: ScanResult | None = None
+    report: ReadReport | None = None
+    error: str | None = None
+    retry_after_s: float | None = None  # set on ``rejected``
+    latency_s: float = 0.0  # virtual completion - arrival
+    queue_wait_s: float = 0.0  # virtual launch - arrival
+    consistency_used: str | None = None
+    degraded: bool = False  # served below the requested consistency
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics: queue.remove()
+class _Queued:
+    """A request holding a queue slot (and its bulkhead admission)."""
+
+    idx: int
+    req: Request
+    compartment: tuple[str, int] | None
+
+
+class FrontDoor:
+    """Continuous-batching, overload-safe serving layer over one
+    :class:`~repro.core.HREngine` (see module docstring for the
+    degradation ladder and determinism model).
+
+    Parameters
+    ----------
+    max_batch, max_wait:
+        Continuous-batching knobs: a batch launches as soon as
+        ``max_batch`` requests wait, or when the oldest has waited
+        ``max_wait`` seconds — whichever comes first.
+    max_queue:
+        Hard queue bound; arrivals beyond it are rejected with
+        :class:`RetryAfter` (backpressure, not buffering).
+    rate, burst:
+        Token-bucket admission (requests/second + burst capacity);
+        ``rate=None`` disables throttling.
+    bulkhead_inflight:
+        Outstanding-request bound per ``(cf_name, partition)``
+        compartment; ``None`` disables bulkheads.
+    hedge_wait_factor, degrade_wait_factor, shed_fill:
+        The ladder thresholds, in units of ``max_wait`` (rungs 1–3
+        above).
+    """
+
+    def __init__(
+        self,
+        engine: HREngine,
+        *,
+        max_batch: int = 64,
+        max_wait: float = 2e-3,
+        max_queue: int = 256,
+        rate: float | None = None,
+        burst: float = 32.0,
+        bulkhead_inflight: int | None = None,
+        hedge_wait_factor: float = 1.5,
+        degrade_wait_factor: float = 4.0,
+        shed_fill: float = 0.9,
+        ewma_alpha: float = 0.2,
+        ewma_warmup: int = 8,
+    ) -> None:
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait <= 0.0:
+            raise ValueError(f"max_wait must be > 0, got {max_wait}")
+        if max_queue < max_batch:
+            raise ValueError(
+                f"max_queue ({max_queue}) must be >= max_batch ({max_batch})"
+            )
+        if not 0.0 < shed_fill <= 1.0:
+            raise ValueError(f"shed_fill must be in (0, 1], got {shed_fill}")
+        if hedge_wait_factor <= 0.0 or degrade_wait_factor <= 0.0:
+            raise ValueError("ladder factors must be > 0")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_wait = float(max_wait)
+        self.max_queue = int(max_queue)
+        self.bucket = TokenBucket(rate, burst) if rate is not None else None
+        self.bulkhead = (
+            Bulkhead(bulkhead_inflight, retry_after_s=max_wait)
+            if bulkhead_inflight is not None
+            else None
+        )
+        self.hedge_after = float(hedge_wait_factor) * self.max_wait
+        self.degrade_after = float(degrade_wait_factor) * self.max_wait
+        self.shed_trigger = max(1, int(float(shed_fill) * self.max_queue))
+        self.queue_wait = LatencyEWMA(alpha=ewma_alpha)
+        self.ewma_warmup = int(ewma_warmup)
+        self._degraded = False  # current ladder state (for recovery count)
+        self._stats: dict[str, float] = {
+            "submitted": 0,
+            "admitted": 0,
+            "served_ok": 0,
+            "rejected_throttle": 0,
+            "rejected_bulkhead": 0,
+            "rejected_queue_full": 0,
+            "shed_overload": 0,
+            "shed_deadline": 0,
+            "consistency_degraded": 0,
+            "degraded_batches": 0,
+            "degrade_recoveries": 0,
+            "hedged_batches": 0,
+            "batches": 0,
+            "max_queue_depth": 0,
+        }
+
+    @property
+    def stats(self) -> dict[str, float]:
+        """Copy of the decision counters (every ladder rung and every
+        admission refusal increments one of these)."""
+        return dict(self._stats)
+
+    # -- admission ---------------------------------------------------------
+
+    def _compartment(self, req: Request) -> tuple[str, int]:
+        """Bulkhead compartment key: the request's column family plus
+        the partition its slab pins (-1 when it fans out over several —
+        fan-out queries share one per-CF compartment)."""
+        cf = self.engine.column_families[req.cf_name]
+        if cf.ring.n_partitions <= 1:
+            return (req.cf_name, 0)
+        bounds = slab_bounds_many([req.query], cf.key_names, cf.schema)
+        p_lo, p_hi = cf.ring.span_partitions(bounds)
+        pid = int(p_lo[0]) if int(p_lo[0]) == int(p_hi[0]) else -1
+        return (req.cf_name, pid)
+
+    def _admit(
+        self, idx: int, req: Request, queue: list[_Queued], responses: list
+    ) -> None:
+        """Admission at virtual arrival time: queue bound, token
+        bucket, bulkhead — first refusal wins and becomes an explicit
+        ``rejected`` response."""
+        self._stats["submitted"] += 1
+        if len(queue) >= self.max_queue:
+            self._stats["rejected_queue_full"] += 1
+            responses[idx] = Response(
+                status=REJECTED,
+                error="RetryAfter: queue full",
+                retry_after_s=self.max_wait,
+                consistency_used=None,
+            )
+            return
+        if self.bucket is not None:
+            try:
+                self.bucket.admit(req.arrival_s)
+            except RetryAfter as e:
+                self._stats["rejected_throttle"] += 1
+                responses[idx] = Response(
+                    status=REJECTED,
+                    error=f"RetryAfter: {e.reason}",
+                    retry_after_s=e.retry_after_s,
+                )
+                return
+        comp = None
+        if self.bulkhead is not None:
+            # the slab walk is only worth paying when a bulkhead will
+            # actually compartment by it
+            comp = self._compartment(req)
+            try:
+                self.bulkhead.acquire(comp)
+            except RetryAfter as e:
+                self._stats["rejected_bulkhead"] += 1
+                responses[idx] = Response(
+                    status=REJECTED,
+                    error=f"RetryAfter: {e.reason}",
+                    retry_after_s=e.retry_after_s,
+                )
+                return
+        self._stats["admitted"] += 1
+        queue.append(_Queued(idx, req, comp))
+        self._stats["max_queue_depth"] = max(
+            self._stats["max_queue_depth"], len(queue)
+        )
+
+    def _release(self, entry: _Queued) -> None:
+        if self.bulkhead is not None and entry.compartment is not None:
+            self.bulkhead.release(entry.compartment)
+
+    # -- the event loop ----------------------------------------------------
+
+    def serve(
+        self,
+        requests: Sequence[Request],
+        *,
+        timeline: Sequence[tuple[float, Callable[[], Any]]] = (),
+    ) -> list[Response]:
+        """Run the open-loop simulation to completion and return one
+        :class:`Response` per request, in input order.
+
+        ``timeline`` entries ``(virtual_time, callback)`` fire once the
+        virtual clock first reaches their time — the chaos harness uses
+        them to inject/clear node slowdowns and fault budgets mid-run.
+        """
+        order = sorted(range(len(requests)), key=lambda i: (requests[i].arrival_s, i))
+        responses: list[Response | None] = [None] * len(requests)
+        events = sorted(timeline, key=lambda e: e[0])
+        queue: list[_Queued] = []
+        now = 0.0
+        ai = ei = 0
+
+        def fire_events(upto: float) -> None:
+            nonlocal ei
+            while ei < len(events) and events[ei][0] <= upto:
+                events[ei][1]()
+                ei += 1
+
+        def admit_upto(t: float) -> None:
+            nonlocal ai
+            while ai < len(order) and requests[order[ai]].arrival_s <= t:
+                idx = order[ai]
+                fire_events(requests[idx].arrival_s)
+                self._admit(idx, requests[idx], queue, responses)
+                ai += 1
+
+        while True:
+            admit_upto(now)
+            if not queue:
+                if ai >= len(order):
+                    break
+                now = requests[order[ai]].arrival_s  # idle: jump to next arrival
+                continue
+
+            # -- continuous batching: launch at max_batch or max_wait --
+            if len(queue) >= self.max_batch:
+                launch = now
+            else:
+                launch = max(now, queue[0].req.arrival_s + self.max_wait)
+                # arrivals before the timer expires may fill the batch early
+                while (
+                    ai < len(order)
+                    and requests[order[ai]].arrival_s <= launch
+                    and len(queue) < self.max_batch
+                ):
+                    idx = order[ai]
+                    fire_events(requests[idx].arrival_s)
+                    self._admit(idx, requests[idx], queue, responses)
+                    ai += 1
+                if len(queue) >= self.max_batch:
+                    launch = max(now, queue[-1].req.arrival_s)
+            fire_events(launch)
+            now = launch
+
+            # -- rung 3: priority shed when the queue is nearly full --
+            if len(queue) > self.shed_trigger:
+                target = max(self.max_batch, self.shed_trigger)
+                victims = sorted(
+                    queue, key=lambda e: (e.req.priority, -e.req.arrival_s)
+                )
+                for entry in victims:
+                    if len(queue) <= target:
+                        break
+                    queue.remove(entry)
+                    self._release(entry)
+                    self._stats["shed_overload"] += 1
+                    responses[entry.idx] = Response(
+                        status=SHED,
+                        error="Shed: queue over shed_fill, lower priority",
+                        latency_s=now - entry.req.arrival_s,
+                        queue_wait_s=now - entry.req.arrival_s,
+                    )
+                if not queue:
+                    continue
+
+            # -- ladder state for this batch --
+            oldest_wait = now - queue[0].req.arrival_s
+            degrade = oldest_wait > self.degrade_after
+            hedge = (
+                self.queue_wait.count >= self.ewma_warmup
+                and self.queue_wait.mean() > self.hedge_after
+            )
+            if degrade:
+                self._stats["degraded_batches"] += 1
+                self._degraded = True
+            elif self._degraded:
+                self._degraded = False
+                self._stats["degrade_recoveries"] += 1
+            if hedge:
+                self._stats["hedged_batches"] += 1
+
+            # -- pick the batch: highest priority, then oldest --
+            chosen = sorted(
+                queue, key=lambda e: (-e.req.priority, e.req.arrival_s, e.idx)
+            )[: self.max_batch]
+            for entry in chosen:
+                queue.remove(entry)
+
+            # -- rung 4a: shed members whose budget is already spent --
+            ready: list[_Queued] = []
+            for entry in chosen:
+                d = entry.req.deadline_s
+                if d is not None and now - entry.req.arrival_s >= d:
+                    self._release(entry)
+                    self._stats["shed_deadline"] += 1
+                    responses[entry.idx] = Response(
+                        status=DEADLINE,
+                        error=str(DeadlineExceeded(d)),
+                        latency_s=now - entry.req.arrival_s,
+                        queue_wait_s=now - entry.req.arrival_s,
+                    )
+                else:
+                    ready.append(entry)
+
+            # -- launch: one read_many per (cf, effective consistency) --
+            self._stats["batches"] += 1
+            groups: dict[tuple[str, str], list[_Queued]] = {}
+            for entry in ready:
+                level = ONE if degrade else entry.req.consistency
+                groups.setdefault((entry.req.cf_name, level), []).append(entry)
+            service = 0.0
+            for (cf_name, level), members in sorted(groups.items()):
+                service += self._run_group(
+                    cf_name, level, members, now, hedge=hedge,
+                    degrade=degrade, responses=responses,
+                )
+            now += service
+        return responses  # type: ignore[return-value]
+
+    def _run_group(
+        self,
+        cf_name: str,
+        level: str,
+        members: list[_Queued],
+        launch: float,
+        *,
+        hedge: bool,
+        degrade: bool,
+        responses: list,
+    ) -> float:
+        """Execute one homogeneous sub-batch and write its responses.
+        Returns the group's virtual service time: the larger of the
+        measured wall and the engine-reported walls, so injected node
+        slowdowns (which inflate reported walls without sleeping) slow
+        the virtual drain."""
+        # the engine budget is the LARGEST remaining member budget, and
+        # only when every member carries one: an engine DeadlineExceeded
+        # then implies every member's budget is spent — shed them all,
+        # requeue none
+        budgets = [
+            m.req.deadline_s - (launch - m.req.arrival_s)
+            for m in members
+            if m.req.deadline_s is not None
+        ]
+        deadline_s = max(budgets) if len(budgets) == len(members) else None
+        t0 = time.perf_counter()
+        try:
+            out = self.engine.read_many(
+                cf_name,
+                [m.req.query for m in members],
+                hedge=hedge,
+                hedge_ratio=1.0 if hedge else 2.0,
+                consistency=level,
+                deadline_s=deadline_s,
+            )
+        except DeadlineExceeded as e:
+            wall = time.perf_counter() - t0
+            for m in members:
+                self._release(m)
+                self._stats["shed_deadline"] += 1
+                responses[m.idx] = Response(
+                    status=DEADLINE,
+                    error=str(e),
+                    latency_s=launch + wall - m.req.arrival_s,
+                    queue_wait_s=launch - m.req.arrival_s,
+                )
+            return wall
+        wall = time.perf_counter() - t0
+        reported = sum(rep.wall_seconds for _sr, rep in out)
+        service = max(wall, reported)
+        done = launch + service
+        for m, (sr, rep) in zip(members, out):
+            self._release(m)
+            q_wait = launch - m.req.arrival_s
+            self.queue_wait.record(q_wait)
+            latency = done - m.req.arrival_s
+            d = m.req.deadline_s
+            if d is not None and latency > d:
+                # the answer exists but landed late — refuse it openly
+                self._stats["shed_deadline"] += 1
+                responses[m.idx] = Response(
+                    status=DEADLINE,
+                    error=str(DeadlineExceeded(d)),
+                    latency_s=latency,
+                    queue_wait_s=q_wait,
+                )
+                continue
+            self._stats["served_ok"] += 1
+            was_degraded = degrade and m.req.consistency != level
+            if was_degraded:
+                self._stats["consistency_degraded"] += 1
+            responses[m.idx] = Response(
+                status=OK,
+                result=sr,
+                report=rep,
+                latency_s=latency,
+                queue_wait_s=q_wait,
+                consistency_used=level,
+                degraded=was_degraded,
+            )
+        return service

@@ -15,6 +15,7 @@ import pytest
 
 from repro.core import (
     ALL,
+    DeadlineExceeded,
     Eq,
     HREngine,
     ONE,
@@ -408,3 +409,136 @@ class TestFailureInjector:
         assert inj.maybe_fail(12)
         assert inj.log[0]["step"] == 12 and inj.log[0]["node"] == 0
         assert not inj.maybe_recover(13)  # nothing left open
+
+
+class TestHedgeConsistency:
+    """Pin the hedge × consistency contract: the hedge duplicates ONLY
+    the primary read (the hedge pass runs before the digest pass, and
+    digest reads are never hedged), and a losing hedge leaves the
+    primary's report — node, wall — untouched."""
+
+    @staticmethod
+    def _slow_all_but(eng, node_id, factor=1e6):
+        for n in eng.nodes:
+            n.slowdown = 1.0 if n.node_id == node_id else factor
+
+    def test_hedge_duplicates_primary_only_at_quorum(self):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=6)
+        eng = _engine(kc, vc, schema, result_cache=False)
+        q = Query({"k0": Eq(int(kc["k0"][0]))})
+        _, rep0 = eng.read("cf", q)
+        # make the scheduler's pick a straggler so the hedge fires
+        eng.nodes[rep0.node_id].slowdown = 3.0
+        calls = []
+        orig = eng._scan_with_cache
+
+        def spy(cf, r, group):
+            calls.append((r.replica_id, len(group)))
+            return orig(cf, r, group)
+
+        eng._scan_with_cache = spy
+        plain, _ = eng.read("cf", q)
+        hedged, rep = eng.read(
+            "cf", q, hedge=True, consistency=QUORUM
+        )
+        assert hedged.value == plain.value
+        # the plain read is 1 scan. QUORUM at rf=3 needs k=2 distinct
+        # replicas, so without hedging the second read would add 2
+        # scans (primary + 1 digest); the hedge adds exactly ONE more
+        # (the duplicated primary) for 3 — a count of 5 would mean the
+        # whole quorum was duplicated, which is NOT the contract
+        assert len(calls) == 1 + 3
+        assert all(n == 1 for _rid, n in calls)
+
+    def test_hedge_at_all_reads_every_replica_once_plus_one(self):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=6)
+        eng = _engine(kc, vc, schema, result_cache=False)
+        q = Query({"k0": Eq(int(kc["k0"][1]))})
+        _, rep0 = eng.read("cf", q)
+        eng.nodes[rep0.node_id].slowdown = 3.0
+        calls = []
+        orig = eng._scan_with_cache
+
+        def spy(cf, r, group):
+            calls.append(r.replica_id)
+            return orig(cf, r, group)
+
+        eng._scan_with_cache = spy
+        _res, _rep = eng.read("cf", q, hedge=True, consistency=ALL)
+        # ALL = every replica answers (3 scans) + one hedge duplicate
+        assert len(calls) == 4
+        assert set(calls) == {r.replica_id for r in eng.column_families["cf"].replicas}
+
+    def test_losing_hedge_keeps_primary_report(self):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=6)
+        eng = _engine(kc, vc, schema, result_cache=False)
+        q = Query({"k0": Eq(int(kc["k0"][2]))})
+        _, rep0 = eng.read("cf", q)
+        # primary just past the hedge threshold; every alternate is
+        # catastrophically slow, so the duplicate always loses
+        self._slow_all_but(eng, rep0.node_id, factor=1e6)
+        eng.nodes[rep0.node_id].slowdown = 3.0
+        res, rep = eng.read("cf", q, hedge=True)
+        oracle, _ = eng.read("cf", q)
+        assert res.value == oracle.value
+        assert rep.node_id == rep0.node_id  # the primary's answer stands
+        assert rep.hedged is False  # the losing hedge is not reported
+        assert rep.wall_seconds < 1e3  # not the 1e6-scaled hedge wall
+
+    def test_winning_hedge_reports_alternate(self):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=6)
+        eng = _engine(kc, vc, schema, result_cache=False)
+        q = Query({"k0": Eq(int(kc["k0"][3]))})
+        _, rep0 = eng.read("cf", q)
+        # the pick is hopeless, the alternates are healthy: the
+        # duplicate must win and the report must say so
+        eng.nodes[rep0.node_id].slowdown = 1e6
+        res, rep = eng.read("cf", q, hedge=True)
+        oracle, _ = eng.read("cf", q)
+        assert res.value == oracle.value
+        assert rep.hedged is True
+        assert rep.node_id != rep0.node_id
+
+
+class TestReadRetryLimitValidation:
+    def test_zero_and_negative_rejected_at_construction(self):
+        # regression: 0 used to slip through both retry loops as "zero
+        # attempts allowed", turning the first transient fault into an
+        # immediate unanswerable-query RuntimeError
+        for bad in (0, -1, -7):
+            with pytest.raises(ValueError, match="read_retry_limit"):
+                HREngine(n_nodes=3, read_retry_limit=bad)
+
+    def test_one_and_none_still_accepted(self):
+        assert HREngine(n_nodes=3, read_retry_limit=1).read_retry_limit == 1
+        assert HREngine(n_nodes=3, read_retry_limit=None).read_retry_limit is None
+
+
+class TestDeadlineBudgets:
+    def test_spent_budget_raises_typed_error(self):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=7)
+        eng = _engine(kc, vc, schema)
+        q = Query({"k0": Eq(int(kc["k0"][0]))})
+        for call in (
+            lambda: eng.read("cf", q, deadline_s=0.0),
+            lambda: eng.read_many("cf", [q], deadline_s=0.0),
+            lambda: eng.read("cf", q, consistency=QUORUM, deadline_s=0.0),
+            lambda: eng.read_many("cf", [q], consistency=ALL, deadline_s=-1.0),
+        ):
+            with pytest.raises(DeadlineExceeded):
+                call()
+
+    def test_deadline_is_not_a_transient_fault(self):
+        # failover must not swallow a deadline: a budget refusal is a
+        # terminal answer-shape, not a retryable replica fault
+        assert not issubclass(DeadlineExceeded, TransientFault)
+
+    def test_generous_budget_answers_normally(self):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=7)
+        eng = _engine(kc, vc, schema, partitions=2)
+        q = Query({"k0": Eq(int(kc["k0"][0]))})
+        plain, _ = eng.read("cf", q)
+        res, _ = eng.read("cf", q, deadline_s=60.0)
+        assert res.value == plain.value
+        many = eng.read_many("cf", [q] * 3, consistency=QUORUM, deadline_s=60.0)
+        assert [r.value for r, _ in many] == [plain.value] * 3

@@ -1,0 +1,312 @@
+"""Serving front door: continuous batching, admission control,
+deadlines, and the degradation ladder.
+
+The acceptance bar: (1) every request ends in exactly one explicit
+terminal state — ok / rejected / shed / deadline — and every ok answer
+equals the direct-engine oracle; (2) batches form by the continuous-
+batching rule (launch at ``max_batch`` or ``max_wait``, in-flight
+arrivals join the next batch); (3) each admission guard (queue bound,
+token bucket, bulkhead) rejects with RetryAfter instead of queuing
+without bound, and each ladder rung (hedge, degrade, shed, deadline)
+fires at its threshold and is counted in ``frontdoor.stats``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ALL, Eq, HREngine, ONE, QUORUM, Query
+from repro.core.tpch import generate_simulation
+from repro.ft.detector import LatencyEWMA
+from repro.serving.admission import Bulkhead, RetryAfter, TokenBucket
+from repro.serving.frontdoor import FrontDoor, Request
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def _engine(kc, vc, schema, *, partitions=1, rf=3, n_nodes=6, **kw):
+    kw.setdefault("result_cache", False)
+    eng = HREngine(n_nodes=n_nodes, **kw)
+    eng.create_column_family(
+        "cf", kc, vc, replication_factor=rf, layouts=LAYOUTS[:rf],
+        schema=schema, partitions=partitions,
+    )
+    return eng
+
+
+def _requests(rng, schema, n, *, spacing=0.0, **kw):
+    hi = schema.max_value("k0") + 1
+    return [
+        Request(
+            "cf",
+            Query({"k0": Eq(int(rng.integers(0, hi)))}),
+            arrival_s=i * spacing,
+            **kw,
+        )
+        for i in range(n)
+    ]
+
+
+def _accounted(fd, resps):
+    """Every submitted request reached exactly one terminal state."""
+    by = {s: sum(1 for r in resps if r.status == s) for s in
+          ("ok", "rejected", "shed", "deadline")}
+    s = fd.stats
+    assert by["ok"] == s["served_ok"]
+    assert by["rejected"] == (
+        s["rejected_throttle"] + s["rejected_bulkhead"] + s["rejected_queue_full"]
+    )
+    assert by["shed"] == s["shed_overload"]
+    assert by["deadline"] == s["shed_deadline"]
+    assert sum(by.values()) == len(resps) == s["submitted"]
+
+
+class TestAdmissionPrimitives:
+    def test_token_bucket_burst_then_rate(self):
+        tb = TokenBucket(rate=10.0, burst=3.0)
+        for _ in range(3):
+            tb.admit(0.0)
+        with pytest.raises(RetryAfter) as e:
+            tb.admit(0.0)
+        assert e.value.retry_after_s == pytest.approx(0.1)
+        tb.admit(0.1)  # one token refilled
+        with pytest.raises(RetryAfter):
+            tb.admit(0.1)
+
+    def test_token_bucket_clock_never_runs_backwards(self):
+        tb = TokenBucket(rate=1.0, burst=1.0)
+        tb.admit(10.0)
+        with pytest.raises(RetryAfter):
+            tb.admit(0.0)  # earlier time must not mint tokens
+
+    def test_bulkhead_isolates_compartments(self):
+        bh = Bulkhead(2, retry_after_s=0.5)
+        bh.acquire("hot")
+        bh.acquire("hot")
+        with pytest.raises(RetryAfter):
+            bh.acquire("hot")
+        bh.acquire("cold")  # other compartment unaffected
+        bh.release("hot")
+        bh.acquire("hot")
+        with pytest.raises(RuntimeError):
+            bh.release("absent")
+
+    def test_latency_ewma_tracks_mean_and_spread(self):
+        ew = LatencyEWMA(alpha=0.5)
+        assert ew.mean() == 0.0 and ew.count == 0
+        for x in (1.0, 1.0, 1.0):
+            ew.record(x)
+        assert ew.mean() == pytest.approx(1.0)
+        assert ew.deviation() == pytest.approx(0.0, abs=1e-12)
+        ew.record(3.0)
+        assert 1.0 < ew.mean() < 3.0
+        assert ew.deviation() > 0.0
+
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError):
+            TokenBucket(rate=0.0, burst=1.0)
+        with pytest.raises(ValueError):
+            Bulkhead(0, retry_after_s=1.0)
+        with pytest.raises(ValueError):
+            LatencyEWMA(alpha=0.0)
+        with pytest.raises(ValueError):
+            Request("cf", Query({}), consistency="MOST")
+        eng = object.__new__(HREngine)  # no engine needed to validate knobs
+        with pytest.raises(ValueError):
+            FrontDoor(eng, max_batch=0)
+        with pytest.raises(ValueError):
+            FrontDoor(eng, max_batch=8, max_queue=4)
+        with pytest.raises(ValueError):
+            FrontDoor(eng, shed_fill=0.0)
+
+
+class TestContinuousBatching:
+    def test_ok_answers_match_direct_engine(self, rng):
+        kc, vc, schema = generate_simulation(3_000, 3, seed=0)
+        eng = _engine(kc, vc, schema, partitions=4)
+        fd = FrontDoor(eng, max_batch=8, max_wait=1e-3, max_queue=64)
+        reqs = _requests(rng, schema, 30, spacing=2e-4)
+        resps = fd.serve(reqs)
+        assert all(r.ok for r in resps)
+        for req, r in zip(reqs, resps):
+            oracle, _ = eng.read("cf", req.query)
+            assert r.result.value == oracle.value
+        _accounted(fd, resps)
+
+    def test_batch_launches_when_full(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(eng, max_batch=4, max_wait=10.0, max_queue=64)
+        # all at t=0 with a huge max_wait: only the size trigger can
+        # launch, so 12 requests must form exactly 3 full batches
+        resps = fd.serve(_requests(rng, schema, 12))
+        assert all(r.ok for r in resps)
+        assert fd.stats["batches"] == 3
+        assert all(r.queue_wait_s < 10.0 for r in resps)
+
+    def test_batch_launches_on_max_wait_timer(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(eng, max_batch=64, max_wait=5e-3, max_queue=64)
+        # far fewer than max_batch: only the timer can launch
+        resps = fd.serve(_requests(rng, schema, 3))
+        assert all(r.ok for r in resps)
+        assert fd.stats["batches"] == 1
+        assert all(r.queue_wait_s == pytest.approx(5e-3) for r in resps)
+
+    def test_inflight_arrivals_join_next_batch(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(eng, max_batch=4, max_wait=1e-4, max_queue=64)
+        # burst fills batch 1 at t=0; the rest arrive while it is in
+        # flight (real scan walls >> 1us spacing) and must coalesce
+        # into later batches, never expand the in-flight one
+        reqs = _requests(rng, schema, 4) + _requests(rng, schema, 4, spacing=1e-6)
+        resps = fd.serve(reqs)
+        assert all(r.ok for r in resps)
+        assert 2 <= fd.stats["batches"] <= 3
+        _accounted(fd, resps)
+
+    def test_empty_input(self, rng):
+        kc, vc, schema = generate_simulation(500, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        assert FrontDoor(eng).serve([]) == []
+
+
+class TestAdmissionGuards:
+    def test_queue_bound_rejects_with_backpressure(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(eng, max_batch=4, max_wait=10.0, max_queue=8)
+        resps = fd.serve(_requests(rng, schema, 20))
+        s = fd.stats
+        assert s["rejected_queue_full"] > 0
+        assert s["max_queue_depth"] <= 8  # the bound really bounds
+        rejected = [r for r in resps if r.status == "rejected"]
+        assert all(r.retry_after_s > 0.0 for r in rejected)
+        _accounted(fd, resps)
+
+    def test_token_bucket_throttles_offered_rate(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(
+            eng, max_batch=4, max_wait=1e-3, max_queue=64,
+            rate=100.0, burst=2.0,
+        )
+        # 10 arrivals in 1ms >> 100/s: burst admits 2, the rest throttle
+        resps = fd.serve(_requests(rng, schema, 10, spacing=1e-4))
+        assert fd.stats["rejected_throttle"] == 10 - fd.stats["admitted"]
+        assert fd.stats["rejected_throttle"] >= 6
+        _accounted(fd, resps)
+
+    def test_bulkhead_keeps_hot_cf_from_starving_cold(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        kc2, vc2, schema2 = generate_simulation(1_000, 3, seed=1)
+        eng.create_column_family(
+            "cold", kc2, vc2, replication_factor=3, layouts=LAYOUTS,
+            schema=schema2, partitions=1,
+        )
+        fd = FrontDoor(
+            eng, max_batch=32, max_wait=10.0, max_queue=64,
+            bulkhead_inflight=3,
+        )
+        hot = _requests(rng, schema, 10)
+        cold = [
+            Request("cold", Query({"k0": Eq(int(rng.integers(0, 4)))}))
+            for _ in range(3)
+        ]
+        resps = fd.serve(hot + cold)
+        # the hot CF fills its own compartment and overflows...
+        assert fd.stats["rejected_bulkhead"] == 10 - 3
+        # ...while every cold-CF request keeps its slot
+        assert all(r.ok for r in resps[10:])
+        _accounted(fd, resps)
+
+
+class TestDegradationLadder:
+    def test_priority_shed_drops_lowest_first(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(
+            eng, max_batch=4, max_wait=10.0, max_queue=16, shed_fill=0.5,
+        )
+        # 0..15 all queued at t=0 (fill 16 > trigger 8): the shed rung
+        # must sacrifice exactly the low-priority tail, never the VIPs
+        reqs = _requests(rng, schema, 8, priority=1) + _requests(
+            rng, schema, 8, priority=0
+        )
+        resps = fd.serve(reqs)
+        assert fd.stats["shed_overload"] > 0
+        assert all(r.ok for r in resps[:8])  # every VIP answered
+        assert all(r.status == "shed" for r in resps if not r.ok)
+        _accounted(fd, resps)
+
+    def test_degrades_quorum_to_one_under_pressure_and_recovers(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(
+            eng, max_batch=4, max_wait=1e-6, max_queue=256,
+            degrade_wait_factor=1.0,
+        )
+        # a t=0 burst makes every post-first batch's oldest wait exceed
+        # degrade_after (scan walls >> 1us), then a lone late straggler
+        # arrives against an empty queue and must be served undegraded
+        burst = _requests(rng, schema, 24, consistency=QUORUM)
+        late = _requests(rng, schema, 1, consistency=QUORUM)[0]
+        late = Request(
+            late.cf_name, late.query, arrival_s=1e9, consistency=QUORUM
+        )
+        resps = fd.serve(burst + [late])
+        s = fd.stats
+        assert s["consistency_degraded"] > 0
+        assert s["degraded_batches"] > 0
+        assert s["degrade_recoveries"] >= 1  # the ladder stepped back down
+        degraded = [r for r in resps[:-1] if r.degraded]
+        assert degraded and all(
+            r.consistency_used == ONE and r.ok for r in degraded
+        )
+        assert resps[-1].ok and not resps[-1].degraded
+        assert resps[-1].consistency_used == QUORUM
+        _accounted(fd, resps)
+
+    def test_hedges_fire_from_queue_wait_ewma(self, rng):
+        kc, vc, schema = generate_simulation(2_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(
+            eng, max_batch=4, max_wait=1e-6, max_queue=256,
+            hedge_wait_factor=1.0, ewma_warmup=4,
+        )
+        resps = fd.serve(_requests(rng, schema, 32))
+        # sustained queue wait >> max_wait: once the EWMA warms up the
+        # hedge rung must engage (batches 1..warmup can't hedge yet)
+        assert fd.stats["hedged_batches"] > 0
+        assert all(r.ok for r in resps)
+        _accounted(fd, resps)
+
+    def test_spent_deadline_sheds_explicitly(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(eng, max_batch=8, max_wait=1e-3, max_queue=64)
+        reqs = _requests(rng, schema, 4, deadline_s=1e-12) + _requests(
+            rng, schema, 4, deadline_s=1e3
+        )
+        resps = fd.serve(reqs)
+        # an un-meetable budget is a typed refusal, not a slow answer
+        assert all(r.status == "deadline" for r in resps[:4])
+        assert all("deadline" in r.error for r in resps[:4])
+        assert all(r.ok for r in resps[4:])
+        assert fd.stats["shed_deadline"] == 4
+        _accounted(fd, resps)
+
+    def test_timeline_callbacks_fire_in_virtual_time(self, rng):
+        kc, vc, schema = generate_simulation(1_000, 3, seed=0)
+        eng = _engine(kc, vc, schema)
+        fd = FrontDoor(eng, max_batch=2, max_wait=1e-3, max_queue=64)
+        fired: list[float] = []
+        reqs = _requests(rng, schema, 4, spacing=1.0)  # t = 0, 1, 2, 3
+        resps = fd.serve(
+            reqs, timeline=[(2.5, lambda: fired.append(2.5)),
+                            (0.5, lambda: fired.append(0.5))],
+        )
+        assert fired == [0.5, 2.5]  # sorted, each exactly once
+        assert all(r.ok for r in resps)
