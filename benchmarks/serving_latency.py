@@ -23,6 +23,17 @@ Three sections:
   better) and the per-load ``*_p99_us`` (lower is better) feed
   ``scripts/bench_gate.py``; shed/degrade/ok rates ride along as
   descriptive keys.
+
+A third interleaved passthrough leg runs with a live
+:class:`~repro.obs.trace.Tracer` attached: ``trace_overhead`` is the
+median within-pair traced/untraced wall ratio minus one (the price of
+recording every span), gated absolutely by ``scripts/bench_gate.py``;
+``stage_breakdown`` is the trace-derived per-stage wall table
+(``repro.obs.export.stage_totals`` over the final traced run) and
+rides along un-gated. The *untraced* leg exercises the tracing-off
+fast path (``trace is None`` no-ops), so the ``passthrough_qps`` gate
+against the recorded baseline is what enforces the
+instrumentation-off budget.
 """
 
 from __future__ import annotations
@@ -33,6 +44,7 @@ import numpy as np
 
 from repro.core import HREngine, QUORUM, random_workload
 from repro.core.tpch import generate_simulation
+from repro.obs import Tracer, stage_totals
 from repro.serving.frontdoor import FrontDoor, Request
 
 from .common import record
@@ -92,23 +104,36 @@ def run(
 
     pass_reqs = [Request(_CF, q) for q in queries]
 
-    def passthrough():
-        fd = FrontDoor(
-            eng, max_batch=batch, max_wait=1e-3,
-            max_queue=n_requests, shed_fill=1.0,
-        )
+    # one front door per flavor, reused across repeats with a registry
+    # reset between runs (the reset_stats() contract) so allocation
+    # stays out of the timed region; the traced door records every
+    # request into fresh span trees per repeat
+    fd_plain = FrontDoor(
+        eng, max_batch=batch, max_wait=1e-3,
+        max_queue=n_requests, shed_fill=1.0,
+    )
+    tracer = Tracer()
+    fd_traced = FrontDoor(
+        eng, max_batch=batch, max_wait=1e-3,
+        max_queue=n_requests, shed_fill=1.0, tracer=tracer,
+    )
+
+    def passthrough(fd):
+        fd.reset_stats()
         t0 = time.perf_counter()
         resps = fd.serve(pass_reqs)
         wall = time.perf_counter() - t0
         assert all(r.ok for r in resps)
         return wall
 
-    ts_direct, ts_pass = [], []
+    ts_direct, ts_pass, ts_traced = [], [], []
     for _ in range(repeats):
         t0 = time.perf_counter()
         direct()
         ts_direct.append(time.perf_counter() - t0)
-        ts_pass.append(passthrough())
+        ts_pass.append(passthrough(fd_plain))
+        tracer.clear()
+        ts_traced.append(passthrough(fd_traced))
     agg = min if best else (lambda xs: float(np.median(xs)))
     t_direct, t_pass = agg(ts_direct), agg(ts_pass)
     direct_qps = n_requests / max(t_direct, 1e-12)
@@ -129,6 +154,24 @@ def run(
         "serving/frontdoor_passthrough", t_pass * 1e6,
         f"{pass_qps:,.0f} q/s (overhead {overhead * 100:+.1f}%)",
     )
+    # instrumentation tax: traced vs untraced passthrough, within-pair
+    # ratios for the same drift-cancellation reason as above
+    t_traced = agg(ts_traced)
+    trace_overhead = float(
+        np.median([t / max(p, 1e-12) for t, p in zip(ts_traced, ts_pass)])
+    ) - 1.0
+    out["trace_overhead"] = trace_overhead
+    record(
+        "serving/frontdoor_traced", t_traced * 1e6,
+        f"{n_requests / max(t_traced, 1e-12):,.0f} q/s "
+        f"(trace overhead {trace_overhead * 100:+.1f}%)",
+    )
+    # per-stage wall breakdown from the final traced run (descriptive,
+    # un-gated): where a request's time actually goes
+    out["stage_breakdown"] = {
+        name: {"count": int(row["count"]), "total_s": float(row["total"])}
+        for name, row in stage_totals(tracer.roots).items()
+    }
 
     # -- open-loop sweep: Poisson arrivals at fractions of capacity ---------
     # each sweep's queue buildup depends on the ratio of the engine's

@@ -23,6 +23,18 @@ Prints client-observed p50/p99 (queue wait included) and the refusal
 breakdown against the closed-loop ``read_many`` capacity:
 
     PYTHONPATH=src python examples/serve_batch.py --frontdoor --load 2
+
+``--trace`` attaches a :class:`repro.obs.Tracer` to the front door:
+every request grows a ``frontdoor.request`` span tree (admission →
+queue → service, with the engine's plan/scan/digest subtree below),
+and the demo prints the per-stage wall breakdown plus the slowest
+request's full tree — where an overloaded request's time actually
+went. ``--trace-out out.jsonl`` additionally dumps the K slowest
+trees as JSON-lines for the offline report CLI:
+
+    PYTHONPATH=src python examples/serve_batch.py --frontdoor --trace \\
+        --trace-out /tmp/serve.jsonl
+    PYTHONPATH=src python -m repro.obs /tmp/serve.jsonl
 """
 
 import argparse
@@ -128,7 +140,15 @@ def run_frontdoor(args) -> None:
         )
         for i, q in enumerate(queries)
     ]
-    fd = FrontDoor(eng, max_batch=args.batch, max_wait=2e-3, max_queue=256)
+    tracer = None
+    if args.trace or args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
+    fd = FrontDoor(
+        eng, max_batch=args.batch, max_wait=2e-3, max_queue=256,
+        tracer=tracer,
+    )
     resps = fd.serve(reqs)
     s = fd.stats
 
@@ -147,6 +167,23 @@ def run_frontdoor(args) -> None:
           f"hedged_batches={s['hedged_batches']} "
           f"degrade_recoveries={s['degrade_recoveries']}")
     print(f"batches={s['batches']} max_queue_depth={s['max_queue_depth']}")
+
+    if tracer is not None:
+        from repro.obs import dump_jsonl, format_tree, stage_totals
+
+        print("\nper-stage wall breakdown (all request trees):")
+        for name, row in stage_totals(tracer.roots).items():
+            print(f"  {name:<22} n={row['count']:>5}  "
+                  f"total={row['total'] * 1e3:>10,.2f} ms")
+        slowest = fd.slow_log.entries()
+        if slowest:
+            lat, tree = slowest[0]
+            print(f"\nslowest request ({lat * 1e3:.2f} ms):")
+            print(format_tree(tree, unit="ms"))
+        if args.trace_out:
+            n = dump_jsonl(slowest, args.trace_out)
+            print(f"\nwrote {n} slowest span trees to {args.trace_out} "
+                  f"(render with: python -m repro.obs {args.trace_out})")
 
 
 def main() -> None:
@@ -168,6 +205,12 @@ def main() -> None:
                     help="offered load as a multiple of closed-loop capacity")
     ap.add_argument("--deadline", type=float, default=50.0,
                     help="per-request deadline in ms (--frontdoor)")
+    ap.add_argument("--trace", action="store_true",
+                    help="trace every request through the front door and "
+                         "print the stage breakdown + slowest tree")
+    ap.add_argument("--trace-out", default=None, metavar="OUT.jsonl",
+                    help="dump the slowest span trees as JSON-lines "
+                         "(implies tracing; render with python -m repro.obs)")
     args = ap.parse_args()
     if args.batch is None:
         args.batch = 64 if (args.hr or args.frontdoor) else 4

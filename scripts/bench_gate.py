@@ -22,6 +22,14 @@ LOWER-is-better: a p99 more than 2x ``--tol`` above baseline fails
 worth catching inflate them 5-10x); shed/degrade/ok rates stay
 descriptive).
 
+Besides the baseline comparison, one *absolute* guard runs every time:
+the serving benchmark's ``trace_overhead`` (traced vs untraced
+front-door passthrough, median within-pair ratio minus one) must stay
+under ``--trace-tol`` (default 0.35, env ``BENCH_GATE_TRACE_TOL``) —
+an instrumentation change that makes tracing itself expensive (a span
+per row, an eager attr render) fails here even on a machine with no
+recorded baseline.
+
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json
     python scripts/bench_gate.py SMOKE.json BENCH_batched_read.json --update
 
@@ -74,6 +82,13 @@ def main() -> int:
         help="max allowed fractional regression (default 0.30)",
     )
     ap.add_argument(
+        "--trace-tol",
+        type=float,
+        default=float(os.environ.get("BENCH_GATE_TRACE_TOL", 0.35)),
+        help="max allowed traced-vs-untraced passthrough overhead "
+        "(absolute guard, default 0.35)",
+    )
+    ap.add_argument(
         "--update", action="store_true",
         help="write the smoke numbers into the baseline instead of gating",
     )
@@ -81,6 +96,24 @@ def main() -> int:
 
     with open(args.smoke_json) as f:
         smoke = json.load(f)
+
+    # absolute instrumentation-overhead guard (independent of any
+    # baseline): recording spans must stay a modest tax on the
+    # passthrough path, or the observability layer is lying about
+    # being cheap enough to leave on
+    trace_overhead = smoke.get("serving", {}).get("trace_overhead")
+    if trace_overhead is not None:
+        print(
+            f"[bench-gate] trace overhead {trace_overhead * 100:+.1f}% "
+            f"(limit {args.trace_tol * 100:.0f}%)"
+        )
+        if trace_overhead > args.trace_tol:
+            print(
+                "[bench-gate] REGRESSION: tracing costs "
+                f"{trace_overhead * 100:.0f}% over the untraced front door "
+                f"(> {args.trace_tol * 100:.0f}%)"
+            )
+            return 1
     # reads AND writes/recovery are gated: *_qps from the batched-read
     # section, *_rows_per_sec from the write-queue drain and the two
     # recovery paths. (thread_overlap_speedup and the copy/resort ratios

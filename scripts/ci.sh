@@ -14,15 +14,24 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 python -m pytest -x -q "$@"
 
 # seeded chaos smoke: crash/torn-tail/corruption/slow-node schedules
-# must leave reads identical to the no-fault oracle (repro/ft/chaos.py)
-python -m repro.ft.chaos --seeds 3 --steps 25
+# must leave reads identical to the no-fault oracle (repro/ft/chaos.py).
+# The run is traced: --trace dumps one TickClock span tree per QUORUM
+# probe and fails on an empty or malformed dump, and the report CLI
+# must parse it (exit nonzero on malformed JSON-lines / empty log)
+chaos_trace="$(mktemp --suffix=.jsonl)"
+overload_trace="$(mktemp --suffix=.jsonl)"
+trap 'rm -f "$chaos_trace" "$overload_trace"' EXIT
+python -m repro.ft.chaos --seeds 3 --steps 25 --trace "$chaos_trace"
+python -m repro.obs "$chaos_trace" --unit ticks --top 1 > /dev/null
 
 # front-door overload smoke: a seeded Poisson burst + slow-drain run
 # where every request must answer identically to the oracle or be
-# explicitly shed/rejected (the shed-or-exact property)
-python -m repro.ft.chaos --overload --seeds 2
+# explicitly shed/rejected (the shed-or-exact property); traced the
+# same way — the slow-query log must come back non-empty and parseable
+python -m repro.ft.chaos --overload --seeds 2 --trace "$overload_trace"
+python -m repro.obs "$overload_trace" --top 1 > /dev/null
 
 smoke_json="$(mktemp)"
-trap 'rm -f "$smoke_json"' EXIT
+trap 'rm -f "$smoke_json" "$chaos_trace" "$overload_trace"' EXIT
 python -m benchmarks.run --smoke --json "$smoke_json"
 python scripts/bench_gate.py "$smoke_json" BENCH_batched_read.json

@@ -160,6 +160,7 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+from ..obs import MetricsRegistry
 from .cost_model import (
     CostModel,
     LinearCostFunction,
@@ -191,6 +192,9 @@ __all__ = [
     "TransientFlushError",
     "CorruptRunError",
     "DeadlineExceeded",
+    "ENGINE_COUNTERS",
+    "FAULT_COUNTERS",
+    "REPAIR_COUNTERS",
 ]
 
 #: Tunable read consistency levels (Cassandra's CL, read side): how
@@ -245,6 +249,58 @@ class DeadlineExceeded(RuntimeError):
         self.budget_s = budget_s
 
 
+#: Registry counters every engine registers at construction, in the
+#: names the ``stats`` dict view exposes them under. The counter-
+#: coverage audit (tests/test_obs.py) walks this inventory against
+#: ``HREngine.metrics.catalog()`` — a counter added to the engine but
+#: not listed here (or vice versa) fails the audit.
+ENGINE_COUNTERS = (
+    "result_cache_hits",
+    "result_cache_misses",
+    "commitlog_auto_checkpoints",
+    "memtable_flushes",
+    "compactions",
+    "partition_splits",
+    "partition_merges",
+    "rebalance_rows_moved",
+    "empty_partition_skips",
+    "hints_queued",
+    "hint_replays",
+    "hint_rows_replayed",
+    "hint_fallbacks",
+    "digest_mismatches",
+    "read_repairs",
+    "read_retries",
+    "scrub_checks",
+    "scrub_repairs",
+    "deadline_exceeded",
+    "read_faults",
+    "flush_faults",
+    "corrupt_runs",
+    "flush_wall_seconds",
+)
+
+#: Typed refusal/fault → the registry counter that records it. Every
+#: exception type the engine raises (or survives via failover) must
+#: appear here; the audit test raises each one and asserts its counter
+#: moved.
+FAULT_COUNTERS: dict[str, str] = {
+    "DeadlineExceeded": "deadline_exceeded",
+    "TransientReadError": "read_faults",
+    "TransientFlushError": "flush_faults",
+    "CorruptRunError": "corrupt_runs",
+}
+
+#: Repair paths named by the PR-9 audit satellite: each must increment
+#: its registry counter whenever the path runs.
+REPAIR_COUNTERS = (
+    "hint_replays",
+    "hint_fallbacks",
+    "read_repairs",
+    "scrub_repairs",
+)
+
+
 def _deadline_at(deadline_s: float | None) -> float | None:
     """Absolute ``perf_counter`` cutoff for a per-call latency budget
     (None = unbounded). A zero/negative budget yields an already-spent
@@ -252,15 +308,6 @@ def _deadline_at(deadline_s: float | None) -> float | None:
     if deadline_s is None:
         return None
     return time.perf_counter() + deadline_s
-
-
-def _check_deadline(deadline_at: float | None, budget_s: float | None) -> None:
-    """Raise :class:`DeadlineExceeded` once the budget is spent. Called
-    before each unit of *required* work (a replica-group scan, a
-    failover retry, a digest read); optional work (hedges) is skipped
-    instead of raising — the primary answer stands."""
-    if deadline_at is not None and time.perf_counter() >= deadline_at:
-        raise DeadlineExceeded(budget_s)
 
 
 def _deadline_spent(deadline_at: float | None) -> bool:
@@ -489,6 +536,8 @@ class HREngine:
         failure_detector=None,
         checksums: bool = True,
         read_retry_limit: int | None = None,
+        metrics: MetricsRegistry | None = None,
+        scan_timer=None,
     ) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
@@ -508,8 +557,15 @@ class HREngine:
         self.column_families: dict[str, ColumnFamily] = {}
         self._cache_enabled = result_cache
         self._cache_max = result_cache_max_entries
-        self._cache_hits = 0
-        self._cache_misses = 0
+        # operational counters live on the metrics registry (repro.obs);
+        # the legacy ``stats`` dict is a read-through view and
+        # ``reset_stats()`` is one registry reset. The handles bound
+        # below keep the hot-path cost at one attribute load + float add.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        for _name in ENGINE_COUNTERS:
+            self.metrics.counter(_name)
+        self._cache_hits = self.metrics.counter("result_cache_hits")
+        self._cache_misses = self.metrics.counter("result_cache_misses")
         self._result_cache: dict[tuple[str, int], dict] = {}
         # running total of selected-array bytes per replica map, so the
         # byte budget doesn't rescan the map on every store
@@ -538,6 +594,13 @@ class HREngine:
         # attempt per live replica)
         self.failure_detector = failure_detector
         self.checksums = bool(checksums)
+        # scan-wall clock: the walls fed to the failure detector (and
+        # attributed to ReadReports) come from this zero-arg callable.
+        # ``time.perf_counter`` by default; a deterministic counter
+        # (e.g. repro.obs.TickClock) makes detector state — and hence
+        # replica routing — a pure function of the operation sequence,
+        # which the chaos byte-identical-trace property requires
+        self._scan_timer = scan_timer if scan_timer is not None else time.perf_counter
         # the limit counts ATTEMPTS (first try included), so anything
         # below 1 is nonsense: 0 used to slip through both retry loops
         # as "zero attempts allowed", turning the first transient fault
@@ -549,27 +612,33 @@ class HREngine:
                 f"{read_retry_limit}"
             )
         self.read_retry_limit = read_retry_limit
-        self._hints_queued = 0
-        self._hint_replays = 0
-        self._hint_rows_replayed = 0
-        self._hint_fallbacks = 0
-        self._digest_mismatches = 0
-        self._read_repairs = 0
-        self._read_retries = 0
-        self._scrub_checks = 0
-        self._scrub_repairs = 0
-        self._flushes = 0
-        self._compactions = 0
-        self._auto_checkpoints = 0
+        self._hints_queued = self.metrics.counter("hints_queued")
+        self._hint_replays = self.metrics.counter("hint_replays")
+        self._hint_rows_replayed = self.metrics.counter("hint_rows_replayed")
+        self._hint_fallbacks = self.metrics.counter("hint_fallbacks")
+        self._digest_mismatches = self.metrics.counter("digest_mismatches")
+        self._read_repairs = self.metrics.counter("read_repairs")
+        self._read_retries = self.metrics.counter("read_retries")
+        self._scrub_checks = self.metrics.counter("scrub_checks")
+        self._scrub_repairs = self.metrics.counter("scrub_repairs")
+        self._flushes = self.metrics.counter("memtable_flushes")
+        self._compactions = self.metrics.counter("compactions")
+        self._auto_checkpoints = self.metrics.counter("commitlog_auto_checkpoints")
         # migration observability (satellite counters)
-        self._partition_splits = 0
-        self._partition_merges = 0
-        self._rebalance_rows_moved = 0
-        self._empty_partition_skips = 0
+        self._partition_splits = self.metrics.counter("partition_splits")
+        self._partition_merges = self.metrics.counter("partition_merges")
+        self._rebalance_rows_moved = self.metrics.counter("rebalance_rows_moved")
+        self._empty_partition_skips = self.metrics.counter("empty_partition_skips")
+        # typed refusals/faults (FAULT_COUNTERS): raised-or-survived
+        # exceptions, each visible in the registry at the raise site
+        self._deadline_exceeded = self.metrics.counter("deadline_exceeded")
+        self._read_faults = self.metrics.counter("read_faults")
+        self._flush_faults = self.metrics.counter("flush_faults")
+        self._corrupt_runs = self.metrics.counter("corrupt_runs")
         # cumulative seconds spent in memtable flushes (incl. the ones
         # a read barrier triggers, which are write-path cost and NOT
         # attributed to any ReadReport.wall_seconds)
-        self._flush_wall = 0.0
+        self._flush_wall = self.metrics.counter("flush_wall_seconds")
         self._pool: ThreadPoolExecutor | None = None
 
     @property
@@ -594,11 +663,17 @@ class HREngine:
     def stats(self) -> dict:
         """Operational counters: per-replica read result cache plus the
         durable write path (log records/rows, currently staged rows,
-        memtable flushes and automatic compactions)."""
+        memtable flushes and automatic compactions).
+
+        A read-through view: counter-backed keys come from
+        :attr:`metrics` (see ``ENGINE_COUNTERS``), structural keys
+        (log records, staged rows, open hints, cache occupancy) are
+        computed live from the storage structures they describe —
+        they are state, not events, so ``reset_stats`` leaves them."""
         parts = [p for cf in self.column_families.values() for p in cf.partitions]
         return {
-            "result_cache_hits": self._cache_hits,
-            "result_cache_misses": self._cache_misses,
+            "result_cache_hits": int(self._cache_hits.value),
+            "result_cache_misses": int(self._cache_misses.value),
             "result_cache_entries": sum(
                 len(c) for c in self._result_cache.values()
             ),
@@ -610,42 +685,67 @@ class HREngine:
             "commitlog_rows": sum(
                 p.commitlog.n_rows for p in parts if p.commitlog is not None
             ),
-            "commitlog_auto_checkpoints": self._auto_checkpoints,
+            "commitlog_auto_checkpoints": int(self._auto_checkpoints.value),
             "staged_rows": sum(
                 mt.n_staged for p in parts for mt in p.memtables.values()
             ),
-            "memtable_flushes": self._flushes,
-            "compactions": self._compactions,
+            "memtable_flushes": int(self._flushes.value),
+            "compactions": int(self._compactions.value),
             # ring-migration observability: boundary insertions/removals
             # and the rows whose partition ownership a migration rebuilt
-            "partition_splits": self._partition_splits,
-            "partition_merges": self._partition_merges,
-            "rebalance_rows_moved": self._rebalance_rows_moved,
+            "partition_splits": int(self._partition_splits.value),
+            "partition_merges": int(self._partition_merges.value),
+            "rebalance_rows_moved": int(self._rebalance_rows_moved.value),
             # (partition, query) launches the scatter path skipped
             # because the partition provably held no rows in the slab
-            "empty_partition_skips": self._empty_partition_skips,
+            "empty_partition_skips": int(self._empty_partition_skips.value),
             # availability layer: writes that accrued a hint for a
             # transiently-down replica; node-up heals served from the
             # hinted tail vs. full-rebuild fallbacks; digest reads;
             # failover retries; scrub activity
             "hints_open": sum(len(p.hints) for p in parts),
-            "hints_queued": self._hints_queued,
-            "hint_replays": self._hint_replays,
-            "hint_rows_replayed": self._hint_rows_replayed,
-            "hint_fallbacks": self._hint_fallbacks,
-            "digest_mismatches": self._digest_mismatches,
-            "read_repairs": self._read_repairs,
-            "read_retries": self._read_retries,
-            "scrub_checks": self._scrub_checks,
-            "scrub_repairs": self._scrub_repairs,
+            "hints_queued": int(self._hints_queued.value),
+            "hint_replays": int(self._hint_replays.value),
+            "hint_rows_replayed": int(self._hint_rows_replayed.value),
+            "hint_fallbacks": int(self._hint_fallbacks.value),
+            "digest_mismatches": int(self._digest_mismatches.value),
+            "read_repairs": int(self._read_repairs.value),
+            "read_retries": int(self._read_retries.value),
+            "scrub_checks": int(self._scrub_checks.value),
+            "scrub_repairs": int(self._scrub_repairs.value),
+            # typed refusals and faults survived via failover
+            # (FAULT_COUNTERS)
+            "deadline_exceeded": int(self._deadline_exceeded.value),
+            "read_faults": int(self._read_faults.value),
+            "flush_faults": int(self._flush_faults.value),
+            "corrupt_runs": int(self._corrupt_runs.value),
             # cumulative wall of ALL flushes. Flushes inside write()
             # (write-through or threshold-crossing) also count toward
             # that write's returned wall — don't sum the two. The
             # counter exists because read-barrier flushes appear in
             # neither write()'s return nor any ReadReport.wall_seconds;
             # here is the only place that time is visible
-            "flush_wall_seconds": self._flush_wall,
+            "flush_wall_seconds": self._flush_wall.value,
         }
+
+    def reset_stats(self) -> None:
+        """Zero every registry-backed counter in place (benchmarks used
+        to re-construct engines just to get clean counters). Structural
+        ``stats`` keys — log records, staged rows, open hints, cache
+        occupancy — describe live state and are untouched."""
+        self.metrics.reset()
+
+    def _check_deadline(
+        self, deadline_at: float | None, budget_s: float | None
+    ) -> None:
+        """Raise :class:`DeadlineExceeded` once the budget is spent.
+        Called before each unit of *required* work (a replica-group
+        scan, a failover retry, a digest read); optional work (hedges)
+        is skipped instead of raising — the primary answer stands.
+        Every raise is visible as the ``deadline_exceeded`` counter."""
+        if deadline_at is not None and time.perf_counter() >= deadline_at:
+            self._deadline_exceeded.inc()
+            raise DeadlineExceeded(budget_s)
 
     @staticmethod
     def _cache_keys(queries: list[Query]) -> list:
@@ -991,6 +1091,7 @@ class HREngine:
         hedge_ratio: float = 2.0,
         consistency: str = ONE,
         deadline_s: float | None = None,
+        trace=None,
     ) -> tuple[ScanResult, ReadReport]:
         """Route to the cheapest live replica; ties broken round-robin
         (load balance). With ``hedge=True`` a read landing on a straggler
@@ -1016,6 +1117,12 @@ class HREngine:
         ``read_many`` at Q = 1 (parity-tested) at a fraction of the
         per-call planning cost. Partitioned CFs and higher consistency
         levels delegate to the batched planner at Q = 1.
+
+        ``trace`` (an open :class:`repro.obs.Span`, or None) hangs this
+        call's span subtree under the caller's — ``engine.read`` for
+        the scalar fast path (see the taxonomy in
+        :mod:`repro.obs.trace`). Tracing disabled (None) costs one
+        ``is None`` test per stage.
         """
         if consistency not in CONSISTENCY_LEVELS:
             raise ValueError(
@@ -1031,64 +1138,95 @@ class HREngine:
                 hedge_ratio=hedge_ratio,
                 consistency=consistency,
                 deadline_s=deadline_s,
+                trace=trace,
             )[0]
         deadline = _deadline_at(deadline_s)
-        _check_deadline(deadline, deadline_s)
-        ranked = self._ranked_replicas(cf, query)
-        best_cost = ranked[0][0]
-        ties = [t for t in ranked if t[0] <= _tie_threshold(best_cost)]
-        entry = ties[next(cf.rr_counter) % len(ties)]
+        self._check_deadline(deadline, deadline_s)
+        span = (
+            trace.child("engine.read", cf=cf_name, level=consistency)
+            if trace is not None
+            else None
+        )
+        try:
+            ranked = self._ranked_replicas(cf, query)
+            best_cost = ranked[0][0]
+            ties = [t for t in ranked if t[0] <= _tie_threshold(best_cost)]
+            entry = ties[next(cf.rr_counter) % len(ties)]
 
-        # same failover semantics as _run_groups: a transient fault
-        # advances to the next-ranked untried replica, bounded by the
-        # live count (or read_retry_limit)
-        limit = len(ranked) if self.read_retry_limit is None else self.read_retry_limit
-        tried: set[int] = set()
-        while True:
-            tried.add(entry[2].replica_id)
-            try:
-                result, report = self._execute_scalar(cf, entry, query, hedged=False)
-                break
-            except TransientFault:
-                self._read_retries += 1
-                _check_deadline(deadline, deadline_s)
-                entry = next(
-                    (t for t in ranked if t[2].replica_id not in tried), None
-                )
-                if entry is None or len(tried) >= limit:
-                    raise RuntimeError(
-                        f"no live replica answered query 0 of {cf.name!r} "
-                        f"after {len(tried)} attempts"
-                    ) from None
-
-        if (
-            hedge
-            and len(ranked) > 1
-            and self.nodes[report.node_id].slowdown > hedge_ratio
-            and not _deadline_spent(deadline)  # hedging is optional work
-        ):
-            alt = next(
-                (t for t in ranked if t[2].node_id != report.node_id), None
-            )
-            if alt is not None:
+            # same failover semantics as _run_groups: a transient fault
+            # advances to the next-ranked untried replica, bounded by the
+            # live count (or read_retry_limit)
+            limit = len(ranked) if self.read_retry_limit is None else self.read_retry_limit
+            tried: set[int] = set()
+            while True:
+                tried.add(entry[2].replica_id)
                 try:
-                    r2, rep2 = self._execute_scalar(cf, alt, query, hedged=True)
+                    result, report = self._execute_scalar(
+                        cf, entry, query, hedged=False, trace=span,
+                        retry=bool(tried - {entry[2].replica_id}),
+                    )
+                    break
                 except TransientFault:
-                    pass  # best-effort duplicate; the primary stands
-                else:
-                    # ties go to the hedge — cache hits serve at zero
-                    # attributed wall on both sides (see _execute_group)
-                    if rep2.wall_seconds <= report.wall_seconds:
-                        return r2, rep2
-        return result, report
+                    self._read_retries.inc()
+                    self._check_deadline(deadline, deadline_s)
+                    entry = next(
+                        (t for t in ranked if t[2].replica_id not in tried), None
+                    )
+                    if entry is None or len(tried) >= limit:
+                        raise RuntimeError(
+                            f"no live replica answered query 0 of {cf.name!r} "
+                            f"after {len(tried)} attempts"
+                        ) from None
+
+            if (
+                hedge
+                and len(ranked) > 1
+                and self.nodes[report.node_id].slowdown > hedge_ratio
+                and not _deadline_spent(deadline)  # hedging is optional work
+            ):
+                alt = next(
+                    (t for t in ranked if t[2].node_id != report.node_id), None
+                )
+                if alt is not None:
+                    try:
+                        r2, rep2 = self._execute_scalar(
+                            cf, alt, query, hedged=True, trace=span
+                        )
+                    except TransientFault:
+                        pass  # best-effort duplicate; the primary stands
+                    else:
+                        # ties go to the hedge — cache hits serve at zero
+                        # attributed wall on both sides (see _execute_group)
+                        if rep2.wall_seconds <= report.wall_seconds:
+                            return r2, rep2
+            return result, report
+        finally:
+            if span is not None:
+                span.end()
 
     def _execute_scalar(
-        self, cf: ColumnFamily, entry: _Ranked, query: Query, *, hedged: bool
+        self, cf: ColumnFamily, entry: _Ranked, query: Query, *,
+        hedged: bool, trace=None, retry: bool = False,
     ) -> tuple[ScanResult, ReadReport]:
         """Execute one query on one replica through the shared
         cache/fault/detector path (``_scan_with_cache``)."""
         est_cost, est_rows, r = entry
-        scans, walls = self._scan_with_cache(cf, r, [query])
+        g = (
+            trace.child(
+                "engine.group_scan", replica=r.replica_id, node=r.node_id,
+                queries=1, hedged=hedged, retry=retry,
+            )
+            if trace is not None
+            else None
+        )
+        try:
+            scans, walls = self._scan_with_cache(cf, r, [query], trace=g)
+        except TransientFault as e:
+            if g is not None:
+                g.end(error=type(e).__name__)
+            raise
+        if g is not None:
+            g.end(rows=int(scans[0].rows_scanned))
         return scans[0], ReadReport(
             replica_id=r.replica_id,
             node_id=r.node_id,
@@ -1108,6 +1246,7 @@ class HREngine:
         hedge_ratio: float = 2.0,
         consistency: str = ONE,
         deadline_s: float | None = None,
+        trace=None,
     ) -> list[tuple[ScanResult, ReadReport]]:
         """Batched ``read``: one scheduler pass and one grouped storage
         scan for the whole batch (see module docstring for semantics).
@@ -1125,6 +1264,13 @@ class HREngine:
         spent, while optional work (hedge duplicates) is silently
         skipped — the call either answers within budget or fails
         loudly, never silently slow.
+
+        ``trace`` (an open :class:`repro.obs.Span`, or None) hangs an
+        ``engine.read_many`` subtree — planning, per-(partition,
+        replica) group scans down to the kernel launches, digest pass,
+        gather — under the caller's span; see the stage taxonomy in
+        :mod:`repro.obs.trace`. ``None`` (default) keeps the hot path
+        untraced at the cost of one ``is None`` test per stage.
         """
         if consistency not in CONSISTENCY_LEVELS:
             raise ValueError(
@@ -1136,77 +1282,94 @@ class HREngine:
         if not queries:
             return []
         deadline = _deadline_at(deadline_s)
-        _check_deadline(deadline, deadline_s)
-        if cf.ring.n_partitions > 1:
-            return self._read_many_partitioned(
-                cf,
-                queries,
-                hedge=hedge,
-                hedge_ratio=hedge_ratio,
-                consistency=consistency,
-                deadline_at=deadline,
-                budget_s=deadline_s,
+        self._check_deadline(deadline, deadline_s)
+        span = (
+            trace.child(
+                "engine.read_many", cf=cf_name, queries=len(queries),
+                level=consistency,
             )
-        live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
-        if not live:
-            raise RuntimeError(f"no live replica for {cf_name!r}")
-        n_q = len(queries)
-
-        # vectorized Cost Evaluator: Eq (1)-(2) over all (replica, query);
-        # per-column selectivities are extracted once and shared by all
-        # replica layouts
-        pre = precompute_query_stats(cf.stats, queries, cf.key_names)
-        rows_mat = np.stack(
-            [estimate_rows_many(cf.stats, r.layout, queries, pre) for r in live]
+            if trace is not None
+            else None
         )
-        cost_mat = np.stack(
-            [
-                cf.cost_model.cost_fn(len(r.layout)).many(rows_mat[k])
-                for k, r in enumerate(live)
-            ]
-        )
-        factors = self._live_cost_factors(live)
-        if factors is not None:
-            cost_mat = cost_mat * factors[:, None]
+        try:
+            if cf.ring.n_partitions > 1:
+                return self._read_many_partitioned(
+                    cf,
+                    queries,
+                    hedge=hedge,
+                    hedge_ratio=hedge_ratio,
+                    consistency=consistency,
+                    deadline_at=deadline,
+                    budget_s=deadline_s,
+                    trace=span,
+                )
+            live = [r for r in cf.replicas if self.nodes[r.node_id].alive]
+            if not live:
+                raise RuntimeError(f"no live replica for {cf_name!r}")
+            n_q = len(queries)
 
-        # Request Scheduler: per-query cheapest replica, RR tie-break
-        # (one draw per query in batch order, so a batch matches a
-        # sequential read loop); then one batched scan per chosen group,
-        # with bounded failover onto the next-ranked replica when a scan
-        # raises a transient fault
-        order_mat, picks = _schedule_picks(cost_mat, cf.rr_counter)
-        all_q = list(range(n_q))
-        results: list[ScanResult | None] = [None] * n_q
-        reports: list[ReadReport | None] = [None] * n_q
-        self._run_groups(
-            cf, live, order_mat, picks, all_q, queries, rows_mat, cost_mat,
-            results, reports, deadline_at=deadline, budget_s=deadline_s,
-        )
+            # vectorized Cost Evaluator: Eq (1)-(2) over all (replica,
+            # query); per-column selectivities are extracted once and
+            # shared by all replica layouts
+            plan = span.child("engine.plan") if span is not None else None
+            pre = precompute_query_stats(cf.stats, queries, cf.key_names)
+            rows_mat = np.stack(
+                [estimate_rows_many(cf.stats, r.layout, queries, pre) for r in live]
+            )
+            cost_mat = np.stack(
+                [
+                    cf.cost_model.cost_fn(len(r.layout)).many(rows_mat[k])
+                    for k, r in enumerate(live)
+                ]
+            )
+            factors = self._live_cost_factors(live)
+            if factors is not None:
+                cost_mat = cost_mat * factors[:, None]
 
-        if hedge and len(live) > 1 and not _deadline_spent(deadline):
-            # duplicate straggler-bound queries onto the next-cheapest
-            # replica on a different node (same alternate ``read`` picks);
-            # hedges are best-effort duplicates — a faulting hedge is
-            # dropped, never failed over (the primary result stands)
-            for k, qidx in self._hedge_groups(
-                live, order_mat, picks, all_q, hedge_ratio
-            ).items():
-                try:
-                    self._execute_group(
-                        cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
-                        results, reports, hedged=True,
-                    )
-                except TransientFault:
-                    continue
-
-        if consistency != ONE:
-            self._consistency_pass(
-                cf, cf.partitions[0], live, order_mat, picks, all_q,
-                queries, results, reports, consistency,
-                deadline_at=deadline, budget_s=deadline_s,
+            # Request Scheduler: per-query cheapest replica, RR tie-break
+            # (one draw per query in batch order, so a batch matches a
+            # sequential read loop); then one batched scan per chosen group,
+            # with bounded failover onto the next-ranked replica when a scan
+            # raises a transient fault
+            order_mat, picks = _schedule_picks(cost_mat, cf.rr_counter)
+            if plan is not None:
+                plan.end(replicas=len(live))
+            all_q = list(range(n_q))
+            results: list[ScanResult | None] = [None] * n_q
+            reports: list[ReadReport | None] = [None] * n_q
+            self._run_groups(
+                cf, live, order_mat, picks, all_q, queries, rows_mat, cost_mat,
+                results, reports, deadline_at=deadline, budget_s=deadline_s,
+                trace=span,
             )
 
-        return list(zip(results, reports))  # type: ignore[arg-type]
+            if hedge and len(live) > 1 and not _deadline_spent(deadline):
+                # duplicate straggler-bound queries onto the next-cheapest
+                # replica on a different node (same alternate ``read`` picks);
+                # hedges are best-effort duplicates — a faulting hedge is
+                # dropped, never failed over (the primary result stands)
+                for k, qidx in self._hedge_groups(
+                    live, order_mat, picks, all_q, hedge_ratio
+                ).items():
+                    try:
+                        self._execute_group(
+                            cf, live[k], qidx, queries, rows_mat[k], cost_mat[k],
+                            results, reports, hedged=True, trace=span,
+                        )
+                    except TransientFault:
+                        continue
+
+            if consistency != ONE:
+                self._consistency_pass(
+                    cf, cf.partitions[0], live, order_mat, picks, all_q,
+                    queries, results, reports, consistency,
+                    deadline_at=deadline, budget_s=deadline_s, trace=span,
+                )
+
+            return list(zip(results, reports))  # type: ignore[arg-type]
+        finally:
+            if span is not None:
+                span.end()
 
     def _run_groups(
         self,
@@ -1223,6 +1386,7 @@ class HREngine:
         *,
         deadline_at: float | None = None,
         budget_s: float | None = None,
+        trace=None,
     ) -> None:
         """Primary grouped execution with bounded failover: queries
         whose group raises a :class:`TransientFault` advance to the
@@ -1237,19 +1401,20 @@ class HREngine:
             len(live) if self.read_retry_limit is None else self.read_retry_limit
         )
         tried: dict[int, set[int]] = {qi: set() for qi in qidx}
-        queue = list(_group_by_pick(picks, qidx).items())
+        queue = [(k, sub, False) for k, sub in _group_by_pick(picks, qidx).items()]
         while queue:
-            _check_deadline(deadline_at, budget_s)
-            k, sub = queue.pop(0)
+            self._check_deadline(deadline_at, budget_s)
+            k, sub, is_retry = queue.pop(0)
             for qi in sub:
                 tried[qi].add(k)
             try:
                 self._execute_group(
                     cf, live[k], sub, queries, rows_live[k], cost_live[k],
-                    results, reports, hedged=False,
+                    results, reports, hedged=False, trace=trace,
+                    retry=is_retry,
                 )
             except TransientFault:
-                self._read_retries += len(sub)
+                self._read_retries.inc(len(sub))
                 retry: dict[int, list[int]] = {}
                 for qi in sub:
                     nxt = (
@@ -1270,10 +1435,11 @@ class HREngine:
                             f"{cf.name!r} after {len(tried[qi])} attempts"
                         )
                     retry.setdefault(nxt, []).append(qi)
-                queue.extend(retry.items())
+                queue.extend((k2, sub2, True) for k2, sub2 in retry.items())
 
     def _scan_with_cache(
-        self, cf: ColumnFamily, r: ReplicaHandle, group: list[Query]
+        self, cf: ColumnFamily, r: ReplicaHandle, group: list[Query],
+        *, trace=None,
     ) -> tuple[list[ScanResult], list[float]]:
         """Core scan for one replica's query group: read-barrier flush,
         injected-fault check, result cache, one ``execute_many`` for
@@ -1282,23 +1448,38 @@ class HREngine:
         zero attributed wall. Raises :class:`TransientReadError` /
         :class:`TransientFlushError` *before* producing any result, so
         a faulting group is retried whole."""
-        self._ensure_flushed(cf, r)  # may raise TransientFlushError
+        self._ensure_flushed(cf, r, trace=trace)  # may raise TransientFlushError
         table = self._table(cf, r)
+        cp = trace.child("engine.cache_probe") if trace is not None else None
         cache = ckeys = None
         if self._cache_enabled:
             cache = self._result_cache.setdefault((cf.name, r.replica_id), {})
             ckeys = self._cache_keys(group)
         hit_j = set() if cache is None else {j for j, k in enumerate(ckeys) if k in cache}
         miss_j = [j for j in range(len(group)) if j not in hit_j]
+        if cp is not None:
+            cp.end(hits=len(hit_j), misses=len(miss_j))
         node = self.nodes[r.node_id]
         if miss_j and node.read_fault_budget > 0:
             node.read_fault_budget -= 1
             if self.failure_detector is not None:
                 self.failure_detector.record_failure(node.node_id)
+            self._read_faults.inc()
             raise TransientReadError(node.node_id)
-        t0 = time.perf_counter()
-        miss_scans = table.execute_many([group[j] for j in miss_j]) if miss_j else []
-        wall = (time.perf_counter() - t0) * node.slowdown
+        sc = (
+            trace.child("engine.scan", queries=len(miss_j))
+            if trace is not None and miss_j
+            else None
+        )
+        t0 = self._scan_timer()
+        miss_scans = (
+            table.execute_many([group[j] for j in miss_j], trace=sc)
+            if miss_j
+            else []
+        )
+        wall = (self._scan_timer() - t0) * node.slowdown
+        if sc is not None:
+            sc.end(rows=int(sum(s.rows_scanned for s in miss_scans)))
         if miss_j and self.failure_detector is not None:
             # one latency sample per executed group — cache hits are
             # not operations the node performed
@@ -1316,8 +1497,8 @@ class HREngine:
             if cache is not None:
                 self._cache_store((cf.name, r.replica_id), cache, ckeys[j], sr)
         if cache is not None:
-            self._cache_hits += len(hit_j)
-            self._cache_misses += len(miss_j)
+            self._cache_hits.inc(len(hit_j))
+            self._cache_misses.inc(len(miss_j))
         return scans, walls  # type: ignore[return-value]
 
     def _execute_group(
@@ -1332,6 +1513,8 @@ class HREngine:
         reports: list,
         *,
         hedged: bool,
+        trace=None,
+        retry: bool = False,
     ) -> None:
         """Run one replica's query group via ``execute_many``; measured
         wall time (× node slowdown) is split evenly across the queries
@@ -1341,7 +1524,22 @@ class HREngine:
         cache at zero wall — go to the hedge: the duplicate answered
         first or simultaneously, which is what ``hedged`` reports)."""
         group = [queries[i] for i in qidx]
-        scans, walls = self._scan_with_cache(cf, r, group)
+        g = (
+            trace.child(
+                "engine.group_scan", replica=r.replica_id, node=r.node_id,
+                queries=len(qidx), hedged=hedged, retry=retry,
+            )
+            if trace is not None
+            else None
+        )
+        try:
+            scans, walls = self._scan_with_cache(cf, r, group, trace=g)
+        except TransientFault as e:
+            if g is not None:
+                g.end(error=type(e).__name__)
+            raise
+        if g is not None:
+            g.end(rows=int(sum(sr.rows_scanned for sr in scans)))
         for j, i in enumerate(qidx):
             sr = scans[j]
             if hedged and not (
@@ -1390,6 +1588,7 @@ class HREngine:
         *,
         deadline_at: float | None = None,
         budget_s: float | None = None,
+        trace=None,
     ) -> None:
         """Digest reads: execute each query on the next cost-ranked
         replicas until k distinct replicas (primary included) answered,
@@ -1408,6 +1607,11 @@ class HREngine:
                 f"partition {part.partition_id} of {cf.name!r}, "
                 f"have {len(live)}"
             )
+        dg = (
+            trace.child("engine.digest", level=consistency, k=k)
+            if trace is not None
+            else None
+        )
         col_of = {qi: j for j, qi in enumerate(qidx)}
         row_of_rid = {r.replica_id: i for i, r in enumerate(live)}
         # alternates: per query the k-1 cheapest ranked replicas other
@@ -1435,16 +1639,16 @@ class HREngine:
             # digest reads are REQUIRED work at QUORUM/ALL — a spent
             # budget sheds the whole call rather than quietly answering
             # at a weaker level than the caller asked for
-            _check_deadline(deadline_at, budget_s)
+            self._check_deadline(deadline_at, budget_s)
             x, sub = queue.pop(0)
             for qi in sub:
                 consulted[qi].add(x)
             try:
                 scans, _walls = self._scan_with_cache(
-                    cf, live[x], [queries[qi] for qi in sub]
+                    cf, live[x], [queries[qi] for qi in sub], trace=dg
                 )
             except TransientFault:
-                self._read_retries += len(sub)
+                self._read_retries.inc(len(sub))
                 retry: dict[int, list[int]] = {}
                 for qi in sub:
                     nxt = next(
@@ -1473,7 +1677,7 @@ class HREngine:
             # stale evidence — re-read (the repair invalidated the cache)
             if h.replica_id not in repaired:
                 return sr
-            return self._scan_with_cache(cf, h, [queries[qi]])[0][0]
+            return self._scan_with_cache(cf, h, [queries[qi]], trace=dg)[0][0]
 
         handle_of_rid = {r.replica_id: r for r in part.replicas}
         for qi in qidx:
@@ -1492,7 +1696,7 @@ class HREngine:
                 if entries[0][1] is not results[qi]:
                     results[qi] = entries[0][1]  # refreshed primary
                 continue
-            self._digest_mismatches += 1
+            self._digest_mismatches.inc()
             counts: dict[int, int] = {}
             for d in digs:
                 counts[d] = counts.get(d, 0) + 1
@@ -1502,9 +1706,16 @@ class HREngine:
                 # answer from a majority replica
                 for (h, _sr), d in zip(entries, digs):
                     if d != best_d:
+                        rp = (
+                            dg.child("engine.read_repair", replica=h.replica_id)
+                            if dg is not None
+                            else None
+                        )
                         self._repair_replica(cf, part, h)
                         repaired.add(h.replica_id)
-                        self._read_repairs += 1
+                        self._read_repairs.inc()
+                        if rp is not None:
+                            rp.end()
                 win, win_scan = next(
                     e for e, d in zip(entries, digs) if d == best_d
                 )
@@ -1519,14 +1730,23 @@ class HREngine:
                 # no majority: rebuild every consulted replica from the
                 # log (the ground truth) and re-execute on the primary
                 for h, _sr in entries:
+                    rp = (
+                        dg.child("engine.read_repair", replica=h.replica_id)
+                        if dg is not None
+                        else None
+                    )
                     self._repair_replica(cf, part, h)
                     repaired.add(h.replica_id)
-                    self._read_repairs += 1
-                scan = self._scan_with_cache(cf, prim, [queries[qi]])[0][0]
+                    self._read_repairs.inc()
+                    if rp is not None:
+                        rp.end()
+                scan = self._scan_with_cache(cf, prim, [queries[qi]], trace=dg)[0][0]
                 results[qi] = scan
                 reports[qi] = dataclasses.replace(
                     reports[qi], rows_scanned=scan.rows_scanned
                 )
+        if dg is not None:
+            dg.end()
 
     def _hedge_groups(
         self,
@@ -1579,6 +1799,7 @@ class HREngine:
         consistency: str = ONE,
         deadline_at: float | None = None,
         budget_s: float | None = None,
+        trace=None,
     ) -> list[tuple[ScanResult, ReadReport]]:
         """Scatter-gather ``read_many`` over a partitioned column family.
 
@@ -1617,6 +1838,7 @@ class HREngine:
         """
         n_q = len(queries)
         ring = cf.ring
+        sc = trace.child("engine.scatter") if trace is not None else None
         bounds = slab_bounds_many(queries, cf.key_names, cf.schema)
         p_lo, p_hi = ring.span_partitions(bounds)
 
@@ -1625,15 +1847,22 @@ class HREngine:
             for pid in range(int(p_lo[qi]), int(p_hi[qi]) + 1):
                 part = cf.partitions[pid]
                 if not part.may_contain(int(bounds[qi, 0]), int(bounds[qi, 1])):
-                    self._empty_partition_skips += 1
+                    self._empty_partition_skips.inc()
                     continue
                 touched.setdefault(pid, []).append(qi)
+        if sc is not None:
+            sc.end(partitions=len(touched))
 
         rf = cf.replication_factor
         n_slots = len(cf.slot_layouts)
         partials: dict[int, tuple[list, list]] = {}
         for pid in sorted(touched):
-            _check_deadline(deadline_at, budget_s)
+            self._check_deadline(deadline_at, budget_s)
+            ps = (
+                trace.child("engine.partition", partition=pid)
+                if trace is not None
+                else None
+            )
             part = cf.partitions[pid]
             qidx = touched[pid]
             live = [r for r in part.replicas if self.nodes[r.node_id].alive]
@@ -1671,6 +1900,7 @@ class HREngine:
             self._run_groups(
                 cf, live, order, picks, qidx, queries, rows_live, cost_live,
                 res_p, rep_p, deadline_at=deadline_at, budget_s=budget_s,
+                trace=ps,
             )
             if hedge and len(live) > 1 and not _deadline_spent(deadline_at):
                 for k, sub in self._hedge_groups(
@@ -1679,7 +1909,7 @@ class HREngine:
                     try:
                         self._execute_group(
                             cf, live[k], sub, queries, rows_live[k],
-                            cost_live[k], res_p, rep_p, hedged=True,
+                            cost_live[k], res_p, rep_p, hedged=True, trace=ps,
                         )
                     except TransientFault:
                         continue  # best-effort duplicate
@@ -1687,11 +1917,14 @@ class HREngine:
                 self._consistency_pass(
                     cf, part, live, order, picks, qidx, queries,
                     res_p, rep_p, consistency,
-                    deadline_at=deadline_at, budget_s=budget_s,
+                    deadline_at=deadline_at, budget_s=budget_s, trace=ps,
                 )
+            if ps is not None:
+                ps.end()
             partials[pid] = (res_p, rep_p)
 
         # gather: merge each query's per-partition partials in ring order
+        ga = trace.child("engine.gather") if trace is not None else None
         offsets = self._partition_row_offsets(cf)
         out: list[tuple[ScanResult, ReadReport]] = []
         for qi in range(n_q):
@@ -1741,6 +1974,8 @@ class HREngine:
                     ),
                 )
             )
+        if ga is not None:
+            ga.end()
         return out
 
     # -- ring migration (vnode split / merge / rebalance) ---------------------
@@ -1985,9 +2220,9 @@ class HREngine:
 
         old_set = set(cf.ring.starts)
         new_set = set(new_ring.starts)
-        self._partition_splits += len(new_set - old_set)
-        self._partition_merges += len(old_set - new_set)
-        self._rebalance_rows_moved += rows_moved
+        self._partition_splits.inc(len(new_set - old_set))
+        self._partition_merges.inc(len(old_set - new_set))
+        self._rebalance_rows_moved.inc(rows_moved)
         cf.ring = new_ring
         cf.partitions = new_parts
         return rows_moved
@@ -2002,6 +2237,7 @@ class HREngine:
         *,
         parallel: bool | None = None,
         flush: bool | None = None,
+        trace=None,
     ) -> float:
         """Commit a batch write through the durable path and refresh
         stats; returns wall seconds. The batch is (1) appended to the
@@ -2041,6 +2277,14 @@ class HREngine:
         if parallel is None:
             parallel = self.parallel_writes
         t0 = time.perf_counter()
+        w = (
+            trace.child(
+                "engine.write", cf=cf_name,
+                rows=int(len(next(iter(key_cols.values())))) if key_cols else 0,
+            )
+            if trace is not None
+            else None
+        )
         if cf.ring.n_partitions == 1:
             routed = [(cf.partitions[0], key_cols, value_cols, None)]
         else:
@@ -2069,16 +2313,22 @@ class HREngine:
         # memtable stages them by reference — one copy per write, not RF.
         # A dead replica with an open hint just grows its hinted tail —
         # the hint is an LSN watermark into this same log, never a copy
-        for part, kc_p, vc_p, toks_p in routed:
-            part.commitlog.append(kc_p, vc_p)
-            rec = part.commitlog.tail
+        la = w.child("engine.log_append") if w is not None else None
+        recs = []
+        for part, kc_p, _vc_p, _toks_p in routed:
+            part.commitlog.append(kc_p, _vc_p)
+            recs.append(part.commitlog.tail)
+        if la is not None:
+            la.end(partitions=len(routed))
+        ms = w.child("engine.memtable_stage") if w is not None else None
+        for (part, kc_p, vc_p, toks_p), rec in zip(routed, recs):
             for r in part.replicas:
                 if self.nodes[r.node_id].alive:
                     part.memtables[r.replica_id].stage(
                         rec.key_cols, rec.value_cols, copy=False
                     )
                 elif r.replica_id in part.hints:
-                    self._hints_queued += 1
+                    self._hints_queued.inc()
             if toks_p is not None:
                 part.observe_tokens(toks_p)
             if part.stats is not None:
@@ -2086,6 +2336,8 @@ class HREngine:
                 # sub-batch folds into exactly the partition it joined
                 part.stats.merge_rows(rec.key_cols, device=cf.device_resident)
         cf.stats.merge_rows(key_cols, device=cf.device_resident)
+        if ms is not None:
+            ms.end()
         # the threshold check spans ALL live replicas, not just this
         # write's routed partitions: rows staged earlier in a partition
         # the current key mix never touches again must still flush once
@@ -2097,7 +2349,7 @@ class HREngine:
                 for r in live
             )
         if flush:
-            self._flush_replicas(cf, live, parallel=parallel)
+            self._flush_replicas(cf, live, parallel=parallel, trace=w)
             # skew-drift trigger: when the observed-token histogram says
             # one partition's row mass drifted past the threshold × mean,
             # rebalance in place (boundaries to observed quantiles).
@@ -2111,16 +2363,21 @@ class HREngine:
                 > self.rebalance_imbalance
             ):
                 self.rebalance(cf_name)
+        if w is not None:
+            w.end()
         return time.perf_counter() - t0
 
     def _flush_replicas(
-        self, cf: ColumnFamily, replicas: Sequence[ReplicaHandle], *, parallel: bool = False
+        self, cf: ColumnFamily, replicas: Sequence[ReplicaHandle], *,
+        parallel: bool = False, trace=None,
     ) -> None:
         """Flush the given replicas' staged rows: one sorted run per
         replica (in its own layout), merged via ``merge_run``, result
         cache invalidated, then the compaction policy applied to the
         merged table. ``parallel`` overlaps the independent per-replica
-        merges on a thread pool."""
+        merges on a thread pool (``engine.flush`` spans are emitted per
+        replica either way; CPython's atomic int/list ops keep the
+        shared tracer consistent under the pool)."""
         pending = [
             r
             for r in replicas
@@ -2136,30 +2393,50 @@ class HREngine:
             # in a sibling thread) never loses committed rows — the
             # staged buffers and the old table both survive a retry
             node = self.nodes[r.node_id]
-            if node.flush_fault_budget > 0:
-                node.flush_fault_budget -= 1
-                if self.failure_detector is not None:
-                    self.failure_detector.record_failure(node.node_id)
-                raise TransientFlushError(node.node_id)
-            run = self._memtable(cf, r).peek_run()
-            if self.checksums and not run.verify():
-                raise CorruptRunError(
-                    f"flush of {cf.name!r} replica {r.replica_id}: sorted "
-                    f"run failed its checksum"
+            fs = (
+                trace.child(
+                    "engine.flush", replica=r.replica_id, node=r.node_id,
+                    rows=int(self._memtable(cf, r).n_staged),
                 )
-            table = node.tables[(cf.name, r.replica_id)]
-            merged = table.merge_run(run)
-            if self.checksums:
-                # extend the seal with the run's digest — O(run), and
-                # derived from durable history, never from the (possibly
-                # corrupted) base arrays: a bit flip in the base stays
-                # detectable by scrub after any number of flushes
-                if table.stored_digest is not None:
-                    merged.stored_digest = combine_digests(
-                        table.stored_digest, run.digest
+                if trace is not None
+                else None
+            )
+            try:
+                if node.flush_fault_budget > 0:
+                    node.flush_fault_budget -= 1
+                    if self.failure_detector is not None:
+                        self.failure_detector.record_failure(node.node_id)
+                    self._flush_faults.inc()
+                    raise TransientFlushError(node.node_id)
+                run = self._memtable(cf, r).peek_run()
+                if self.checksums and not run.verify():
+                    self._corrupt_runs.inc()
+                    raise CorruptRunError(
+                        f"flush of {cf.name!r} replica {r.replica_id}: sorted "
+                        f"run failed its checksum"
                     )
-                else:
-                    merged.seal_checksum()
+                table = node.tables[(cf.name, r.replica_id)]
+                fm = fs.child("engine.flush_merge") if fs is not None else None
+                merged = table.merge_run(run)
+                if fm is not None:
+                    fm.end()
+                if self.checksums:
+                    # extend the seal with the run's digest — O(run), and
+                    # derived from durable history, never from the (possibly
+                    # corrupted) base arrays: a bit flip in the base stays
+                    # detectable by scrub after any number of flushes
+                    if table.stored_digest is not None:
+                        merged.stored_digest = combine_digests(
+                            table.stored_digest, run.digest
+                        )
+                    else:
+                        merged.seal_checksum()
+            except Exception as e:
+                if fs is not None:
+                    fs.end(error=type(e).__name__)
+                raise
+            if fs is not None:
+                fs.end()
             return r, merged
 
         if parallel and len(pending) > 1:
@@ -2171,7 +2448,7 @@ class HREngine:
                 merged.place_on_device()
             self.nodes[r.node_id].tables[(cf.name, r.replica_id)] = merged
             self._memtable(cf, r).clear()
-            self._flushes += 1
+            self._flushes.inc()
             part = cf.partitions[r.partition_id]
             if part.commitlog is not None:
                 # hinted-handoff watermark: this replica's table now
@@ -2179,11 +2456,19 @@ class HREngine:
                 part.flushed_lsn[r.replica_id] = part.commitlog.next_lsn
             self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
             policy = part.compaction
-            if policy is not None and compact_table(merged, policy):
-                # content unchanged by compaction, so the sealed
-                # multiset digest carries over as-is
-                self._compactions += 1
-                self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
+            if policy is not None:
+                tc = trace.tracer.now() if trace is not None else 0.0
+                if compact_table(merged, policy):
+                    # content unchanged by compaction, so the sealed
+                    # multiset digest carries over as-is
+                    self._compactions.inc()
+                    self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
+                    if trace is not None:
+                        # retroactive span: only compactions that ran
+                        # appear in the tree, with an honest wall
+                        trace.child(
+                            "engine.compaction", t=tc, replica=r.replica_id
+                        ).end()
         # count-based auto-checkpoint: once a flushed partition's log
         # has accumulated more than the engine's record threshold since
         # its last snapshot AND the partition is fully drained (every
@@ -2208,17 +2493,24 @@ class HREngine:
                     # snapshot record by construction
                     for rid in list(part.flushed_lsn):
                         part.flushed_lsn[rid] = log.next_lsn
-                    self._auto_checkpoints += 1
-        self._flush_wall += time.perf_counter() - t0
+                    self._auto_checkpoints.inc()
+        self._flush_wall.inc(time.perf_counter() - t0)
 
     def _memtable(self, cf: ColumnFamily, r: ReplicaHandle) -> Memtable:
         return cf.partitions[r.partition_id].memtables[r.replica_id]
 
-    def _ensure_flushed(self, cf: ColumnFamily, r: ReplicaHandle) -> None:
+    def _ensure_flushed(
+        self, cf: ColumnFamily, r: ReplicaHandle, *, trace=None
+    ) -> None:
         """Flush one replica's pending staged rows (read barrier)."""
         mt = cf.partitions[r.partition_id].memtables.get(r.replica_id)
         if mt is not None and mt.n_staged:
-            self._flush_replicas(cf, [r])
+            if trace is None:
+                self._flush_replicas(cf, [r])
+            else:
+                fb = trace.child("engine.flush_barrier", rows=int(mt.n_staged))
+                self._flush_replicas(cf, [r], trace=fb)
+                fb.end()
 
     def flush_memtables(self, cf_name: str, *, parallel: bool | None = None) -> None:
         """Drain every live replica's memtable (group-commit flush)."""
@@ -2418,7 +2710,7 @@ class HREngine:
                         or log is None
                         or not log.can_replay_from(hint)
                     ):
-                        self._hint_fallbacks += 1
+                        self._hint_fallbacks.inc()
                         self._install_rebuilt(
                             cf, part, r, self._rebuild_replica_table(cf, part, r)
                         )
@@ -2438,8 +2730,8 @@ class HREngine:
                             else:
                                 merged.seal_checksum()
                         node.tables[(cf.name, rid)] = merged
-                        self._hint_replays += 1
-                        self._hint_rows_replayed += n_rows
+                        self._hint_replays.inc()
+                        self._hint_rows_replayed.inc(n_rows)
                     # zero missed rows: the surviving table is already
                     # complete — no merge, no re-seal, no device work
                     part.flushed_lsn[rid] = log.next_lsn
@@ -2525,13 +2817,13 @@ class HREngine:
                 if table is None:
                     continue
                 checked += 1
-                self._scrub_checks += 1
+                self._scrub_checks.inc()
                 if table.verify_checksum():
                     continue
                 corrupt.append(r.replica_id)
                 if repair:
                     self._repair_replica(cf, part, r)
-                    self._scrub_repairs += 1
+                    self._scrub_repairs.inc()
                     repaired += 1
         return {
             "replicas_checked": checked,

@@ -464,7 +464,9 @@ class SortedTable:
         lo, hi = self.slab(query)
         return self._scan_slab(query, lo, hi)
 
-    def execute_many(self, queries: Sequence[Query]) -> list[ScanResult]:
+    def execute_many(
+        self, queries: Sequence[Query], *, trace=None
+    ) -> list[ScanResult]:
         """Batched ``execute``.
 
         On a device-resident table every eligible query (sum, count AND
@@ -478,6 +480,12 @@ class SortedTable:
         searchsorted and run the numpy residual scan. Either way result
         ``i`` equals ``execute(queries[i])``, which routes per query the
         same way.
+
+        ``trace`` (an open :class:`repro.obs.Span`, or None) records
+        the device launches as ``kernel.scan_launch`` /
+        ``kernel.select_compact`` children and the numpy fallback as
+        ``engine.host_scan`` — the deepest tier of the read-path span
+        tree.
         """
         queries = list(queries)
         if not queries:
@@ -487,15 +495,24 @@ class SortedTable:
         if dev_idx:
             from repro.kernels import table_execute_device_many
 
-            out = table_execute_device_many(self, [queries[i] for i in dev_idx])
+            out = table_execute_device_many(
+                self, [queries[i] for i in dev_idx], trace=trace
+            )
             for i, r in zip(dev_idx, out):
                 results[i] = r
         host_idx = [i for i in range(len(queries)) if results[i] is None]
         if host_idx:
+            hs = (
+                trace.child("engine.host_scan", queries=len(host_idx))
+                if trace is not None
+                else None
+            )
             sub = [queries[i] for i in host_idx]
             slabs = self.slab_many(sub)
             for j, i in enumerate(host_idx):
                 results[i] = self._scan_slab(sub[j], int(slabs[j, 0]), int(slabs[j, 1]))
+            if hs is not None:
+                hs.end()
         return results  # type: ignore[return-value]
 
     def _scan_slab(self, query: Query, lo: int, hi: int) -> ScanResult:

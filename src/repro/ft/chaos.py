@@ -36,6 +36,21 @@ harness, its *counters* are not byte-stable across runs: the front
 door's virtual clock consumes measured engine walls, so the split
 between refusal kinds shifts with machine speed. The arrival stream
 and the acceptance property are what a seed pins down.
+
+Both harnesses double as the observability acceptance gate: each
+``run()`` asserts that every typed refusal, degradation-rung
+transition, and repair path is visible in the owning
+:class:`~repro.obs.metrics.MetricsRegistry` (the response-status
+accounting must equal the counters, and the audit inventories —
+``REFUSAL_COUNTERS`` / ``RUNG_COUNTERS`` on the front door,
+``FAULT_COUNTERS`` / ``REPAIR_COUNTERS`` on the engine — must all
+resolve in the registry catalog). Pass ``tracer=`` to record span
+trees: the storage harness roots one ``chaos.probe`` tree per victim
+QUORUM probe (with a :class:`~repro.obs.trace.TickClock` tracer the
+JSON-lines dump is byte-identical across runs of the same seed), and
+the overload harness hands the tracer to its front door, whose
+slow-query log keeps the K slowest request trees.
+``--trace OUT.jsonl`` on the CLI dumps and re-validates the trace.
 """
 
 from __future__ import annotations
@@ -52,8 +67,10 @@ from repro.core import (
     TransientFault,
     random_workload,
 )
+from repro.core.engine import FAULT_COUNTERS, REPAIR_COUNTERS
 from repro.ft.detector import FailureDetector
 from repro.ft.straggler import clear_slowdowns, inject_slowdown
+from repro.obs import TickClock, Tracer, dump_jsonl, load_jsonl
 
 __all__ = [
     "ChaosEvent",
@@ -201,7 +218,9 @@ class ChaosHarness:
         n_probes: int = 8,
         probe_every: int = 5,
         memtable_rows: int = 200,
+        tracer: Tracer | None = None,
     ) -> None:
+        self.tracer = tracer
         self.schedule = ChaosSchedule.generate(
             seed,
             n_steps=n_steps,
@@ -237,8 +256,13 @@ class ChaosHarness:
             partitions=n_partitions,
             memtable_rows=memtable_rows,
         )
+        # deterministic scan walls: the detector's routing penalties —
+        # and therefore which replica answers each probe — must be a
+        # pure function of the schedule, or the same-seed traced runs
+        # could not export byte-identical span trees
         self.victim = HREngine(
-            n_nodes=n_nodes, failure_detector=FailureDetector()
+            n_nodes=n_nodes, failure_detector=FailureDetector(),
+            scan_timer=TickClock(),
         )
         self.oracle = HREngine(n_nodes=n_nodes)
         self.victim.create_column_family(_CF, kc, vc, **cf_kwargs)
@@ -311,11 +335,24 @@ class ChaosHarness:
     def _probe(self, failures: list[str], tag: str) -> None:
         for qi, q in enumerate(self.probes):
             want, _ = self.oracle.read(_CF, q)
+            root = None
+            if self.tracer is not None:
+                # one span tree per victim probe; with a TickClock
+                # tracer these are byte-identical across runs of the
+                # same seed (the dump is the determinism fixture)
+                root = self.tracer.root("chaos.probe", tag=tag, probe=qi)
             try:
-                got, _ = self.victim.read(_CF, q, consistency=QUORUM)
+                got, _ = self.victim.read(
+                    _CF, q, consistency=QUORUM, trace=root
+                )
             except (TransientFault, RuntimeError) as exc:
+                if root is not None:
+                    root.end(error=type(exc).__name__)
                 failures.append(f"{tag} probe {qi}: raised {exc!r}")
                 continue
+            finally:
+                if root is not None and root.t_end is None:
+                    root.end()
             if got.rows_matched != want.rows_matched:
                 failures.append(
                     f"{tag} probe {qi}: rows {got.rows_matched} != "
@@ -396,6 +433,19 @@ class ChaosHarness:
                 )
         self._probe(failures, "final")
 
+        # observability audit: every repair path and typed engine fault
+        # the harness can provoke must resolve to a registry counter
+        cat = set(self.victim.metrics.catalog())
+        missing = [
+            n
+            for n in (*REPAIR_COUNTERS, *FAULT_COUNTERS.values())
+            if n not in cat
+        ]
+        if missing:
+            failures.append(
+                f"registry catalog missing repair/fault counters: {missing}"
+            )
+
         return ChaosReport(
             seed=sched.seed,
             ok=not failures,
@@ -439,6 +489,7 @@ class OverloadHarness:
         slowdown: float = 50.0,
         deadline_s: float = 50e-3,
         quorum_frac: float = 0.3,
+        tracer: Tracer | None = None,
     ) -> None:
         from repro.serving.frontdoor import FrontDoor, Request
 
@@ -519,6 +570,7 @@ class OverloadHarness:
             max_wait=base_interarrival_s * 4,
             max_queue=96,
             bulkhead_inflight=64,
+            tracer=tracer,
         )
 
     def run(self) -> OverloadReport:
@@ -563,6 +615,46 @@ class OverloadHarness:
                 f"accounting leak: {answered} ok + {refused} refused != "
                 f"{len(self.requests)} submitted"
             )
+        # observability audit: the response-status accounting must be
+        # mirrored exactly in the registry counters — a refusal or rung
+        # transition the counters cannot see is a silent path
+        from repro.serving.frontdoor import REFUSAL_COUNTERS, RUNG_COUNTERS
+
+        by = {
+            s: sum(1 for r in responses if r is not None and r.status == s)
+            for s in ("ok", "rejected", "shed", "deadline")
+        }
+        mirror = (
+            ("ok responses", by["ok"], stats["served_ok"]),
+            (
+                "rejected responses",
+                by["rejected"],
+                stats["rejected_throttle"]
+                + stats["rejected_bulkhead"]
+                + stats["rejected_queue_full"],
+            ),
+            ("shed responses", by["shed"], stats["shed_overload"]),
+            ("deadline responses", by["deadline"], stats["shed_deadline"]),
+            (
+                "degraded responses",
+                sum(1 for r in responses if r is not None and r.degraded),
+                stats["consistency_degraded"],
+            ),
+        )
+        for what, seen, counted in mirror:
+            if seen != counted:
+                failures.append(
+                    f"counter mirror broken: {seen} {what} but the "
+                    f"registry counted {counted}"
+                )
+        cat = set(self.frontdoor.metrics.catalog())
+        missing = sorted(
+            (set(REFUSAL_COUNTERS.values()) | set(RUNG_COUNTERS.values())) - cat
+        )
+        if missing:
+            failures.append(
+                f"registry catalog missing refusal/rung counters: {missing}"
+            )
         if stats["max_queue_depth"] > self.frontdoor.max_queue:
             failures.append(
                 f"queue grew past its bound "
@@ -595,13 +687,45 @@ def main(argv: list[str] | None = None) -> int:
         help="front-door overload scenario (shed-or-exact property) "
         "instead of the storage-fault schedule",
     )
+    ap.add_argument(
+        "--trace",
+        metavar="OUT.jsonl",
+        default=None,
+        help="record span trees and dump them as JSON-lines (storage "
+        "mode: one TickClock tree per QUORUM probe, byte-identical per "
+        "seed; overload mode: the front door's slowest request trees); "
+        "the dump is re-validated and an empty or malformed trace "
+        "fails the run",
+    )
     args = ap.parse_args(argv)
 
     seeds = [args.seed] if args.seed is not None else list(range(args.seeds))
     bad = 0
+    traced: list = []  # (latency, Span) pairs or bare Spans, all seeds
+
+    def _dump_trace() -> int:
+        """Write + re-validate the trace dump; nonzero on a bad dump."""
+        if args.trace is None:
+            return 0
+        n = dump_jsonl(traced, args.trace)
+        try:
+            docs = load_jsonl(args.trace)
+        except ValueError as e:
+            print(f"trace: INVALID dump: {e}")
+            return 1
+        if not docs:
+            print(f"trace: EMPTY dump at {args.trace} — no span trees recorded")
+            return 1
+        print(f"trace: wrote {n} span trees to {args.trace}")
+        return 0
+
     if args.overload:
         for seed in seeds:
-            report = OverloadHarness(seed).run()
+            tracer = Tracer() if args.trace is not None else None
+            harness = OverloadHarness(seed, tracer=tracer)
+            report = harness.run()
+            if tracer is not None:
+                traced.extend(harness.frontdoor.slow_log.entries())
             s = report.stats
             counters = ", ".join(
                 f"{k}={int(s[k])}"
@@ -623,9 +747,18 @@ def main(argv: list[str] | None = None) -> int:
             for f in report.failures:
                 print(f"  - {f}")
             bad += not report.ok
+        bad += _dump_trace()
         return 1 if bad else 0
     for seed in seeds:
-        report = ChaosHarness(seed, n_steps=args.steps, rate=args.rate).run()
+        # a fresh TickClock tracer per seed: span ids and timestamps
+        # restart, so the per-seed dump is byte-stable across runs
+        tracer = Tracer(clock=TickClock()) if args.trace is not None else None
+        harness = ChaosHarness(
+            seed, n_steps=args.steps, rate=args.rate, tracer=tracer
+        )
+        report = harness.run()
+        if tracer is not None:
+            traced.extend(tracer.roots)
         keys = (
             "hints_queued",
             "hint_replays",
@@ -643,6 +776,7 @@ def main(argv: list[str] | None = None) -> int:
         for f in report.failures:
             print(f"  - {f}")
         bad += not report.ok
+    bad += _dump_trace()
     return 1 if bad else 0
 
 

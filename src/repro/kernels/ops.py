@@ -620,7 +620,8 @@ def table_slab_locate_many(
 
 
 def table_execute_device_many(
-    table, queries, *, block_n: int = DEVICE_BLOCK_N, use_pallas: bool = True
+    table, queries, *, block_n: int = DEVICE_BLOCK_N, use_pallas: bool = True,
+    trace=None,
 ) -> list:
     """Serve a sum/count/select batch entirely from a table's resident
     device arrays: one fused locate+scan launch computes every query's
@@ -635,7 +636,12 @@ def table_execute_device_many(
     searchsorted and no numpy residual scan run at any batch
     composition. On append-structured states (after ``merge_insert`` on
     a resident table) ``row_map`` translates select indices back to
-    host row order."""
+    host row order.
+
+    ``trace`` (an open ``repro.obs.Span``, or None) wraps each device
+    launch *wall* — launch plus the ``np.asarray`` result fetch, i.e.
+    including the host sync — as ``kernel.scan_launch`` /
+    ``kernel.select_compact`` child spans."""
     from repro.core.table import ScanResult
 
     queries = list(queries)
@@ -666,6 +672,14 @@ def table_execute_device_many(
         ],
         np.int32,
     )
+    ks = (
+        trace.child(
+            "kernel.scan_launch", queries=len(queries),
+            n_rows=int(state["n_rows"]), fused=bool(use_pallas),
+        )
+        if trace is not None
+        else None
+    )
     if use_pallas:
         sums, matched, slab_rows = scan_agg_locate_batched(
             state["keys"], state["values_tile"], res_lo, res_hi, slab_lo,
@@ -682,6 +696,8 @@ def table_execute_device_many(
     sums = np.asarray(sums)
     matched = np.asarray(matched, np.int64)
     slab_rows = np.asarray(slab_rows, np.int64)
+    if ks is not None:
+        ks.end()
 
     sel_idx = [i for i, q in enumerate(queries) if q.agg == "select"]
     selected: dict[int, np.ndarray] = {}
@@ -707,6 +723,11 @@ def table_execute_device_many(
             rows = jnp.flatnonzero(wmask[j], size=int(matched[i]))
             selected[i] = _host_rows(np.asarray(rows))
         sel_idx = [i for i in sel_idx if int(matched[i]) <= SELECT_COMPACT_MAX_WIDTH]
+    kc = (
+        trace.child("kernel.select_compact", queries=len(sel_idx))
+        if trace is not None and sel_idx
+        else None
+    )
     if sel_idx:
         mmax = int(matched[sel_idx].max())
         if mmax == 0:
@@ -737,6 +758,8 @@ def table_execute_device_many(
                 idx = np.asarray(idx)
                 for j, i in enumerate(chunk):
                     selected[i] = _host_rows(idx[j, : int(matched[i])])
+    if kc is not None:
+        kc.end()
 
     out = []
     for i, q in enumerate(queries):

@@ -1,0 +1,49 @@
+"""Observability layer: metrics registry, structured tracing,
+slow-query forensics.
+
+Three zero-dependency modules threaded through every tier of the
+stack:
+
+* :mod:`repro.obs.metrics` — counters, gauges, and log-bucketed
+  latency histograms behind a get-or-create
+  :class:`~repro.obs.metrics.MetricsRegistry`.  ``HREngine.stats`` and
+  ``FrontDoor.stats`` are read-through views over their registries;
+  ``reset_stats()`` on either is one registry reset.
+* :mod:`repro.obs.trace` — explicit-parent spans (context is a call
+  argument, never a thread-local) with a pluggable clock;
+  :class:`~repro.obs.trace.TickClock` makes traces byte-deterministic
+  for seeded chaos replay.  The span taxonomy (stage names are a
+  public, stable contract) is documented in that module's docstring.
+* :mod:`repro.obs.export` — K-slowest span-tree log, deterministic
+  JSON-lines dump/load, and the ``python -m repro.obs`` report CLI.
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import Span, TickClock, Tracer, walk
+from .export import (
+    SlowQueryLog,
+    dump_jsonl,
+    format_tree,
+    load_jsonl,
+    render_report,
+    span_to_line,
+    stage_totals,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "TickClock",
+    "Tracer",
+    "walk",
+    "SlowQueryLog",
+    "dump_jsonl",
+    "load_jsonl",
+    "span_to_line",
+    "stage_totals",
+    "format_tree",
+    "render_report",
+]

@@ -31,14 +31,22 @@ class RetryAfter(RuntimeError):
     """Explicit backpressure: the request was refused at admission and
     the client should retry no sooner than ``retry_after_s`` from now.
     Deliberately an error type, not a silent drop — every refusal is
-    visible to the caller and counted in ``frontdoor.stats``."""
+    visible to the caller and counted in ``frontdoor.stats``.
 
-    def __init__(self, retry_after_s: float, reason: str) -> None:
+    ``kind`` names which guard refused (``"rate"``, ``"bulkhead"``, or
+    ``"queue"``); the front door maps each kind onto its registry
+    counter via :data:`repro.serving.frontdoor.REFUSAL_COUNTERS`, so
+    every typed refusal is observable by construction."""
+
+    def __init__(
+        self, retry_after_s: float, reason: str, *, kind: str = "admission"
+    ) -> None:
         super().__init__(
             f"admission refused ({reason}); retry after {retry_after_s * 1e3:.3f} ms"
         )
         self.retry_after_s = float(retry_after_s)
         self.reason = reason
+        self.kind = kind
 
 
 class TokenBucket:
@@ -74,7 +82,7 @@ class TokenBucket:
         if self._tokens >= 1.0:
             self._tokens -= 1.0
             return
-        raise RetryAfter((1.0 - self._tokens) / self.rate, "rate limit")
+        raise RetryAfter((1.0 - self._tokens) / self.rate, "rate limit", kind="rate")
 
     def tokens(self, now: float) -> float:
         """Tokens available at ``now`` (observability only)."""
@@ -104,7 +112,9 @@ class Bulkhead:
     def acquire(self, key: object) -> None:
         n = self._inflight.get(key, 0)
         if n >= self.max_inflight:
-            raise RetryAfter(self.retry_after_s, f"bulkhead full for {key!r}")
+            raise RetryAfter(
+                self.retry_after_s, f"bulkhead full for {key!r}", kind="bulkhead"
+            )
         self._inflight[key] = n + 1
 
     def release(self, key: object) -> None:

@@ -48,6 +48,33 @@ with :class:`~repro.serving.admission.RetryAfter` instead of queuing
 without bound; a full queue likewise rejects at admission. Every
 decision on every rung increments a ``frontdoor.stats`` counter.
 
+Observability
+=============
+
+The decision counters live on a
+:class:`~repro.obs.metrics.MetricsRegistry` (``stats`` is a
+read-through dict view; ``reset_stats()`` is one registry reset), and
+the registry additionally carries virtual-time latency histograms
+(``queue_wait_seconds``, ``request_latency_seconds``,
+``batch_service_seconds``). :data:`REFUSAL_COUNTERS` and
+:data:`RUNG_COUNTERS` are the audit inventories: every typed refusal
+kind and every ladder rung maps onto a registry counter name, and a
+test walks those inventories against the catalog.
+
+Pass ``tracer=`` (a :class:`~repro.obs.trace.Tracer`) to record one
+``frontdoor.request`` span tree per request: admission → queue →
+shed/service children at *virtual* timestamps, with the engine subtree
+(``engine.read_many`` down to ``kernel.scan_launch``) hanging under
+the ``frontdoor.service`` span when the launched group has one member,
+or under a shared ``frontdoor.batch`` root (cross-linked by a
+``batch`` attribute) when several requests coalesce. Completed trees
+feed a :class:`~repro.obs.export.SlowQueryLog` keeping the K slowest
+by virtual latency. Frontdoor span timestamps are virtual-clock
+quantities; engine/kernel spans below them use the tracer's own clock,
+so within one tree the frontdoor stage walls (queue + service) sum to
+the client-observed ``latency_s`` while engine spans carry honest
+measured walls.
+
 Determinism
 ===========
 
@@ -84,15 +111,65 @@ from repro.core import (
     slab_bounds_many,
 )
 from repro.ft.detector import LatencyEWMA
+from repro.obs import MetricsRegistry, SlowQueryLog, Span, Tracer
 from repro.serving.admission import Bulkhead, RetryAfter, TokenBucket
 
-__all__ = ["FrontDoor", "Request", "Response"]
+__all__ = [
+    "FrontDoor",
+    "Request",
+    "Response",
+    "FRONTDOOR_COUNTERS",
+    "REFUSAL_COUNTERS",
+    "RUNG_COUNTERS",
+]
 
 #: response statuses — every request ends in exactly one of these
 OK = "ok"
 REJECTED = "rejected"  # refused at admission (RetryAfter)
 SHED = "shed"  # dropped under overload (priority shed)
 DEADLINE = "deadline"  # budget spent (DeadlineExceeded)
+
+#: every decision counter the front door maintains, in ``stats`` order
+#: (``max_queue_depth`` is a high-water :class:`~repro.obs.metrics.Gauge`,
+#: the rest are counters)
+FRONTDOOR_COUNTERS = (
+    "submitted",
+    "admitted",
+    "served_ok",
+    "rejected_throttle",
+    "rejected_bulkhead",
+    "rejected_queue_full",
+    "shed_overload",
+    "shed_deadline",
+    "consistency_degraded",
+    "degraded_batches",
+    "degrade_recoveries",
+    "hedged_batches",
+    "batches",
+)
+
+#: typed-refusal audit inventory: every :class:`RetryAfter` ``kind``
+#: (plus the front door's own queue-bound refusal) and the two
+#: non-admission refusal paths map onto a registry counter — the
+#: coverage test walks this against the registry catalog
+REFUSAL_COUNTERS = {
+    "rate": "rejected_throttle",  # TokenBucket RetryAfter
+    "bulkhead": "rejected_bulkhead",  # Bulkhead RetryAfter
+    "queue": "rejected_queue_full",  # queue-bound RetryAfter
+    "shed": "shed_overload",  # priority shed (rung 3)
+    "deadline": "shed_deadline",  # DeadlineExceeded (rung 4)
+}
+
+#: degradation-ladder audit inventory: every rung transition that can
+#: fire increments one of these
+RUNG_COUNTERS = {
+    "hedge": "hedged_batches",  # rung 1 engaged for a batch
+    "degrade": "degraded_batches",  # rung 2 engaged for a batch
+    "recover": "degrade_recoveries",  # rung 2 disengaged
+    "consistency": "consistency_degraded",  # per-request rung-2 effect
+    "shed": "shed_overload",  # rung 3 victims
+    "deadline": "shed_deadline",  # rung 4 refusals
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,12 +224,14 @@ class _Queued:
     idx: int
     req: Request
     compartment: tuple[str, int] | None
+    span: Span | None = None  # frontdoor.request root (tracing on)
+    queue_span: Span | None = None  # open frontdoor.queue child
 
 
 class FrontDoor:
     """Continuous-batching, overload-safe serving layer over one
     :class:`~repro.core.HREngine` (see module docstring for the
-    degradation ladder and determinism model).
+    degradation ladder, observability, and determinism model).
 
     Parameters
     ----------
@@ -172,6 +251,15 @@ class FrontDoor:
     hedge_wait_factor, degrade_wait_factor, shed_fill:
         The ladder thresholds, in units of ``max_wait`` (rungs 1–3
         above).
+    metrics:
+        Registry for the decision counters and latency histograms; a
+        private one is created when omitted.
+    tracer, slow_log, slow_log_k:
+        Optional request tracing: with ``tracer`` set, every request
+        grows a ``frontdoor.request`` span tree and completed trees
+        are offered to ``slow_log`` (a fresh
+        :class:`~repro.obs.export.SlowQueryLog` of capacity
+        ``slow_log_k`` when not supplied).
     """
 
     def __init__(
@@ -189,6 +277,10 @@ class FrontDoor:
         shed_fill: float = 0.9,
         ewma_alpha: float = 0.2,
         ewma_warmup: int = 8,
+        metrics: MetricsRegistry | None = None,
+        tracer: Tracer | None = None,
+        slow_log: SlowQueryLog | None = None,
+        slow_log_k: int = 16,
     ) -> None:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -218,28 +310,43 @@ class FrontDoor:
         self.queue_wait = LatencyEWMA(alpha=ewma_alpha)
         self.ewma_warmup = int(ewma_warmup)
         self._degraded = False  # current ladder state (for recovery count)
-        self._stats: dict[str, float] = {
-            "submitted": 0,
-            "admitted": 0,
-            "served_ok": 0,
-            "rejected_throttle": 0,
-            "rejected_bulkhead": 0,
-            "rejected_queue_full": 0,
-            "shed_overload": 0,
-            "shed_deadline": 0,
-            "consistency_degraded": 0,
-            "degraded_batches": 0,
-            "degrade_recoveries": 0,
-            "hedged_batches": 0,
-            "batches": 0,
-            "max_queue_depth": 0,
-        }
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._ctr = {n: self.metrics.counter(n) for n in FRONTDOOR_COUNTERS}
+        self._depth_gauge = self.metrics.gauge("max_queue_depth")
+        self._h_queue_wait = self.metrics.histogram("queue_wait_seconds")
+        self._h_latency = self.metrics.histogram("request_latency_seconds")
+        self._h_service = self.metrics.histogram("batch_service_seconds")
+        self.tracer = tracer
+        if slow_log is not None:
+            self.slow_log = slow_log
+        else:
+            self.slow_log = SlowQueryLog(slow_log_k) if tracer is not None else None
 
     @property
     def stats(self) -> dict[str, float]:
-        """Copy of the decision counters (every ladder rung and every
-        admission refusal increments one of these)."""
-        return dict(self._stats)
+        """Read-through dict view of the decision counters (every
+        ladder rung and every admission refusal increments one of
+        these; ``max_queue_depth`` is the queue-depth high-water
+        mark)."""
+        d: dict[str, float] = {n: int(c.value) for n, c in self._ctr.items()}
+        d["max_queue_depth"] = int(self._depth_gauge.value)
+        return d
+
+    def reset_stats(self) -> None:
+        """Zero every counter, gauge, and histogram in one registry
+        reset (handles stay live)."""
+        self.metrics.reset()
+
+    # -- tracing helpers ---------------------------------------------------
+
+    def _finish(self, entry: _Queued, t: float, latency: float, **attrs: Any) -> None:
+        """End a request's root span at virtual time ``t`` and offer
+        the completed tree to the slow-query log."""
+        if entry.span is None:
+            return
+        entry.span.end(t=t, **attrs)
+        if self.slow_log is not None:
+            self.slow_log.offer(entry.span, latency=latency)
 
     # -- admission ---------------------------------------------------------
 
@@ -261,26 +368,40 @@ class FrontDoor:
         """Admission at virtual arrival time: queue bound, token
         bucket, bulkhead — first refusal wins and becomes an explicit
         ``rejected`` response."""
-        self._stats["submitted"] += 1
-        if len(queue) >= self.max_queue:
-            self._stats["rejected_queue_full"] += 1
+        self._ctr["submitted"].inc()
+        root: Span | None = None
+        adm: Span | None = None
+        if self.tracer is not None:
+            root = self.tracer.root(
+                "frontdoor.request",
+                t=req.arrival_s,
+                idx=idx,
+                level=req.consistency,
+            )
+            adm = root.child("frontdoor.admission", t=req.arrival_s)
+
+        def _reject(kind: str, error: str, retry_after_s: float) -> None:
+            self._ctr[REFUSAL_COUNTERS[kind]].inc()
+            if root is not None:
+                adm.end(t=req.arrival_s, outcome=f"rejected_{kind}")
+                root.end(t=req.arrival_s, error="RetryAfter", status=REJECTED)
+                if self.slow_log is not None:
+                    self.slow_log.offer(root, latency=0.0)
             responses[idx] = Response(
                 status=REJECTED,
-                error="RetryAfter: queue full",
-                retry_after_s=self.max_wait,
-                consistency_used=None,
+                error=error,
+                retry_after_s=retry_after_s,
             )
+
+        if len(queue) >= self.max_queue:
+            e = RetryAfter(self.max_wait, "queue full", kind="queue")
+            _reject(e.kind, f"RetryAfter: {e.reason}", e.retry_after_s)
             return
         if self.bucket is not None:
             try:
                 self.bucket.admit(req.arrival_s)
             except RetryAfter as e:
-                self._stats["rejected_throttle"] += 1
-                responses[idx] = Response(
-                    status=REJECTED,
-                    error=f"RetryAfter: {e.reason}",
-                    retry_after_s=e.retry_after_s,
-                )
+                _reject(e.kind, f"RetryAfter: {e.reason}", e.retry_after_s)
                 return
         comp = None
         if self.bulkhead is not None:
@@ -290,22 +411,35 @@ class FrontDoor:
             try:
                 self.bulkhead.acquire(comp)
             except RetryAfter as e:
-                self._stats["rejected_bulkhead"] += 1
-                responses[idx] = Response(
-                    status=REJECTED,
-                    error=f"RetryAfter: {e.reason}",
-                    retry_after_s=e.retry_after_s,
-                )
+                _reject(e.kind, f"RetryAfter: {e.reason}", e.retry_after_s)
                 return
-        self._stats["admitted"] += 1
-        queue.append(_Queued(idx, req, comp))
-        self._stats["max_queue_depth"] = max(
-            self._stats["max_queue_depth"], len(queue)
-        )
+        self._ctr["admitted"].inc()
+        entry = _Queued(idx, req, comp)
+        if root is not None:
+            adm.end(t=req.arrival_s, outcome="admitted")
+            entry.span = root
+            entry.queue_span = root.child("frontdoor.queue", t=req.arrival_s)
+        queue.append(entry)
+        self._depth_gauge.max(len(queue))
 
     def _release(self, entry: _Queued) -> None:
         if self.bulkhead is not None and entry.compartment is not None:
             self.bulkhead.release(entry.compartment)
+
+    def _refuse_queued(self, entry: _Queued, now: float, reason: str) -> float:
+        """Shared shed/deadline bookkeeping for a queued entry: release
+        the bulkhead slot, close its spans at virtual ``now``, and
+        return the virtual wait (== latency for a queue refusal)."""
+        self._release(entry)
+        wait = now - entry.req.arrival_s
+        if entry.queue_span is not None:
+            entry.queue_span.end(t=now, outcome=reason)
+            entry.queue_span = None
+            entry.span.child("frontdoor.shed", t=now, reason=reason).end(t=now)
+        self._finish(
+            entry, now, wait, status=SHED if reason == "overload" else DEADLINE
+        )
+        return wait
 
     # -- the event loop ----------------------------------------------------
 
@@ -381,13 +515,13 @@ class FrontDoor:
                     if len(queue) <= target:
                         break
                     queue.remove(entry)
-                    self._release(entry)
-                    self._stats["shed_overload"] += 1
+                    self._ctr[REFUSAL_COUNTERS["shed"]].inc()
+                    wait = self._refuse_queued(entry, now, "overload")
                     responses[entry.idx] = Response(
                         status=SHED,
                         error="Shed: queue over shed_fill, lower priority",
-                        latency_s=now - entry.req.arrival_s,
-                        queue_wait_s=now - entry.req.arrival_s,
+                        latency_s=wait,
+                        queue_wait_s=wait,
                     )
                 if not queue:
                     continue
@@ -400,13 +534,13 @@ class FrontDoor:
                 and self.queue_wait.mean() > self.hedge_after
             )
             if degrade:
-                self._stats["degraded_batches"] += 1
+                self._ctr[RUNG_COUNTERS["degrade"]].inc()
                 self._degraded = True
             elif self._degraded:
                 self._degraded = False
-                self._stats["degrade_recoveries"] += 1
+                self._ctr[RUNG_COUNTERS["recover"]].inc()
             if hedge:
-                self._stats["hedged_batches"] += 1
+                self._ctr[RUNG_COUNTERS["hedge"]].inc()
 
             # -- pick the batch: highest priority, then oldest --
             chosen = sorted(
@@ -420,19 +554,19 @@ class FrontDoor:
             for entry in chosen:
                 d = entry.req.deadline_s
                 if d is not None and now - entry.req.arrival_s >= d:
-                    self._release(entry)
-                    self._stats["shed_deadline"] += 1
+                    self._ctr[REFUSAL_COUNTERS["deadline"]].inc()
+                    wait = self._refuse_queued(entry, now, "deadline")
                     responses[entry.idx] = Response(
                         status=DEADLINE,
                         error=str(DeadlineExceeded(d)),
-                        latency_s=now - entry.req.arrival_s,
-                        queue_wait_s=now - entry.req.arrival_s,
+                        latency_s=wait,
+                        queue_wait_s=wait,
                     )
                 else:
                     ready.append(entry)
 
             # -- launch: one read_many per (cf, effective consistency) --
-            self._stats["batches"] += 1
+            self._ctr["batches"].inc()
             groups: dict[tuple[str, str], list[_Queued]] = {}
             for entry in ready:
                 level = ONE if degrade else entry.req.consistency
@@ -472,6 +606,48 @@ class FrontDoor:
             if m.req.deadline_s is not None
         ]
         deadline_s = max(budgets) if len(budgets) == len(members) else None
+
+        # span plumbing: one frontdoor.service child per traced member;
+        # the engine subtree parents under the sole service span when
+        # the group has one member (one tree per request, down to the
+        # kernel launch), or under a shared frontdoor.batch root that
+        # each member's service span points at via its ``batch`` attr
+        svc_spans: list[Span] = []
+        batch_span: Span | None = None
+        trace: Span | None = None
+        if self.tracer is not None:
+            for m in members:
+                if m.span is None:
+                    continue
+                if m.queue_span is not None:
+                    m.queue_span.end(t=launch, outcome="launched")
+                    m.queue_span = None
+                svc_spans.append(
+                    m.span.child(
+                        "frontdoor.service",
+                        t=launch,
+                        cf=cf_name,
+                        level=level,
+                        hedged=hedge,
+                        degraded=degrade,
+                        queries=len(members),
+                    )
+                )
+            if len(svc_spans) == 1:
+                trace = svc_spans[0]
+            elif svc_spans:
+                batch_span = self.tracer.root(
+                    "frontdoor.batch",
+                    t=launch,
+                    cf=cf_name,
+                    level=level,
+                    queries=len(members),
+                    hedged=hedge,
+                )
+                for s in svc_spans:
+                    s.annotate(batch=batch_span.span_id)
+                trace = batch_span
+
         t0 = time.perf_counter()
         try:
             out = self.engine.read_many(
@@ -481,32 +657,49 @@ class FrontDoor:
                 hedge_ratio=1.0 if hedge else 2.0,
                 consistency=level,
                 deadline_s=deadline_s,
+                trace=trace,
             )
         except DeadlineExceeded as e:
             wall = time.perf_counter() - t0
+            done = launch + wall
+            if batch_span is not None:
+                batch_span.end(t=done, error="DeadlineExceeded")
+            for s in svc_spans:
+                s.end(t=done, outcome="deadline")
             for m in members:
                 self._release(m)
-                self._stats["shed_deadline"] += 1
+                self._ctr[REFUSAL_COUNTERS["deadline"]].inc()
+                latency = done - m.req.arrival_s
+                self._h_latency.observe(latency)
+                self._finish(m, done, latency, status=DEADLINE)
                 responses[m.idx] = Response(
                     status=DEADLINE,
                     error=str(e),
-                    latency_s=launch + wall - m.req.arrival_s,
+                    latency_s=latency,
                     queue_wait_s=launch - m.req.arrival_s,
                 )
             return wall
         wall = time.perf_counter() - t0
         reported = sum(rep.wall_seconds for _sr, rep in out)
         service = max(wall, reported)
+        self._h_service.observe(service)
         done = launch + service
+        if batch_span is not None:
+            batch_span.end(t=done)
+        for s in svc_spans:
+            s.end(t=done)
         for m, (sr, rep) in zip(members, out):
             self._release(m)
             q_wait = launch - m.req.arrival_s
             self.queue_wait.record(q_wait)
+            self._h_queue_wait.observe(q_wait)
             latency = done - m.req.arrival_s
+            self._h_latency.observe(latency)
             d = m.req.deadline_s
             if d is not None and latency > d:
                 # the answer exists but landed late — refuse it openly
-                self._stats["shed_deadline"] += 1
+                self._ctr[REFUSAL_COUNTERS["deadline"]].inc()
+                self._finish(m, done, latency, status=DEADLINE)
                 responses[m.idx] = Response(
                     status=DEADLINE,
                     error=str(DeadlineExceeded(d)),
@@ -514,10 +707,11 @@ class FrontDoor:
                     queue_wait_s=q_wait,
                 )
                 continue
-            self._stats["served_ok"] += 1
+            self._ctr["served_ok"].inc()
             was_degraded = degrade and m.req.consistency != level
             if was_degraded:
-                self._stats["consistency_degraded"] += 1
+                self._ctr[RUNG_COUNTERS["consistency"]].inc()
+            self._finish(m, done, latency, status=OK)
             responses[m.idx] = Response(
                 status=OK,
                 result=sr,

@@ -432,9 +432,9 @@ class TestHedgeConsistency:
         calls = []
         orig = eng._scan_with_cache
 
-        def spy(cf, r, group):
+        def spy(cf, r, group, trace=None):
             calls.append((r.replica_id, len(group)))
-            return orig(cf, r, group)
+            return orig(cf, r, group, trace=trace)
 
         eng._scan_with_cache = spy
         plain, _ = eng.read("cf", q)
@@ -459,9 +459,9 @@ class TestHedgeConsistency:
         calls = []
         orig = eng._scan_with_cache
 
-        def spy(cf, r, group):
+        def spy(cf, r, group, trace=None):
             calls.append(r.replica_id)
-            return orig(cf, r, group)
+            return orig(cf, r, group, trace=trace)
 
         eng._scan_with_cache = spy
         _res, _rep = eng.read("cf", q, hedge=True, consistency=ALL)
