@@ -42,8 +42,8 @@ import json
 
 import numpy as np
 
-from repro.core import HREngine, Query, SortedTable
-from repro.core.tpch import generate_orders, orders_schema, q1_q2_workload
+from repro.core import HREngine, Query, Range, SortedTable
+from repro.core.tpch import generate_orders, n_custkey, orders_schema, q1_q2_workload
 from repro.kernels import table_execute_device_many, table_scan_device_many
 
 from .common import record, time_fn
@@ -135,6 +135,86 @@ def run_device(
         record(
             f"batched/device_bs{bs}_fused", t_fu / bs * 1e6,
             f"qps={res['fused_qps']:.0f};vs_rowgrid={res['fused_over_rowgrid']:.2f}x",
+        )
+    return out
+
+
+def run_views(
+    n_rows: int = 120_000,
+    batch_sizes=(16, 64, 256),
+    seed: int = 0,
+    repeats: int = 3,
+    best: bool = False,
+) -> dict:
+    """Materialized per-slab views vs the fused full scan, one replica.
+
+    The batch is all *view-eligible wide-slab* aggregates — a range on
+    the leading layout column covering a large key span, so the fused
+    engine streams most of the table while the view path reads stored
+    block partials plus at most two boundary rescans per (query, run).
+    This is the workload the views tentpole targets: O(blocks touched)
+    vs O(N). Answers are cross-checked BITWISE against the fused launch
+    before timing (the views correctness bar — same float32 partials,
+    same sequential block-order fold). Returns
+    ``{batch_size: {views_qps, fused_qps, views_over_fused_speedup}}``.
+    """
+    kc, vc = generate_orders(1.0, seed=seed, rows_per_sf=n_rows)
+    rng = np.random.default_rng(seed + 7)
+    nck = n_custkey(n_rows)
+    queries_all = []
+    for i in range(max(batch_sizes)):
+        lo = int(rng.integers(0, nck // 4))
+        hi = int(rng.integers(nck // 2, nck + 1))
+        queries_all.append(
+            Query(
+                filters={"custkey": Range(lo, hi)},
+                agg="sum" if i % 2 == 0 else "count",
+                value_col="totalprice",
+            )
+        )
+    tv = SortedTable.from_columns(
+        kc, vc, ("custkey", "orderdate", "clerk"), orders_schema()
+    ).place_on_device()
+    tv.build_views()
+    tf = SortedTable.from_columns(
+        kc, vc, ("custkey", "orderdate", "clerk"), orders_schema()
+    ).place_on_device()
+
+    out: dict = {}
+    for bs in batch_sizes:
+        queries = queries_all[:bs]
+        # warm up both paths (jit compile outside the timing) and hold
+        # the bit-identity bar: view answers == fused answers, exactly
+        stats: dict = {}
+        rv = tv.execute_many(queries, view_stats=stats)
+        rf = table_execute_device_many(tf, queries)
+        assert stats.get("hits") == bs, "a views bench query missed the view path"
+        for q, a, b in zip(queries, rv, rf):
+            assert a.value == b.value, f"view answer diverged from fused: {q}"
+            assert a.rows_matched == b.rows_matched
+            assert a.rows_scanned == b.rows_scanned
+
+        t_vw, _ = time_fn(
+            lambda: tv.execute_many(queries), repeats=repeats, best=best
+        )
+        t_fu, _ = time_fn(
+            lambda: table_execute_device_many(tf, queries),
+            repeats=repeats, best=best,
+        )
+        res = {
+            "views_qps": bs / max(t_vw, 1e-12),
+            "fused_qps": bs / max(t_fu, 1e-12),
+        }
+        res["views_over_fused_speedup"] = res["views_qps"] / res["fused_qps"]
+        out[bs] = res
+        record(
+            f"views/bs{bs}_fused", t_fu / bs * 1e6,
+            f"qps={res['fused_qps']:.0f}",
+        )
+        record(
+            f"views/bs{bs}_views", t_vw / bs * 1e6,
+            f"qps={res['views_qps']:.0f};"
+            f"vs_fused={res['views_over_fused_speedup']:.2f}x",
         )
     return out
 

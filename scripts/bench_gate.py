@@ -20,7 +20,12 @@ the open-loop per-load ``*_p99_us`` latencies — the one family gated
 LOWER-is-better: a p99 more than 2x ``--tol`` above baseline fails
 (tails are noisier than best-of-N throughputs, and the regressions
 worth catching inflate them 5-10x); shed/degrade/ok rates stay
-descriptive).
+descriptive), and views (materialized per-slab aggregates vs the fused
+full scan: ``views_qps``/``fused_qps`` plus the one gated *ratio*
+family, ``views_over_fused_speedup`` — the tentpole's O(blocks
+touched) advantage must not silently erode even if both absolute
+throughputs drift together; the older ``hr_speedup``/``tr_speedup``/
+``hint_speedup`` ratios remain descriptive as documented).
 
 Besides the baseline comparison, one *absolute* guard runs every time:
 the serving benchmark's ``trace_overhead`` (traced vs untraced
@@ -61,6 +66,10 @@ def flatten_qps(d: dict, prefix: str = "") -> dict[str, float]:
             str(k).endswith("_qps")
             or str(k).endswith("_rows_per_sec")
             or str(k).endswith("p99_us")
+            # the one gated ratio family: the views tentpole's speedup
+            # over the fused scan (named so legacy descriptive ratios
+            # — hr_speedup, hint_speedup, ... — stay ungated)
+            or str(k).endswith("_over_fused_speedup")
         ):
             out[key] = float(v)
     return out
@@ -121,7 +130,7 @@ def main() -> int:
     flat: dict[str, float] = {}
     for section in (
         "batched", "write_queue", "recovery", "partitioned", "availability",
-        "serving",
+        "serving", "views",
     ):
         flat.update(flatten_qps(smoke.get(section, {}), section))
     # parallel_merge measures thread-pool scheduling, which at smoke

@@ -31,6 +31,18 @@ python -m repro.obs "$chaos_trace" --unit ticks --top 1 > /dev/null
 python -m repro.ft.chaos --overload --seeds 2 --trace "$overload_trace"
 python -m repro.obs "$overload_trace" --top 1 > /dev/null
 
+# materialized-view chaos smoke: the same fault schedule on
+# device-resident column families with per-slab aggregate views —
+# view-routed answers must stay bit-identical to the no-fault oracle
+# and the stored partials must verify after heal (repro/ft/chaos.py)
+python -m repro.ft.chaos --views --seeds 2 --steps 14
+
+# views bench smoke on its own first (fast import/shape check for the
+# newest section), then the full registered-benchmark smoke pass whose
+# JSON feeds the regression gate (views_qps and the gated
+# views_over_fused_speedup ratio included — see scripts/bench_gate.py)
+python -m benchmarks.run --smoke --only views > /dev/null
+
 smoke_json="$(mktemp)"
 trap 'rm -f "$smoke_json" "$chaos_trace" "$overload_trace"' EXIT
 python -m benchmarks.run --smoke --json "$smoke_json"

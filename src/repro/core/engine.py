@@ -174,6 +174,13 @@ from .keys import KeySchema, pack_columns
 from .ring import Partition, ReplicaHandle, TokenHistogram, TokenRing, place_replica
 from .storage import CommitLog, CompactionPolicy, Memtable, compact_table
 from .storage.memtable import combine_digests, sort_run
+from .storage.views import (
+    VIEW_AGGS,
+    VIEW_ROWS_CAP,
+    query_view_eligible,
+    verify_views,
+    view_eligible_matrix,
+)
 from .table import ScanResult, SortedTable, merge_partial_scans, slab_bounds_many
 from .workload import Query, Workload
 
@@ -195,6 +202,7 @@ __all__ = [
     "ENGINE_COUNTERS",
     "FAULT_COUNTERS",
     "REPAIR_COUNTERS",
+    "VIEW_COUNTERS",
 ]
 
 #: Tunable read consistency levels (Cassandra's CL, read side): how
@@ -278,6 +286,9 @@ ENGINE_COUNTERS = (
     "flush_faults",
     "corrupt_runs",
     "flush_wall_seconds",
+    "view_hits",
+    "view_boundary_rows",
+    "view_rebuilds",
 )
 
 #: Typed refusal/fault → the registry counter that records it. Every
@@ -298,6 +309,18 @@ REPAIR_COUNTERS = (
     "hint_fallbacks",
     "read_repairs",
     "scrub_repairs",
+)
+
+#: Materialized per-slab aggregate views (PR-10): queries the view path
+#: answered, window-edge rows its boundary rescan touched, and full
+#: partial rebuilds (create excluded; compaction / migration / recovery
+#: / scrub heal included). Audited like the repair inventory — each
+#: name must resolve in the registry catalog and move when its path
+#: runs.
+VIEW_COUNTERS = (
+    "view_hits",
+    "view_boundary_rows",
+    "view_rebuilds",
 )
 
 
@@ -374,6 +397,12 @@ class ColumnFamily:
     # group-commit staging threshold (0 = write-through: every write
     # flushes); the per-partition durable state lives on ``partitions``
     memtable_rows: int = 0
+    # materialized per-slab aggregate views (storage.views): every
+    # replica table carries per-block partial sums in its own sort
+    # order; view-eligible aggregates are served O(blocks touched) and
+    # the Cost Evaluator caps their row estimate at VIEW_ROWS_CAP.
+    # Requires device_resident
+    views: bool = False
     # observed-token histogram (P > 1 only): fed by CREATE and every
     # write, read by the rebalance drift trigger and the histogram
     # boundary proposal
@@ -639,6 +668,13 @@ class HREngine:
         # a read barrier triggers, which are write-path cost and NOT
         # attributed to any ReadReport.wall_seconds)
         self._flush_wall = self.metrics.counter("flush_wall_seconds")
+        # materialized per-slab aggregate views: queries answered from
+        # block partials, window-edge rows the boundary rescan touched,
+        # and full view rebuilds (create / compaction / migration /
+        # scrub heal — incremental flush extensions are NOT rebuilds)
+        self._view_hits = self.metrics.counter("view_hits")
+        self._view_boundary_rows = self.metrics.counter("view_boundary_rows")
+        self._view_rebuilds = self.metrics.counter("view_rebuilds")
         self._pool: ThreadPoolExecutor | None = None
 
     @property
@@ -726,6 +762,11 @@ class HREngine:
             # neither write()'s return nor any ReadReport.wall_seconds;
             # here is the only place that time is visible
             "flush_wall_seconds": self._flush_wall.value,
+            # materialized aggregate views: view-routed answers, edge
+            # rows the boundary rescan touched, full rebuilds
+            "view_hits": int(self._view_hits.value),
+            "view_boundary_rows": int(self._view_boundary_rows.value),
+            "view_rebuilds": int(self._view_rebuilds.value),
         }
 
     def reset_stats(self) -> None:
@@ -840,6 +881,7 @@ class HREngine:
         hrca_kwargs: dict | None = None,
         layouts: Sequence[Sequence[str]] | None = None,
         device_resident: bool = False,
+        views: bool = False,
         memtable_rows: int | None = None,
         compaction: CompactionPolicy | None = None,
         partitions: int = 1,
@@ -862,6 +904,18 @@ class HREngine:
         resident arrays (incremental placement — no re-upload), and
         recovery re-places rebuilt tables. Raises if the schema exceeds
         the device path's per-column two-lane budget.
+
+        ``views=True`` (requires ``device_resident``) additionally
+        materializes per-slab aggregate views on every replica table:
+        per-block partial sums of the value tile in that replica's own
+        sort order (``repro.core.storage.views``). View-eligible sum and
+        count queries — slab filters forming a prefix of the layout —
+        are then answered from the stored partials plus a rescan of at
+        most the two window-edge blocks, O(blocks touched) instead of
+        O(N), bit-identical to the fused full scan. Views extend
+        incrementally at flush, rebuild at compaction and migration,
+        and are treated as derived state everywhere else (scrub heals a
+        corrupted view by rebuilding it from the resident arrays).
 
         ``memtable_rows`` (default: the engine's) is the group-commit
         staging threshold — 0 means write-through, every ``write``
@@ -895,6 +949,11 @@ class HREngine:
         """
         if name in self.column_families:
             raise ValueError(f"column family {name!r} exists")
+        if views and not device_resident:
+            raise ValueError(
+                "views=True requires device_resident=True (views are "
+                "per-block partials of the resident value tile)"
+            )
         if schema is None:
             schema = KeySchema.for_columns(key_cols)
         key_names = tuple(key_cols)
@@ -984,6 +1043,8 @@ class HREngine:
                 table = SortedTable.from_columns(kc_p, vc_p, layout, schema)
                 if device_resident:
                     table.place_on_device()
+                    if views:
+                        table.build_views()
                 if self.checksums:
                     if part_digest is None:
                         part_digest = table.seal_checksum().stored_digest
@@ -1028,6 +1089,7 @@ class HREngine:
             cost_model=model,
             hrca_result=hrca_result,
             device_resident=device_resident,
+            views=views,
             memtable_rows=(
                 self.memtable_rows if memtable_rows is None else memtable_rows
             ),
@@ -1065,6 +1127,18 @@ class HREngine:
                 continue
             rows = estimate_rows(cf.stats, r.layout, query)
             cost = cf.cost_model.cost_fn(len(r.layout))(rows)
+            if (
+                cf.views
+                and query.agg in VIEW_AGGS
+                and query_view_eligible(query, r.layout)
+            ):
+                # view term (Eq 1–2 refined): a view-eligible aggregate
+                # touches at most the two window-edge blocks, so its
+                # row estimate is capped — the planner learns that a
+                # view hit beats a full scan regardless of selectivity
+                cost = cf.cost_model.cost_fn(len(r.layout))(
+                    min(rows, float(VIEW_ROWS_CAP))
+                )
             if det is not None:
                 cost *= det.cost_factor(r.node_id)
             ranked.append((cost, rows, r))
@@ -1322,6 +1396,25 @@ class HREngine:
                     for k, r in enumerate(live)
                 ]
             )
+            # view term: cap eligible (replica, query) row estimates.
+            # The any() guard doubles as the all-select fast path — a
+            # batch with no sum/count never walks the eligibility arrays
+            if cf.views and any(q.agg in VIEW_AGGS for q in queries):
+                elig = view_eligible_matrix([r.layout for r in live], queries)
+                if elig.any():
+                    capped = np.minimum(rows_mat, float(VIEW_ROWS_CAP))
+                    cost_mat = np.where(
+                        elig,
+                        np.stack(
+                            [
+                                cf.cost_model.cost_fn(len(r.layout)).many(
+                                    capped[k]
+                                )
+                                for k, r in enumerate(live)
+                            ]
+                        ),
+                        cost_mat,
+                    )
             factors = self._live_cost_factors(live)
             if factors is not None:
                 cost_mat = cost_mat * factors[:, None]
@@ -1471,15 +1564,21 @@ class HREngine:
             if trace is not None and miss_j
             else None
         )
+        vstats = {"hits": 0, "boundary_rows": 0} if cf.views else None
         t0 = self._scan_timer()
         miss_scans = (
-            table.execute_many([group[j] for j in miss_j], trace=sc)
+            table.execute_many(
+                [group[j] for j in miss_j], trace=sc, view_stats=vstats
+            )
             if miss_j
             else []
         )
         wall = (self._scan_timer() - t0) * node.slowdown
         if sc is not None:
             sc.end(rows=int(sum(s.rows_scanned for s in miss_scans)))
+        if vstats is not None and vstats["hits"]:
+            self._view_hits.inc(vstats["hits"])
+            self._view_boundary_rows.inc(vstats["boundary_rows"])
         if miss_j and self.failure_detector is not None:
             # one latency sample per executed group — cache hits are
             # not operations the node performed
@@ -1877,6 +1976,23 @@ class HREngine:
             rows_sub, cost_sub = cf.cost_model.rank_matrices(
                 cf.slot_layouts, group, stats=part.stats
             )
+            # view term: same cap as the single-partition planner, per
+            # (slot layout, group query); the any() guard keeps
+            # all-select batches off the eligibility arrays
+            if cf.views and any(q.agg in VIEW_AGGS for q in group):
+                elig = view_eligible_matrix(cf.slot_layouts, group)
+                if elig.any():
+                    capped = np.minimum(rows_sub, float(VIEW_ROWS_CAP))
+                    cost_sub = np.where(
+                        elig,
+                        np.stack(
+                            [
+                                cf.cost_model.cost_fn(len(lay)).many(capped[s])
+                                for s, lay in enumerate(cf.slot_layouts)
+                            ]
+                        ),
+                        cost_sub,
+                    )
             # scatter the group estimates back to full batch width —
             # _execute_group indexes them by global query index
             rows_mat = np.zeros((n_slots, n_q))
@@ -2176,6 +2292,9 @@ class HREngine:
                     table = SortedTable.from_columns(kc, vc, layout, cf.schema)
                     if cf.device_resident:
                         table.place_on_device()
+                    # a resharded vnode's views are re-derived over its
+                    # sliced rows; untouched (kept) vnodes keep theirs
+                    self._ensure_views(cf, table)
                     if self.checksums:
                         table.seal_checksum()
                     self.nodes[node_id].tables[(cf.name, rid)] = table
@@ -2417,7 +2536,7 @@ class HREngine:
                     )
                 table = node.tables[(cf.name, r.replica_id)]
                 fm = fs.child("engine.flush_merge") if fs is not None else None
-                merged = table.merge_run(run)
+                merged = table.merge_run(run, trace=fm)
                 if fm is not None:
                     fm.end()
                 if self.checksums:
@@ -2446,6 +2565,7 @@ class HREngine:
         for r, merged in merged_tables:
             if cf.device_resident and not merged.device_resident:
                 merged.place_on_device()
+            self._ensure_views(cf, merged)
             self.nodes[r.node_id].tables[(cf.name, r.replica_id)] = merged
             self._memtable(cf, r).clear()
             self._flushes.inc()
@@ -2462,6 +2582,11 @@ class HREngine:
                     # content unchanged by compaction, so the sealed
                     # multiset digest carries over as-is
                     self._compactions.inc()
+                    if merged.has_views:
+                        # compact_runs re-derived the per-block partials
+                        # over the collapsed run stack (full rebuild —
+                        # block boundaries moved with the row order)
+                        self._view_rebuilds.inc()
                     self._invalidate_result_cache(cf.name, replica_id=r.replica_id)
                     if trace is not None:
                         # retroactive span: only compactions that ran
@@ -2495,6 +2620,29 @@ class HREngine:
                         part.flushed_lsn[rid] = log.next_lsn
                     self._auto_checkpoints.inc()
         self._flush_wall.inc(time.perf_counter() - t0)
+
+    def _ensure_views(
+        self, cf: ColumnFamily, table: SortedTable, *, count: bool = True
+    ) -> None:
+        """Materialize a views CF's per-block partials on ``table`` if
+        absent (full rebuild from the resident arrays, counted under
+        ``view_rebuilds`` unless ``count=False``).
+
+        Views are *derived* state, so every site that rebuilds or
+        replaces a replica table — flush fallback, migration reshard,
+        log-replay recovery, node_up heal, scrub repair — funnels
+        through here right where it already invalidates the result
+        cache: the two caches share one invalidation discipline (stale
+        content never outlives the table swap that produced it).
+        Tables that already carry views (the incremental ``merge_run``
+        extension, or ``compact_runs``' own rebuild) are left alone."""
+        if not cf.views or table.has_views:
+            return
+        if not table.device_resident:
+            table.place_on_device()
+        table.build_views()
+        if count:
+            self._view_rebuilds.inc()
 
     def _memtable(self, cf: ColumnFamily, r: ReplicaHandle) -> Memtable:
         return cf.partitions[r.partition_id].memtables[r.replica_id]
@@ -2637,6 +2785,7 @@ class HREngine:
             rebuilt = src.resorted(r.layout)
         if cf.device_resident:
             rebuilt.place_on_device()
+        self._ensure_views(cf, rebuilt)
         if self.checksums:
             rebuilt.seal_checksum()
         return rebuilt
@@ -2722,6 +2871,7 @@ class HREngine:
                         merged = table.merge_run(run)
                         if cf.device_resident and not merged.device_resident:
                             merged.place_on_device()
+                        self._ensure_views(cf, merged)
                         if self.checksums:
                             if table.stored_digest is not None:
                                 merged.stored_digest = combine_digests(
@@ -2803,6 +2953,12 @@ class HREngine:
         ``{"replicas_checked", "corrupt", "repaired"}``; with
         ``repair=False`` corruption is only reported. Replicas without a
         sealed checksum (``checksums=False`` engines) verify trivially.
+
+        On a views CF the sweep also audits the *derived* per-block
+        partials against a fresh recompute from the (just-verified)
+        resident arrays: a corrupted or missing view is healed by
+        rebuild — no log replay, the base arrays are the ground truth —
+        and counted under both ``scrub_repairs`` and ``view_rebuilds``.
         """
         cf = self.column_families[cf_name]
         checked = 0
@@ -2819,6 +2975,21 @@ class HREngine:
                 checked += 1
                 self._scrub_checks.inc()
                 if table.verify_checksum():
+                    if cf.views and (
+                        not table.has_views or not verify_views(table)
+                    ):
+                        # base arrays verified, derived partials did
+                        # not: heal from the arrays themselves — one
+                        # kernel pass, no log replay
+                        corrupt.append(r.replica_id)
+                        if repair:
+                            table.build_views()
+                            self._view_rebuilds.inc()
+                            self._scrub_repairs.inc()
+                            self._invalidate_result_cache(
+                                cf.name, replica_id=r.replica_id
+                            )
+                            repaired += 1
                     continue
                 corrupt.append(r.replica_id)
                 if repair:

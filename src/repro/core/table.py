@@ -302,6 +302,51 @@ class SortedTable:
     def device_resident(self) -> bool:
         return self._device is not None
 
+    # -- materialized per-slab views ----------------------------------------
+
+    def build_views(self, *, use_pallas: bool = True, trace=None) -> "SortedTable":
+        """(Re)build the materialized per-slab aggregate view over the
+        resident arrays (``repro.core.storage.views``): per-block
+        float32 partial sums of the value tile plus the per-run packed
+        key index. Views are *derived* state — this is also the heal
+        path when scrub finds a corrupted partial. Requires device
+        residency. Returns ``self`` for chaining."""
+        from .storage.views import build_views_state
+
+        if self._device is None:
+            raise ValueError("build_views requires a device-resident table")
+        vb = (
+            trace.child("view.build", rows=len(self))
+            if trace is not None
+            else None
+        )
+        self._device["views"] = build_views_state(
+            self._device, self.packed, use_pallas=use_pallas
+        )
+        if vb is not None:
+            vb.end()
+        return self
+
+    @property
+    def has_views(self) -> bool:
+        return self._device is not None and "views" in self._device
+
+    def _view_eligible(self, query: Query) -> bool:
+        """Queries the view answers bit-identically to the fused scan:
+        sum/count whose filters the slab walk fully consumes on this
+        layout (no residual predicate), with the view built and sum
+        value columns resident."""
+        from .storage.views import query_view_eligible
+
+        return (
+            self.has_views
+            and query_view_eligible(query, self.layout)
+            and (
+                query.agg != "sum"
+                or query.value_col in self._device["value_rows"]
+            )
+        )
+
     def _device_eligible(self, query: Query) -> bool:
         """Queries the device path answers end-to-end: sum/count
         aggregations and "select" row emission (fused locate+scan plus
@@ -332,7 +377,7 @@ class SortedTable:
 
         return self.merge_run(sort_run(key_cols, value_cols, self.layout, self.schema))
 
-    def merge_run(self, run) -> "SortedTable":
+    def merge_run(self, run, *, trace=None) -> "SortedTable":
         """Merge one presorted run (memtable flush → SSTable merge).
 
         ``run`` carries ``key_cols``/``value_cols``/``packed`` already
@@ -396,6 +441,21 @@ class SortedTable:
             merged._device = device_state_append(
                 self._device, merged, run.key_cols, run.value_cols, pos
             )
+            if "views" in self._device and m > 0:
+                # extend the materialized view O(run): only blocks at or
+                # after the append point refold (storage.views)
+                from .storage.views import extend_views_state
+
+                vb = (
+                    trace.child("view.build", rows=m, incremental=True)
+                    if trace is not None
+                    else None
+                )
+                merged._device["views"] = extend_views_state(
+                    self._device["views"], merged._device, new_packed, n_old
+                )
+                if vb is not None:
+                    vb.end()
         return merged
 
     def compact_runs(self, *, use_pallas: bool = True) -> "SortedTable":
@@ -409,7 +469,13 @@ class SortedTable:
         if self._device is not None and self._device.get("n_runs", 1) > 1:
             from repro.kernels import merge_device_runs
 
+            had_views = "views" in self._device
             self._device = merge_device_runs(self._device, use_pallas=use_pallas)
+            if had_views:
+                # compaction permuted the resident arrays into one
+                # sorted run: rebuild the view whole (per-run partials
+                # cannot be permuted cheaper than refolding)
+                self.build_views(use_pallas=use_pallas)
         return self
 
     # -- reads ---------------------------------------------------------------
@@ -457,6 +523,10 @@ class SortedTable:
         ``execute_many`` compute per-query results identically; numpy is
         the reference engine and the path for host tables.
         """
+        if self._view_eligible(query):
+            from .storage.views import serve_view_many
+
+            return serve_view_many(self, [query])[0]
         if self._device_eligible(query):
             from repro.kernels import table_execute_device_many
 
@@ -465,7 +535,7 @@ class SortedTable:
         return self._scan_slab(query, lo, hi)
 
     def execute_many(
-        self, queries: Sequence[Query], *, trace=None
+        self, queries: Sequence[Query], *, trace=None, view_stats=None
     ) -> list[ScanResult]:
         """Batched ``execute``.
 
@@ -483,15 +553,37 @@ class SortedTable:
 
         ``trace`` (an open :class:`repro.obs.Span`, or None) records
         the device launches as ``kernel.scan_launch`` /
-        ``kernel.select_compact`` children and the numpy fallback as
-        ``engine.host_scan`` — the deepest tier of the read-path span
-        tree.
+        ``kernel.select_compact`` children, view hits as ``view.serve``
+        and the numpy fallback as ``engine.host_scan`` — the deepest
+        tier of the read-path span tree.
+
+        When the table carries a materialized view
+        (:meth:`build_views`), view-eligible queries (sum/count fully
+        consumed by the slab walk) are answered from the stored
+        per-block partials — O(blocks touched) instead of the O(N)
+        fused stream, bit-identical by construction — and
+        ``view_stats`` (a dict, or None) receives their ``hits`` /
+        ``boundary_rows`` tallies for the engine's counters.
         """
         queries = list(queries)
         if not queries:
             return []
         results: list[ScanResult | None] = [None] * len(queries)
-        dev_idx = [i for i, q in enumerate(queries) if self._device_eligible(q)]
+        view_idx = [i for i, q in enumerate(queries) if self._view_eligible(q)]
+        if view_idx:
+            from .storage.views import serve_view_many
+
+            out = serve_view_many(
+                self, [queries[i] for i in view_idx], trace=trace,
+                view_stats=view_stats,
+            )
+            for i, r in zip(view_idx, out):
+                results[i] = r
+        dev_idx = [
+            i
+            for i, q in enumerate(queries)
+            if results[i] is None and self._device_eligible(q)
+        ]
         if dev_idx:
             from repro.kernels import table_execute_device_many
 

@@ -67,7 +67,7 @@ from repro.core import (
     TransientFault,
     random_workload,
 )
-from repro.core.engine import FAULT_COUNTERS, REPAIR_COUNTERS
+from repro.core.engine import FAULT_COUNTERS, REPAIR_COUNTERS, VIEW_COUNTERS
 from repro.ft.detector import FailureDetector
 from repro.ft.straggler import clear_slowdowns, inject_slowdown
 from repro.obs import TickClock, Tracer, dump_jsonl, load_jsonl
@@ -218,9 +218,11 @@ class ChaosHarness:
         n_probes: int = 8,
         probe_every: int = 5,
         memtable_rows: int = 200,
+        views: bool = False,
         tracer: Tracer | None = None,
     ) -> None:
         self.tracer = tracer
+        self.views = bool(views)
         self.schedule = ChaosSchedule.generate(
             seed,
             n_steps=n_steps,
@@ -256,6 +258,12 @@ class ChaosHarness:
             partitions=n_partitions,
             memtable_rows=memtable_rows,
         )
+        if self.views:
+            # materialized-view chaos: BOTH engines go device-resident
+            # with views so the oracle property stays exact — the view
+            # serve path is bit-identical to the fused full scan, and
+            # the heal phase additionally audits the derived partials
+            cf_kwargs.update(device_resident=True, views=True)
         # deterministic scan walls: the detector's routing penalties —
         # and therefore which replica answers each probe — must be a
         # pure function of the schedule, or the same-seed traced runs
@@ -433,12 +441,51 @@ class ChaosHarness:
                 )
         self._probe(failures, "final")
 
+        if self.views:
+            # derived-state audit: after heal every live replica's
+            # per-block partials must re-derive exactly from its
+            # resident arrays, an always-eligible probe must route
+            # through the view path (counted), and its answer must
+            # still match the oracle bit-for-bit
+            from repro.core.storage.views import verify_views
+            from repro.core.workload import Query
+
+            for part in cf_v.partitions:
+                for r in part.replicas:
+                    node = self.victim.nodes[r.node_id]
+                    t = node.tables.get((_CF, r.replica_id))
+                    if t is None or not node.alive:
+                        continue
+                    if not t.has_views or not verify_views(t):
+                        failures.append(
+                            f"replica {r.replica_id}: views diverged from "
+                            "resident arrays after heal"
+                        )
+            hits0 = int(self.victim.stats["view_hits"])
+            probe = Query(agg="count", filters={})
+            want, _ = self.oracle.read(_CF, probe)
+            got, _ = self.victim.read(_CF, probe)
+            if got.value != want.value:
+                failures.append(
+                    f"view probe: count {got.value!r} != {want.value!r}"
+                )
+            if int(self.victim.stats["view_hits"]) <= hits0:
+                failures.append(
+                    "view probe: eligible count did not route through views"
+                )
+            # counter-balance: the heal phase rebuilt at least every
+            # scrub-healed or log-rebuilt replica's views, and the
+            # boundary-row counter only moves with hits
+            st = self.victim.stats
+            if st["view_boundary_rows"] and not st["view_hits"]:
+                failures.append("view_boundary_rows moved without view_hits")
+
         # observability audit: every repair path and typed engine fault
         # the harness can provoke must resolve to a registry counter
         cat = set(self.victim.metrics.catalog())
         missing = [
             n
-            for n in (*REPAIR_COUNTERS, *FAULT_COUNTERS.values())
+            for n in (*REPAIR_COUNTERS, *FAULT_COUNTERS.values(), *VIEW_COUNTERS)
             if n not in cat
         ]
         if missing:
@@ -688,6 +735,14 @@ def main(argv: list[str] | None = None) -> int:
         "instead of the storage-fault schedule",
     )
     ap.add_argument(
+        "--views",
+        action="store_true",
+        help="run the storage-fault schedule on device-resident column "
+        "families with materialized aggregate views: every view-routed "
+        "answer must stay bit-identical to the no-fault oracle and the "
+        "view partials must verify after heal",
+    )
+    ap.add_argument(
         "--trace",
         metavar="OUT.jsonl",
         default=None,
@@ -754,7 +809,8 @@ def main(argv: list[str] | None = None) -> int:
         # restart, so the per-seed dump is byte-stable across runs
         tracer = Tracer(clock=TickClock()) if args.trace is not None else None
         harness = ChaosHarness(
-            seed, n_steps=args.steps, rate=args.rate, tracer=tracer
+            seed, n_steps=args.steps, rate=args.rate, tracer=tracer,
+            views=args.views,
         )
         report = harness.run()
         if tracer is not None:
@@ -768,6 +824,8 @@ def main(argv: list[str] | None = None) -> int:
             "read_retries",
             "scrub_repairs",
         )
+        if args.views:
+            keys += ("view_hits", "view_rebuilds")
         counters = ", ".join(f"{k}={report.stats[k]}" for k in keys)
         print(
             f"seed {seed}: {'OK' if report.ok else 'FAIL'} "

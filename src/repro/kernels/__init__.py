@@ -17,6 +17,12 @@ merge_rank_batched      — merge-path popcount ranks (strict/inclusive
                           windows) behind the k-way run merge
 ecdf_hist               — histogram/ECDF build for the Cost Evaluator
                           (wired into ``TableStats.merge_rows``)
+block_sums              — per-block partial sums of the resident value
+                          tile (the materialized per-slab views;
+                          ``boundary_block_sums`` rescans the two
+                          window-edge blocks with the same reduction
+                          shape, keeping view answers bit-identical to
+                          the fused full scan)
 
 Each kernel ships a pure-jnp oracle in ``ref.py``; ``ops.py`` exposes the
 jit'd public API with CPU interpret-mode fallback. ``build_device_state``
@@ -31,7 +37,10 @@ batches from those arrays with no host searchsorted and no numpy
 fallback.
 """
 
+from .block_agg import block_sums, boundary_block_sums
+from .ref import block_sums_ref
 from .ops import (
+    DEVICE_BLOCK_N,
     build_device_state,
     device_key_plan,
     device_state_append,
@@ -58,6 +67,10 @@ from .ops import (
 )
 
 __all__ = [
+    "DEVICE_BLOCK_N",
+    "block_sums",
+    "block_sums_ref",
+    "boundary_block_sums",
     "build_device_state",
     "device_key_plan",
     "device_state_append",

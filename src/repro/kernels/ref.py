@@ -14,6 +14,7 @@ __all__ = [
     "select_compact_batched_ref",
     "merge_run_positions_ref",
     "ecdf_hist_ref",
+    "block_sums_ref",
 ]
 
 
@@ -223,6 +224,17 @@ def merge_run_positions_ref(
     pos = np.empty(n_rows, np.int64)
     pos[order] = np.arange(n_rows, dtype=np.int64)
     return pos
+
+
+def block_sums_ref(values: jax.Array, *, block_n: int) -> jax.Array:
+    """Oracle for the per-block partial-sum kernel: float32[V, B] with
+    column ``b`` the sum of rows ``[b * block_n, (b + 1) * block_n)``
+    of each value row (rows past N are zero pads)."""
+    values = jnp.asarray(values, jnp.float32)
+    V, N = values.shape
+    n_pad = -(-max(N, 1) // block_n) * block_n
+    v = jnp.pad(values, ((0, 0), (0, n_pad - N)))
+    return jnp.sum(v.reshape(V, n_pad // block_n, block_n), axis=2)
 
 
 def ecdf_hist_ref(col: jax.Array, *, n_bins: int, bin_width: int) -> jax.Array:

@@ -52,6 +52,12 @@ Engine read path (tracer-clock timestamps):
                                    ``misses``
 .. ``engine.scan``                 memtable + sorted-run scan of the
                                    cache misses; attr ``rows``
+.. ``view.serve``                  view-eligible aggregates answered
+                                   from the materialized per-block
+                                   partials (O(blocks touched), no full
+                                   scan); attrs ``queries``,
+                                   ``boundary_rows``,
+                                   ``boundary_blocks``
 .. ``engine.host_scan``            NumPy fallback when the column family
                                    is not device-resident
 .. ``kernel.scan_launch``          fused device locate+scan launch wall
@@ -73,6 +79,10 @@ Engine write path:
 .. ``engine.flush``            one replica flush; attrs ``replica``,
                                ``rows``
 .. ``engine.flush_merge``      sorted-run merge inside a flush
+.. ``view.build``              per-block partial (re)build; attr
+                               ``rows``, plus ``incremental=True`` when
+                               a flush extended the existing partials
+                               in O(run) instead of rebuilding
 .. ``engine.compaction``       run-stack compaction triggered by a flush
 == =========================== ==========================================
 

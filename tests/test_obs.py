@@ -34,7 +34,12 @@ from repro.core import (
     Query,
     TransientFault,
 )
-from repro.core.engine import ENGINE_COUNTERS, FAULT_COUNTERS, REPAIR_COUNTERS
+from repro.core.engine import (
+    ENGINE_COUNTERS,
+    FAULT_COUNTERS,
+    REPAIR_COUNTERS,
+    VIEW_COUNTERS,
+)
 from repro.core.tpch import generate_simulation
 from repro.ft.chaos import ChaosHarness
 from repro.obs import (
@@ -65,13 +70,13 @@ LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
 _CF = "cf"
 
 
-def _engine(n_rows=512, *, device_resident=False, partitions=1, **kw):
+def _engine(n_rows=512, *, device_resident=False, partitions=1, views=False, **kw):
     kc, vc, schema = generate_simulation(n_rows, 3, seed=0)
     kw.setdefault("result_cache", False)
     eng = HREngine(n_nodes=6, **kw)
     eng.create_column_family(
         _CF, kc, vc, replication_factor=3, layouts=LAYOUTS, schema=schema,
-        partitions=partitions, device_resident=device_resident,
+        partitions=partitions, device_resident=device_resident, views=views,
     )
     return eng, schema
 
@@ -159,6 +164,9 @@ class TestCounterCoverage:
             assert counter in ENGINE_COUNTERS
         for counter in REPAIR_COUNTERS:
             assert counter in cat
+            assert counter in ENGINE_COUNTERS
+        for counter in VIEW_COUNTERS:
+            assert counter in cat, f"VIEW_COUNTERS[{counter!r}] not registered"
             assert counter in ENGINE_COUNTERS
         # the stats view exposes every engine counter
         stats = eng.stats
@@ -438,3 +446,51 @@ class TestChaosTraceDeterminism:
         b = self._run()
         assert a, "traced chaos run exported no span trees"
         assert a == b, "same seeded schedule must export identical traces"
+
+
+# -- materialized views: span stages + counters ------------------------------
+
+
+class TestViewObservability:
+    def test_view_serve_span_and_counters(self):
+        eng, _ = _engine(512, device_resident=True, views=True)
+        tracer = Tracer(clock=TickClock())
+        root = tracer.root("test.root")
+        # no filters → view-eligible on every layout
+        q = Query({}, agg="sum", value_col="metric")
+        eng.read_many(_CF, [q], trace=root)
+        root.end()
+        _assert_tree_integrity(tracer)
+        sv = root.find("view.serve")
+        assert sv is not None and sv.t_end is not None
+        assert sv.attrs["queries"] == 1
+        assert "boundary_rows" in sv.attrs
+        assert eng.stats["view_hits"] == 1
+        assert eng.stats["view_boundary_rows"] == sv.attrs["boundary_rows"]
+
+    def test_view_build_span_on_flush(self):
+        eng, _ = _engine(512, device_resident=True, views=True)
+        tracer = Tracer(clock=TickClock())
+        root = tracer.root("test.root")
+        kc = {c: np.arange(6, dtype=np.int64) for c in ("k0", "k1", "k2")}
+        vc = {"metric": np.ones(6)}
+        eng.write(_CF, kc, vc, trace=root)
+        root.end()
+        _assert_tree_integrity(tracer)
+        builds = root.find_all("view.build")
+        assert builds, "write-through flush must record view.build spans"
+        for s in builds:
+            assert s.attrs.get("incremental") is True
+            assert s.attrs["rows"] == 6
+        # incremental extensions are NOT rebuilds
+        assert eng.stats["view_rebuilds"] == 0
+
+    def test_non_view_engine_emits_no_view_stages(self):
+        eng, _ = _engine(512, device_resident=True)
+        tracer = Tracer(clock=TickClock())
+        root = tracer.root("test.root")
+        eng.read_many(_CF, [Query({}, agg="sum", value_col="metric")],
+                      trace=root)
+        root.end()
+        assert root.find("view.serve") is None
+        assert eng.stats["view_hits"] == 0

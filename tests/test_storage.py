@@ -808,7 +808,8 @@ class TestFlushAtomicity:
         assert eng.stats["staged_rows"] == 180
         boom = RuntimeError("disk full")
         monkeypatch.setattr(
-            SortedTable, "merge_run", lambda self, run: (_ for _ in ()).throw(boom)
+            SortedTable, "merge_run",
+            lambda self, run, **kw: (_ for _ in ()).throw(boom),
         )
         with pytest.raises(RuntimeError, match="disk full"):
             eng.flush_memtables("cf")

@@ -1,0 +1,596 @@
+"""Materialized per-slab aggregate views (``repro.core.storage.views``).
+
+The acceptance bar is *bit-identity*: a view-routed sum/count must
+return the exact float the fused full-scan launch returns — same
+float32 partials, same sequential block-order fold — across fresh
+builds, incremental flush extensions, compactions, migrations and
+scrub heals. Everything else (eligibility walk, cost capping, counters,
+the all-select fast path) hangs off that invariant.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import Eq, HREngine, KeySchema, Query, Range, SortedTable
+from repro.core.storage.memtable import sort_run
+from repro.core.storage.views import (
+    VIEW_ROWS_CAP,
+    build_views_state,
+    query_view_eligible,
+    serve_view_many,
+    verify_views,
+    view_eligible_matrix,
+)
+from repro.core.tpch import generate_simulation
+from repro.core.workload import Workload
+from repro.kernels import (
+    DEVICE_BLOCK_N,
+    block_sums,
+    block_sums_ref,
+    boundary_block_sums,
+)
+
+LAYOUTS = [("k0", "k1", "k2"), ("k1", "k2", "k0"), ("k2", "k0", "k1")]
+
+
+def random_queries(rng, n, *, domains, aggs=("sum", "count"), value_col="metric"):
+    qs = []
+    cols = list(domains)
+    for _ in range(n):
+        f = {}
+        for c in cols:
+            d = domains[c]
+            r = rng.random()
+            if r < 0.35:
+                f[c] = Eq(int(rng.integers(0, d)))
+            elif r < 0.65:
+                lo = int(rng.integers(0, d - 1))
+                f[c] = Range(lo, int(rng.integers(lo + 1, d + 1)))
+        qs.append(
+            Query(
+                agg=str(rng.choice(list(aggs))), filters=f, value_col=value_col
+            )
+        )
+    return qs
+
+
+# -- kernel vs oracle -----------------------------------------------------
+
+
+@pytest.mark.kernel
+class TestBlockSumsKernel:
+    @pytest.mark.parametrize("shape", [(1, 100), (3, 8192), (4, 40_000)])
+    def test_matches_ref(self, rng, shape):
+        vals = rng.standard_normal(shape).astype(np.float32)
+        got = np.asarray(block_sums(vals, block_n=DEVICE_BLOCK_N))
+        want = np.asarray(block_sums_ref(vals, block_n=DEVICE_BLOCK_N))
+        assert got.shape == want.shape
+        np.testing.assert_array_equal(got, want)
+
+    def test_boundary_matches_interior_on_full_window(self, rng):
+        # a boundary rescan whose window covers the whole block must
+        # reproduce the stored partial bit-for-bit — the property the
+        # serve fold's interior/boundary split relies on
+        n = 3 * DEVICE_BLOCK_N
+        vals = rng.standard_normal((2, n)).astype(np.float32)
+        full = np.asarray(block_sums_ref(vals, block_n=DEVICE_BLOCK_N))
+        got = np.asarray(
+            boundary_block_sums(
+                vals,
+                [1, 0, 1],
+                [0, 1, 2],
+                np.array([[0, n]] * 3, np.int64)[:, :1],
+                np.array([[n]] * 3, np.int64)[:, :1] * 0 + n,
+                block_n=DEVICE_BLOCK_N,
+            )
+        )
+        want = np.array([full[1, 0], full[0, 1], full[1, 2]], np.float32)
+        np.testing.assert_array_equal(got, want)
+
+
+# -- eligibility walk ------------------------------------------------------
+
+
+class TestEligibility:
+    LAYOUT = ("a", "b", "c")
+
+    def cases(self):
+        return [
+            (Query(agg="sum", filters={"a": Eq(1)}, value_col="v"), True),
+            (Query(agg="count", filters={}), True),
+            (Query(agg="sum", filters={"a": Eq(1), "b": Range(0, 5)},
+                   value_col="v"), True),
+            (Query(agg="sum", filters={"a": Range(0, 5)}, value_col="v"),
+             True),
+            # filter after the prefix opens → residual scan required
+            (Query(agg="sum", filters={"b": Eq(1)}, value_col="v"), False),
+            (Query(agg="sum", filters={"a": Range(0, 5), "b": Eq(1)},
+                   value_col="v"), False),
+            (Query(agg="sum", filters={"a": Eq(1), "c": Eq(2)},
+                   value_col="v"), False),
+            # selects never route through views
+            (Query(agg="select", filters={"a": Eq(1)}), False),
+        ]
+
+    def test_walk(self):
+        for q, want in self.cases():
+            assert query_view_eligible(q, self.LAYOUT) is want, q
+
+    def test_matrix_matches_scalar(self):
+        qs = [q for q, _ in self.cases()]
+        layouts = [self.LAYOUT, ("c", "b", "a")]
+        m = view_eligible_matrix(layouts, qs)
+        for k, lay in enumerate(layouts):
+            for j, q in enumerate(qs):
+                assert m[k, j] == query_view_eligible(q, lay)
+
+
+# -- table-level bit-identity ---------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def table_pair():
+    """(views table, fused twin) over the same 40k-row dataset."""
+    kc, vc, schema = generate_simulation(40_000, 3, seed=2)
+    tv = SortedTable.from_columns(kc, vc, LAYOUTS[0], schema)
+    tv.place_on_device()
+    tv.build_views()
+    tf = SortedTable.from_columns(kc, vc, LAYOUTS[0], schema)
+    tf.place_on_device()
+    return tv, tf, schema
+
+
+class TestTableBitIdentity:
+    def queries(self, seed=5, n=40):
+        rng = np.random.default_rng(seed)
+        return random_queries(rng, n, domains={"k0": 64, "k1": 64, "k2": 64})
+
+    def test_fresh_build(self, table_pair):
+        tv, tf, _ = table_pair
+        qs = self.queries()
+        rv = tv.execute_many(qs)
+        rf = tf.execute_many(qs)
+        for q, a, b in zip(qs, rv, rf):
+            assert a.value == b.value, q
+            assert a.rows_matched == b.rows_matched
+            assert a.rows_scanned == b.rows_scanned
+
+    def test_view_actually_serves(self, table_pair):
+        tv, _, _ = table_pair
+        elig = [
+            q for q in self.queries() if query_view_eligible(q, tv.layout)
+        ]
+        assert elig, "query generator must produce eligible queries"
+        stats = {}
+        tv.execute_many(elig, view_stats=stats)
+        assert stats["hits"] == len(elig)
+
+    def test_drip_and_compaction_stay_identical(self, table_pair):
+        tv, tf, schema = table_pair
+        tv, tf = copy.deepcopy(tv), copy.deepcopy(tf)
+        rng = np.random.default_rng(9)
+        qs = self.queries(seed=11)
+        for step in range(3):
+            m = int(rng.integers(500, 4000))
+            kw = {c: rng.integers(0, 64, m).astype(np.int64)
+                  for c in ("k0", "k1", "k2")}
+            vw = {"metric": rng.standard_normal(m)}
+            run = sort_run(kw, vw, tv.layout, schema)
+            tv = tv.merge_run(run)
+            tf = tf.merge_run(run)
+            assert verify_views(tv), f"step {step}: stale view after merge"
+            for a, b in zip(tv.execute_many(qs), tf.execute_many(qs)):
+                assert a.value == b.value and a.rows_matched == b.rows_matched
+        tv = tv.compact_runs()
+        tf = tf.compact_runs()
+        assert verify_views(tv), "stale view after compaction"
+        for a, b in zip(tv.execute_many(qs), tf.execute_many(qs)):
+            assert a.value == b.value and a.rows_matched == b.rows_matched
+
+    def test_serve_matches_execute_per_query(self, table_pair):
+        tv, _, _ = table_pair
+        elig = [
+            q for q in self.queries(seed=13)
+            if query_view_eligible(q, tv.layout)
+        ]
+        batch = serve_view_many(tv, elig)
+        for q, r in zip(elig, batch):
+            s = tv.execute(q)
+            assert r.value == s.value and r.rows_matched == s.rows_matched
+
+    def test_verify_detects_corruption(self, table_pair):
+        tv, _, _ = table_pair
+        tv = copy.deepcopy(tv)
+        assert verify_views(tv)
+        tv._device["views"]["block_sums"][0, 0] += 1.0
+        assert not verify_views(tv)
+        tv.build_views()
+        assert verify_views(tv)
+
+    def test_build_views_requires_device(self):
+        kc, vc, schema = generate_simulation(1000, 2, seed=0)
+        t = SortedTable.from_columns(kc, vc, ("k0", "k1"), schema)
+        with pytest.raises(ValueError):
+            t.build_views()
+
+
+# -- engine parity: views on vs off ---------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    kc, vc, schema = generate_simulation(50_000, 3, seed=4)
+
+    def build(views):
+        e = HREngine(n_nodes=5, result_cache=False)
+        e.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS,
+            schema=schema, device_resident=True, views=views,
+            memtable_rows=0,
+        )
+        return e
+
+    return build(True), build(False)
+
+
+def assert_parity(ev, ef, queries, *, tag=""):
+    rv = ev.read_many("cf", queries)
+    rf = ef.read_many("cf", queries)
+    for q, (a, _), (b, _) in zip(queries, rv, rf):
+        assert a.value == b.value, f"{tag}: {q}"
+        assert a.rows_matched == b.rows_matched, f"{tag}: {q}"
+        if a.selected is not None or b.selected is not None:
+            np.testing.assert_array_equal(a.selected, b.selected)
+
+
+class TestEngineParity:
+    def queries(self, seed=21, n=40, aggs=("sum", "count", "select")):
+        rng = np.random.default_rng(seed)
+        return random_queries(
+            rng, n, domains={"k0": 64, "k1": 64, "k2": 64}, aggs=aggs
+        )
+
+    def test_read_many_parity_and_hits(self, engine_pair):
+        ev, ef = engine_pair
+        ev.reset_stats()
+        assert_parity(ev, ef, self.queries(), tag="fresh")
+        assert ev.stats["view_hits"] > 0
+        assert ef.stats["view_hits"] == 0
+
+    def test_scalar_read_parity(self, engine_pair):
+        ev, ef = engine_pair
+        for q in self.queries(seed=23, n=12):
+            a, _ = ev.read("cf", q)
+            b, _ = ef.read("cf", q)
+            assert a.value == b.value and a.rows_matched == b.rows_matched
+
+    def test_view_routing_caps_estimated_cost(self, engine_pair):
+        ev, ef = engine_pair
+        # an unfiltered sum is view-eligible on every layout: the view
+        # engine's planner must see the capped (cheap) estimate
+        q = Query(agg="sum", filters={}, value_col="metric")
+        _, rep_v = ev.read("cf", q)
+        _, rep_f = ef.read("cf", q)
+        assert rep_v.estimated_cost < rep_f.estimated_cost
+        fn = ev.column_families["cf"].cost_model.cost_fn(3)
+        assert rep_v.estimated_cost == fn(
+            min(rep_v.estimated_rows, float(VIEW_ROWS_CAP))
+        )
+
+    def test_write_flush_compaction_parity(self, engine_pair):
+        ev, ef = copy.deepcopy(engine_pair[0]), copy.deepcopy(engine_pair[1])
+        rng = np.random.default_rng(31)
+        qs = self.queries(seed=33)
+        for _ in range(2):
+            m = int(rng.integers(2000, 6000))
+            kw = {c: rng.integers(0, 64, m).astype(np.int64)
+                  for c in ("k0", "k1", "k2")}
+            vw = {"metric": rng.standard_normal(m)}
+            ev.write("cf", kw, vw)
+            ef.write("cf", kw, vw)
+            assert_parity(ev, ef, qs, tag="post-write")
+        for node in ev.nodes:
+            for t in node.tables.values():
+                assert t.has_views and verify_views(t)
+
+    def test_stats_expose_view_counters(self, engine_pair):
+        ev, _ = engine_pair
+        for key in ("view_hits", "view_boundary_rows", "view_rebuilds"):
+            assert key in ev.stats
+            assert key in ev.metrics.catalog()
+
+    def test_views_require_device_resident(self):
+        kc, vc, schema = generate_simulation(1000, 2, seed=0)
+        e = HREngine(n_nodes=2)
+        with pytest.raises(ValueError, match="device_resident"):
+            e.create_column_family(
+                "cf", kc, vc, replication_factor=1,
+                layouts=[("k0", "k1")], schema=schema, views=True,
+            )
+
+
+class TestSelectOnlyFastPath:
+    def test_all_select_batch_skips_eligibility_arrays(self, engine_pair,
+                                                       monkeypatch):
+        """Regression: a batch of pure selects used to walk the
+        aggregate planning arrays; now it must never touch them."""
+        ev, _ = engine_pair
+        import repro.core.engine as engine_mod
+
+        def boom(*a, **k):  # pragma: no cover - failure path
+            raise AssertionError(
+                "select-only batch walked the view planning arrays"
+            )
+
+        monkeypatch.setattr(engine_mod, "view_eligible_matrix", boom)
+        qs = [
+            Query(agg="select", filters={"k0": Eq(i % 16)})
+            for i in range(8)
+        ]
+        res = ev.read_many("cf", qs)
+        assert len(res) == 8
+        for (r, _), q in zip(res, qs):
+            assert r.selected is not None
+
+    def test_mixed_batch_still_routes_views(self, engine_pair):
+        ev, ef = engine_pair
+        ev.reset_stats()
+        qs = [
+            Query(agg="select", filters={"k0": Eq(3)}),
+            Query(agg="sum", filters={"k0": Range(0, 32)},
+                  value_col="metric"),
+        ]
+        assert_parity(ev, ef, qs, tag="mixed")
+        assert ev.stats["view_hits"] >= 1
+
+
+# -- scrub heals derived view state (satellite 2) --------------------------
+
+
+class TestScrubHealsViews:
+    def test_corrupted_partial_detected_and_rebuilt(self, engine_pair):
+        ev = copy.deepcopy(engine_pair[0])
+        ev.reset_stats()
+        cf = ev.column_families["cf"]
+        r0 = cf.replicas[0]
+        t0 = ev.nodes[r0.node_id].tables[("cf", r0.replica_id)]
+        t0._device["views"]["block_sums"][0, 0] += 0.5
+        assert not verify_views(t0)
+        res = ev.scrub_column_family("cf")
+        assert res["repaired"] == 1
+        assert res["corrupt"] == [r0.replica_id]
+        assert verify_views(t0)
+        assert ev.stats["scrub_repairs"] == 1
+        assert ev.stats["view_rebuilds"] == 1
+
+    def test_missing_views_also_healed(self, engine_pair):
+        ev = copy.deepcopy(engine_pair[0])
+        ev.reset_stats()
+        cf = ev.column_families["cf"]
+        r0 = cf.replicas[0]
+        t0 = ev.nodes[r0.node_id].tables[("cf", r0.replica_id)]
+        del t0._device["views"]
+        res = ev.scrub_column_family("cf")
+        assert res["repaired"] == 1
+        assert t0.has_views and verify_views(t0)
+
+    def test_report_only_mode_leaves_corruption(self, engine_pair):
+        ev = copy.deepcopy(engine_pair[0])
+        cf = ev.column_families["cf"]
+        r0 = cf.replicas[0]
+        t0 = ev.nodes[r0.node_id].tables[("cf", r0.replica_id)]
+        t0._device["views"]["block_sums"][0, 0] += 0.5
+        res = ev.scrub_column_family("cf", repair=False)
+        assert res["corrupt"] == [r0.replica_id] and res["repaired"] == 0
+        assert not verify_views(t0)
+
+
+# -- migration keeps views consistent --------------------------------------
+
+
+class TestMigrationViews:
+    def build(self, views, partitions=4):
+        kc, vc, schema = generate_simulation(40_000, 3, seed=6)
+        e = HREngine(n_nodes=5, result_cache=False)
+        e.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS,
+            schema=schema, device_resident=True, views=views,
+            memtable_rows=0, partitions=partitions,
+        )
+        return e
+
+    def queries(self):
+        rng = np.random.default_rng(41)
+        return random_queries(
+            rng, 30, domains={"k0": 64, "k1": 64, "k2": 64},
+            aggs=("sum", "count", "select"),
+        )
+
+    def all_views_valid(self, e):
+        for part in e.column_families["cf"].partitions:
+            for r in part.replicas:
+                t = e.nodes[r.node_id].tables.get(("cf", r.replica_id))
+                if t is not None:
+                    assert t.has_views and verify_views(t)
+
+    def test_split_merge_rebalance_parity(self):
+        ev, ef = self.build(True), self.build(False)
+        qs = self.queries()
+        assert_parity(ev, ef, qs, tag="P=4")
+        for e in (ev, ef):
+            e.split_partition("cf", 0)
+        assert_parity(ev, ef, qs, tag="post-split")
+        for e in (ev, ef):
+            e.merge_partitions("cf", 1)
+        assert_parity(ev, ef, qs, tag="post-merge")
+        rng = np.random.default_rng(43)
+        m = 4000
+        kw = {c: rng.integers(0, 64, m).astype(np.int64)
+              for c in ("k0", "k1", "k2")}
+        vw = {"metric": rng.standard_normal(m)}
+        ev.write("cf", kw, vw)
+        ef.write("cf", kw, vw)
+        for e in (ev, ef):
+            e.rebalance("cf")
+        assert_parity(ev, ef, qs, tag="post-rebalance")
+        self.all_views_valid(ev)
+        assert ev.stats["view_rebuilds"] > 0
+
+    def test_untouched_vnodes_keep_their_views(self):
+        ev = self.build(True)
+        cf = ev.column_families["cf"]
+        # snapshot the partials of a partition the split won't touch
+        keep = cf.partitions[-1]
+        before = {
+            r.replica_id: ev.nodes[r.node_id]
+            .tables[("cf", r.replica_id)]
+            ._device["views"]["block_sums"]
+            .copy()
+            for r in keep.replicas
+        }
+        ev.split_partition("cf", 0)
+        keep2 = ev.column_families["cf"].partitions[-1]
+        assert keep2.vnode_id == keep.vnode_id
+        for r in keep2.replicas:
+            t = ev.nodes[r.node_id].tables[("cf", r.replica_id)]
+            np.testing.assert_array_equal(
+                t._device["views"]["block_sums"], before[r.replica_id]
+            )
+
+
+# -- recovery / node_up ----------------------------------------------------
+
+
+class TestRecoveryViews:
+    def test_recovered_replicas_regain_views(self, engine_pair):
+        ev = copy.deepcopy(engine_pair[0])
+        ev.reset_stats()
+        victim_node = ev.column_families["cf"].replicas[0].node_id
+        ev.fail_node(victim_node, transient=False)
+        ev.recover_node(victim_node)
+        for r in ev.column_families["cf"].replicas:
+            t = ev.nodes[r.node_id].tables[("cf", r.replica_id)]
+            assert t.has_views and verify_views(t)
+        assert ev.stats["view_rebuilds"] > 0
+
+    def test_hinted_node_up_extends_views(self, engine_pair):
+        ev = copy.deepcopy(engine_pair[0])
+        rng = np.random.default_rng(51)
+        victim_node = ev.column_families["cf"].replicas[0].node_id
+        ev.fail_node(victim_node, transient=True)
+        m = 1500
+        kw = {c: rng.integers(0, 64, m).astype(np.int64)
+              for c in ("k0", "k1", "k2")}
+        vw = {"metric": rng.standard_normal(m)}
+        ev.write("cf", kw, vw)
+        ev.node_up(victim_node)
+        for r in ev.column_families["cf"].replicas:
+            t = ev.nodes[r.node_id].tables[("cf", r.replica_id)]
+            assert t.has_views and verify_views(t)
+
+
+# -- interleaving property: P=1 oracle stays bit-identical -----------------
+
+
+def _interleaving_state(seed, ops):
+    """Apply an op sequence to a (views engine, fused engine) pair and
+    assert bit-identical eligible reads after every step."""
+    kc, vc, schema = generate_simulation(20_000, 3, seed=seed)
+
+    def build(views):
+        e = HREngine(n_nodes=5, result_cache=False)
+        e.create_column_family(
+            "cf", kc, vc, replication_factor=3, layouts=LAYOUTS,
+            schema=schema, device_resident=True, views=views,
+            memtable_rows=400, partitions=2,
+        )
+        return e
+
+    ev, ef = build(True), build(False)
+    rng = np.random.default_rng(seed + 17)
+    dom = {c: schema.max_value(c) + 1 for c in ("k0", "k1", "k2")}
+    qs = random_queries(rng, 12, domains=dom, aggs=("sum", "count"))
+    for step, op in enumerate(ops):
+        if op == "write":
+            m = int(rng.integers(100, 900))
+            kw = {c: rng.integers(0, dom[c], m).astype(np.int64)
+                  for c in ("k0", "k1", "k2")}
+            vw = {"metric": rng.standard_normal(m)}
+            ev.write("cf", kw, vw)
+            ef.write("cf", kw, vw)
+        elif op == "flush":
+            ev.flush_memtables("cf")
+            ef.flush_memtables("cf")
+        elif op == "split":
+            pid = int(rng.integers(ev.column_families["cf"].ring.n_partitions))
+            ev.split_partition("cf", pid)
+            ef.split_partition("cf", pid)
+        elif op == "merge":
+            n_p = ev.column_families["cf"].ring.n_partitions
+            if n_p > 1:
+                pid = int(rng.integers(n_p - 1))
+                ev.merge_partitions("cf", pid)
+                ef.merge_partitions("cf", pid)
+        elif op == "rebalance":
+            ev.rebalance("cf")
+            ef.rebalance("cf")
+        assert_parity(ev, ef, qs, tag=f"step {step} ({op})")
+    for part in ev.column_families["cf"].partitions:
+        for r in part.replicas:
+            t = ev.nodes[r.node_id].tables.get(("cf", r.replica_id))
+            if t is not None and t.has_views:
+                assert verify_views(t), "derived state diverged"
+
+
+OPS = ("write", "flush", "split", "merge", "rebalance", "read")
+
+
+class TestInterleavingDeterministic:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_random_interleavings(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        ops = [str(rng.choice(OPS)) for _ in range(8)]
+        _interleaving_state(seed, ops)
+
+    def test_adversarial_sequence(self):
+        _interleaving_state(
+            7,
+            ["write", "write", "flush", "split", "write", "rebalance",
+             "merge", "flush"],
+        )
+
+
+class TestInterleavingHypothesis:
+    """The same property, search-driven (skipped when hypothesis is not
+    installed — the deterministic twin above runs everywhere)."""
+
+    def test_any_interleaving_matches_oracle(self):
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+
+        @hyp.settings(max_examples=10, deadline=None)
+        @hyp.given(
+            seed=st.integers(min_value=0, max_value=3),
+            ops=st.lists(st.sampled_from(OPS), min_size=1, max_size=6),
+        )
+        def prop(seed, ops):
+            _interleaving_state(seed, ops)
+
+        prop()
+
+
+# -- chaos schedules with views on -----------------------------------------
+
+
+@pytest.mark.chaos
+class TestViewsChaos:
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_chaos_converges_with_views(self, seed):
+        from repro.ft.chaos import ChaosHarness
+
+        report = ChaosHarness(seed, n_steps=14, n_rows=2_000,
+                              views=True).run()
+        assert report.ok, report.failures
+        assert report.stats["view_hits"] > 0
